@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: result caching, tables, timing."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS_DIR", "results")
+
+
+def results_path(*parts: str) -> str:
+    path = os.path.join(RESULTS_DIR, *parts)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    return path
+
+
+def cached(path: str, fn: Callable[[], Dict], force: bool = False) -> Dict:
+    """Run ``fn`` once; memoize its JSON-serializable result at ``path``."""
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    out = fn()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path + ".tmp", "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    os.replace(path + ".tmp", path)
+    return out
+
+
+def markdown_table(headers: Sequence[str], rows: Sequence[Sequence[Any]]) -> str:
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+    lines = ["| " + " | ".join(headers) + " |",
+             "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(fmt(v) for v in r) + " |")
+    return "\n".join(lines)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    import jax
+
+    def call():
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(warmup):
+        call()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        call()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return 1e6 * times[len(times) // 2]

@@ -1,0 +1,69 @@
+"""Paper Figure 3: convergence analysis at 90% payload reduction.
+
+Reads the F1 trajectories of FCF (full) and FCF-BTS from the experiment
+grid and reports (i) the iteration at which each reaches 95% of its own
+final plateau and (ii) the BTS/full slowdown ratio — the paper's claim is
+~2x (400-450 vs 200-250 iterations) with eventual near-parity on sparse
+datasets.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import markdown_table
+from benchmarks.fcf_experiments import (
+    FULL, QUICK, GridScale, ensure_cells,
+)
+
+KEEP = 0.10
+
+
+def _mean_trajectory(cells: List[Dict], metric: str = "f1"):
+    t = np.asarray(cells[0]["trajectory"]["t"])
+    vals = np.mean([c["trajectory"][metric] for c in cells], axis=0)
+    # paper Sec 6.2: trailing-10 smoothing at read-out
+    smooth = np.convolve(vals, np.ones(min(10, len(vals))) /
+                         min(10, len(vals)), mode="valid")
+    return t[len(t) - len(smooth):], smooth
+
+
+def _iters_to_plateau(t, vals, frac: float = 0.95) -> int:
+    target = frac * vals[-1]
+    idx = np.argmax(vals >= target)
+    return int(t[idx])
+
+
+def run(scale: GridScale = QUICK) -> Dict:
+    out: Dict = {"scale": scale.name, "datasets": {}}
+    rows = []
+    for ds in scale.datasets:
+        t_f, v_f = _mean_trajectory(ensure_cells(scale, ds, "full", 1.0))
+        t_b, v_b = _mean_trajectory(ensure_cells(scale, ds, "bts", KEEP))
+        it_f = _iters_to_plateau(t_f, v_f)
+        it_b = _iters_to_plateau(t_b, v_b)
+        ratio = it_b / max(it_f, 1)
+        gap = 100.0 * (1.0 - v_b[-1] / max(v_f[-1], 1e-9))
+        rows.append((ds, it_f, it_b, f"{ratio:.2f}x", f"{gap:.1f}%"))
+        out["datasets"][ds] = {
+            "iters_full": it_f, "iters_bts": it_b, "slowdown": ratio,
+            "final_gap_pct": gap,
+            "trajectory_full": {"t": t_f.tolist(), "f1": v_f.tolist()},
+            "trajectory_bts": {"t": t_b.tolist(), "f1": v_b.tolist()},
+        }
+    print("\n## Figure 3 analogue — convergence at 90% payload reduction\n")
+    print(markdown_table(
+        ("dataset", "FCF iters to 95% plateau", "BTS iters", "slowdown",
+         "final F1 gap"), rows))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=("quick", "mid", "full"))
+    args = ap.parse_args()
+    from benchmarks.fcf_experiments import MID
+    run({"quick": QUICK, "mid": MID, "full": FULL}[args.scale])

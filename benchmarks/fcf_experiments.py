@@ -1,0 +1,119 @@
+"""The FCF-BTS experiment grid (Sec. 6 of the paper), cached per cell.
+
+A *cell* is one (dataset, strategy, keep_fraction, rebuild-seed) simulation.
+``reduction_sweep`` / ``table4`` / ``convergence`` are views over the grid;
+missing cells run on demand and persist under results/fcf/.
+
+Two scales:
+  quick — mini datasets (same generator, smaller N/M), fewer rounds; the
+          scale ``python -m benchmarks.run`` exercises end-to-end.
+  full  — paper-sized synthetic datasets (Table 2 stats) and 1000 rounds;
+          produces the EXPERIMENTS.md headline numbers (hours of CPU).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cf.toplist import evaluate_toplist
+from repro.data.synthetic import load_dataset
+from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+from benchmarks.common import cached, results_path
+
+
+@dataclass(frozen=True)
+class GridScale:
+    name: str
+    datasets: Tuple[str, ...]
+    rounds: int
+    theta: int
+    eval_every: int
+    eval_users: int
+    rebuilds: int = 3
+
+
+QUICK = GridScale("quick", ("movielens-mini", "lastfm-mini", "mind-mini"),
+                  rounds=200, theta=50, eval_every=25, eval_users=256,
+                  rebuilds=2)
+FULL = GridScale("full", ("movielens", "lastfm", "mind"),
+                 rounds=1000, theta=100, eval_every=25, eval_users=512,
+                 rebuilds=3)
+# paper-sized datasets at CPU-tractable rounds: the EXPERIMENTS.md headline
+MID = GridScale("mid", ("movielens", "lastfm", "mind"),
+                rounds=500, theta=100, eval_every=50, eval_users=256,
+                rebuilds=2)
+# paper Sec 6.1: theta is dataset-dependent at full scale
+FULL_THETA = {"movielens": 100, "lastfm": 100, "mind": 500}
+
+METRICS = ("precision", "recall", "f1", "map")
+
+
+def cell_key(scale: GridScale, dataset: str, strategy: str,
+             keep: float, seed: int) -> str:
+    return (f"{scale.name}__{dataset}__{strategy}"
+            f"__k{int(round(100 * keep)):03d}__s{seed}")
+
+
+def run_cell(scale: GridScale, dataset: str, strategy: str, keep: float,
+             seed: int, force: bool = False) -> Dict:
+    """One simulation cell -> {final metrics, trajectory, bytes, seconds}."""
+    def compute():
+        _, train, test = load_dataset(dataset, seed=seed)
+        theta = FULL_THETA.get(dataset, scale.theta)
+        cfg = FLSimConfig(
+            strategy=strategy, keep_fraction=keep, rounds=scale.rounds,
+            theta=theta, eval_every=scale.eval_every,
+            eval_users=scale.eval_users, seed=seed)
+        t0 = time.time()
+        res = run_fcf_simulation(train, test, cfg)
+        return {
+            "dataset": dataset, "strategy": strategy, "keep": keep,
+            "seed": seed, "rounds": scale.rounds,
+            "final": res.final,
+            "trajectory": {
+                "t": [r["step"] for r in res.history.rows],
+                **{m: res.history.series(m) for m in METRICS}},
+            "bytes_down": res.bytes_down, "bytes_up": res.bytes_up,
+            "seconds": time.time() - t0,
+        }
+
+    path = results_path("fcf", cell_key(scale, dataset, strategy, keep, seed)
+                        + ".json")
+    return cached(path, compute, force=force)
+
+
+def toplist_baseline(scale: GridScale, dataset: str, seed: int) -> Dict:
+    """TopList metrics, normalized by the theoretical best (Sec. 6.2)."""
+    def compute():
+        _, train, test = load_dataset(dataset, seed=seed)
+        train_j, test_j = jnp.asarray(train), jnp.asarray(test)
+        counts = train_j.sum(axis=0)
+        # evaluate_toplist -> ranked_metrics, already normalized by the
+        # per-user theoretical best (Sec. 6.2)
+        m = evaluate_toplist(counts, train_j, test_j)
+        final = m.as_dict()
+        return {"dataset": dataset, "strategy": "toplist", "seed": seed,
+                "final": final}
+
+    path = results_path("fcf", f"{scale.name}__{dataset}__toplist__s{seed}.json")
+    return cached(path, compute)
+
+
+def grid_mean(cells: Sequence[Dict]) -> Dict[str, Tuple[float, float]]:
+    """mean +/- std of final metrics across rebuild seeds."""
+    out = {}
+    for m in METRICS:
+        vals = [c["final"][m] for c in cells]
+        out[m] = (float(np.mean(vals)), float(np.std(vals)))
+    return out
+
+
+def ensure_cells(scale: GridScale, dataset: str, strategy: str,
+                 keep: float) -> List[Dict]:
+    return [run_cell(scale, dataset, strategy, keep, seed)
+            for seed in range(scale.rebuilds)]

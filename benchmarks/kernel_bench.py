@@ -1,0 +1,83 @@
+"""Kernel + server-side-overhead microbenchmarks.
+
+Times the production CPU paths (the Pallas kernels' jnp oracles; interpret
+mode is a correctness harness, not a timing one) and the bandit server ops
+at production arm counts — the paper's claim (iv): payload optimization
+adds no client cost and negligible server cost.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandit import bts_init, bts_select, bts_update
+from repro.kernels import ops
+
+from benchmarks.common import time_fn
+
+
+def run() -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    rows: List[Dict] = []
+
+    def add(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    # FCF fused item-gradient: cohort Theta=100 users, paper-scale items
+    for m in (3064, 17632):
+        n, k = 100, 25
+        q = jax.random.normal(key, (m, k), jnp.float32)
+        p = jax.random.normal(key, (n, k), jnp.float32)
+        x = (jax.random.uniform(key, (n, m)) < 0.01).astype(jnp.float32)
+        f = jax.jit(lambda q, p, x: ops.fcf_item_gradients(q, p, x))
+        us = time_fn(f, q, p, x)
+        flops = 2 * 2 * n * m * k      # residual matmul + grad matmul
+        add(f"fcf_grad_m{m}", us, f"{flops / us / 1e3:.1f}GFLOP/s")
+
+    # payload gather/scatter at LLM vocab scale
+    table = jax.random.normal(key, (151_936, 256), jnp.float32)
+    idx = jax.random.randint(key, (15_000,), 0, table.shape[0], jnp.int32)
+    g = jax.jit(ops.gather_rows)
+    us = time_fn(g, table, idx)
+    add("gather_rows_150k_to_15k", us,
+        f"{idx.shape[0] * table.shape[1] * 4 / us / 1e3:.1f}GB/s")
+    rowsv = jax.random.normal(key, (15_000, 256), jnp.float32)
+    s = jax.jit(ops.scatter_add_rows)
+    us = time_fn(s, table, idx, rowsv)
+    add("scatter_add_rows_15k", us)
+
+    # flash attention oracle at a serving shape
+    q = jax.random.normal(key, (1, 8, 1024, 128), jnp.float32)
+    k_ = jax.random.normal(key, (1, 2, 1024, 128), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 1024, 128), jnp.float32)
+    a = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True))
+    us = time_fn(a, q, k_, v)
+    add("attention_gqa_1k", us,
+        f"{4 * 1024 * 1024 * 8 * 128 / us / 1e3:.1f}GFLOP/s")
+
+    # bandit server overhead at production arm counts (paper claim iv)
+    for arms in (100_000, 1_000_000):
+        state = bts_init(arms, 0.0, 10_000.0)
+        sel = jax.jit(lambda s, k: bts_select(s, k, arms // 10))
+        us = time_fn(sel, state, key)
+        add(f"bts_select_{arms // 1000}k_arms", us,
+            f"{arms / us:.0f}arms/us")
+        idxs, _ = bts_select(state, key, arms // 10)
+        rewards = jax.random.normal(key, (arms // 10,), jnp.float32)
+        upd = jax.jit(bts_update)
+        us = time_fn(upd, state, idxs, rewards)
+        add(f"bts_update_{arms // 1000}k_arms", us)
+
+    print("\n## Kernel / server microbenchmarks (CPU production paths)\n")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

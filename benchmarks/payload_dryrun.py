@@ -1,0 +1,107 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""FCF-on-mesh dry-run: the paper's technique measured at the HLO level on
+the paper's own model, at production item counts (Table 1 scale).
+
+Setting: the item-factor matrix Q (M x K) is the ENTIRE model (unlike an
+LLM, where vocab tables are <2% of weights and are model-sharded anyway —
+see the refuted LLM-payload iteration in §Perf). Clients = data-parallel
+shards; each round every client solves its users' p_i against Q* and the
+per-round gradient aggregation is the data-axis all-reduce. Payload
+selection shrinks exactly that collective:
+
+  full:     all-reduce of dQ  (M x K)      — the paper's Table-1 payload
+  selected: all-reduce of dQ* (M_s x K)    — 90% smaller at keep=0.1
+
+Run:  PYTHONPATH=src python -m benchmarks.payload_dryrun --items 1000000
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import batch_axes, make_production_mesh
+
+from benchmarks.common import results_path
+
+
+def full_round(q, x, lr=0.01):
+    """One FCF round: cohort gradients (Eqs. 5-6) -> SGD step on Q."""
+    from repro.cf.local import solve_user_factors
+    p = solve_user_factors(q, x)
+    grads = ops.fcf_item_gradients(q, p, x)          # (M, K) summed over users
+    return q - lr * grads
+
+
+def payload_round(q, x, sel, lr=0.01):
+    """Paper round: only Q*[sel] moves; gradient collective is (M_s, K)."""
+    from repro.cf.local import solve_user_factors
+    q_star = q[sel]                                   # payload download
+    x_star = x[:, sel]
+    p = solve_user_factors(q_star, x_star)
+    grads = ops.fcf_item_gradients(q_star, p, x_star)   # (M_s, K)
+    return q.at[sel].add(-lr * grads)
+
+
+def lower_one(name, fn, args, shardings, mesh):
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shardings)
+        compiled = jitted.lower(*args).compile()
+    coll = collective_bytes(compiled.as_text())
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {"variant": name, "collective_bytes": coll,
+            "flops": float(cost.get("flops", 0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0))}
+
+
+def run(items: int = 1_000_000, factors: int = 25, theta: int = 1024,
+        keep: float = 0.10, multi_pod: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = batch_axes(mesh)
+    m_s = int(keep * items) // 16 * 16
+
+    q = jax.ShapeDtypeStruct((items, factors), jnp.float32)
+    x = jax.ShapeDtypeStruct((theta, items), jnp.float32)
+    sel = jax.ShapeDtypeStruct((m_s,), jnp.int32)
+    ns = lambda s: NamedSharding(mesh, s)
+    # Q replicated (every client holds the payload); users over data
+    recs = [
+        lower_one("fcf_full", full_round, (q, x),
+                  (ns(P()), ns(P(baxes))), mesh),
+        lower_one("fcf_payload_10pct", payload_round, (q, x, sel),
+                  (ns(P()), ns(P(baxes)), ns(P())), mesh),
+    ]
+    out = {"items": items, "factors": factors, "theta": theta, "keep": keep,
+           "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+           "variants": recs}
+    path = results_path("payload_dryrun",
+                        f"fcf_{items}_{out['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+    print(f"\n## FCF payload dry-run — M={items:,} items, K={factors}, "
+          f"Theta={theta}, mesh={out['mesh']}\n")
+    base = recs[0]["collective_bytes"]["total"]
+    for r in recs:
+        t = r["collective_bytes"]["total"]
+        print(f"{r['variant']:<22} collective {t / 1e6:10.1f} MB/device   "
+              f"({100 * t / max(base, 1):5.1f}% of full)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=1_000_000)
+    ap.add_argument("--theta", type=int, default=1024)
+    ap.add_argument("--keep", type=float, default=0.10)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.items, theta=args.theta, keep=args.keep,
+        multi_pod=args.multi_pod)

@@ -1,0 +1,41 @@
+"""Paper Table 1: FCF model payload vs number of items (exact formula).
+
+payload_bytes = (#items x #factors x 64 bits) / 8.  Validates our
+payload accounting helper against the paper's published numbers.
+"""
+from __future__ import annotations
+
+from repro.core.payload import payload_bytes
+
+from benchmarks.common import markdown_table
+
+# (items, paper's approximate payload string)
+PAPER_ROWS = [
+    (3912, "625KB"), (10_000, "1.6 MB"), (100_000, "16 MB"),
+    (500_000, "80 MB"), (1_000_000, "160 MB"), (10_000_000, "1.6 GB"),
+]
+K = 20          # paper Table 1 uses 20 factors
+
+
+def _human(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1000:
+            return f"{n:.3g} {unit}"
+        n /= 1000
+    return f"{n:.3g} TB"
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for items, paper in PAPER_ROWS:
+        b = payload_bytes(items, K, dtype_bits=64)
+        rows.append((items, _human(b), paper))
+        out[str(items)] = b
+    print("\n## Paper Table 1 — payload vs #items (K=20, float64)\n")
+    print(markdown_table(("#items", "ours", "paper"), rows))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Figure 2: recommendation performance vs payload reduction.
+
+For each dataset, sweeps payload-reduction levels and compares FCF-BTS
+against FCF-Random, with FCF (Original) as the upper bound and TopList as
+the static baseline. Prints one markdown block per dataset and returns the
+raw grid for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Sequence
+
+from benchmarks.common import markdown_table
+from benchmarks.fcf_experiments import (
+    FULL, QUICK, GridScale, ensure_cells, grid_mean, toplist_baseline,
+)
+
+# payload reduction % -> keep fraction (paper Sec. 7 grid)
+PAPER_LEVELS = (25, 50, 75, 80, 85, 90, 95, 98)
+QUICK_LEVELS = (50, 75, 90, 95)
+
+
+def run(scale: GridScale = QUICK,
+        levels: Sequence[int] = QUICK_LEVELS) -> Dict:
+    out: Dict = {"scale": scale.name, "levels": list(levels), "datasets": {}}
+    for ds in scale.datasets:
+        full = grid_mean(ensure_cells(scale, ds, "full", 1.0))
+        top = toplist_baseline(scale, ds, seed=0)["final"]
+        rows = []
+        ds_out = {"full": full, "toplist": top, "levels": {}}
+        for lvl in levels:
+            keep = 1.0 - lvl / 100.0
+            bts = grid_mean(ensure_cells(scale, ds, "bts", keep))
+            rnd = grid_mean(ensure_cells(scale, ds, "random", keep))
+            ds_out["levels"][str(lvl)] = {"bts": bts, "random": rnd}
+            rows.append((f"{lvl}%",
+                         f"{bts['f1'][0]:.4f}±{bts['f1'][1]:.3f}",
+                         f"{rnd['f1'][0]:.4f}±{rnd['f1'][1]:.3f}",
+                         f"{100 * (bts['f1'][0] / max(rnd['f1'][0], 1e-9) - 1):+.1f}%"))
+        print(f"\n## Figure 2 analogue — {ds} "
+              f"(FCF full F1 = {full['f1'][0]:.4f}, "
+              f"TopList F1 = {top['f1']:.4f})\n")
+        print(markdown_table(
+            ("payload cut", "FCF-BTS F1", "FCF-Random F1", "BTS vs Random"),
+            rows))
+        out["datasets"][ds] = ds_out
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=("quick", "mid", "full"))
+    args = ap.parse_args()
+    from benchmarks.fcf_experiments import MID
+    scale = {"quick": QUICK, "mid": MID, "full": FULL}[args.scale]
+    run(scale, QUICK_LEVELS if args.scale == "quick" else PAPER_LEVELS)

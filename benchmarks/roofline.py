@@ -1,0 +1,113 @@
+"""Roofline report (deliverable g): reads the dry-run artifacts under
+results/dryrun/ and emits the per-(arch x shape x mesh) three-term table.
+
+  compute term    = corrected HLO FLOPs / (peak 197 TF/s bf16 per chip)
+  memory term     = corrected HLO bytes / (819 GB/s HBM per chip)
+  collective term = corrected collective bytes / (50 GB/s ICI per chip)
+
+"corrected" = while-body trip-count correction (launch/dryrun.py): XLA's
+cost analysis visits scan bodies once; two unrolled shallow probes recover
+the exact per-period cost. MODEL_FLOPS = 6·N(_active)·D for train,
+2·N·D for prefill, 2·N·B for a decode step.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import markdown_table
+
+HBM_PER_CHIP = 16e9      # TPU v5e
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(dryrun_dir: str = "results/dryrun_final", mesh: str = "pod16x16",
+                 tag: str = "") -> List[Dict]:
+    recs = []
+    suffix = f"__{tag}.json" if tag else ".json"
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, mesh, "*.json"))):
+        base = os.path.basename(path)
+        if tag:
+            if not base.endswith(suffix):
+                continue
+        elif base.count("__") != 1:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return recs
+
+
+def _fit(rec: Dict) -> str:
+    ma = rec.get("memory_analysis", {})
+    need = (ma.get("argument_size_in_bytes", 0)
+            + ma.get("temp_size_in_bytes", 0)
+            + ma.get("output_size_in_bytes", 0))
+    return f"{need / 1e9:.1f}GB {'OK' if need <= HBM_PER_CHIP else 'OVER'}"
+
+
+def table(recs: List[Dict]) -> str:
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "—", "—", "—", "SKIP",
+                         "—", "—"))
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append((
+            r["arch"], r["shape"],
+            f"{t['compute_s']:.2e}", f"{t['memory_s']:.2e}",
+            f"{t['collective_s']:.2e}", t["bottleneck"],
+            f"{ratio:.2f}" if ratio else "—", _fit(r)))
+    return markdown_table(
+        ("arch", "shape", "compute_s", "memory_s", "collective_s",
+         "bottleneck", "useful/HLO", "mem/chip"), rows)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r["status"] == "ok"]
+    bn: Dict[str, int] = {}
+    for r in ok:
+        bn[r["roofline"]["bottleneck"]] = bn.get(r["roofline"]["bottleneck"], 0) + 1
+    worst = max(ok, key=lambda r: (r["roofline"]["step_time_s"]
+                                   / max(r["roofline"]["compute_s"], 1e-12)),
+                default=None)
+    most_coll = max(ok, key=lambda r: r["roofline"]["collective_s"],
+                    default=None)
+    return {
+        "n_ok": len(ok), "n_skip": len(recs) - len(ok),
+        "bottlenecks": bn,
+        "worst_roofline_fraction": (worst["arch"], worst["shape"])
+        if worst else None,
+        "most_collective_bound": (most_coll["arch"], most_coll["shape"])
+        if most_coll else None,
+    }
+
+
+def run(dryrun_dir: str = "results/dryrun_final", mesh: str = "pod16x16") -> Dict:
+    recs = load_records(dryrun_dir, mesh)
+    if not recs:
+        print(f"(no dry-run artifacts under {dryrun_dir}/{mesh} — "
+              "run `python -m repro.launch.dryrun --all` first)")
+        return {}
+    print(f"\n## Roofline — {mesh} ({len(recs)} pairs)\n")
+    print(table(recs))
+    s = summarize(recs)
+    print(f"\nbottleneck distribution: {s['bottlenecks']}; "
+          f"worst roofline fraction: {s['worst_roofline_fraction']}; "
+          f"most collective-bound: {s['most_collective_bound']}")
+    return s
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16",
+                    choices=("pod16x16", "pod2x16x16"))
+    ap.add_argument("--dir", default="results/dryrun_final")
+    args = ap.parse_args()
+    run(args.dir, args.mesh)

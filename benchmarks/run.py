@@ -1,0 +1,47 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+deliverable reports. Default scale finishes on a CPU container; --full
+switches the FCF grid to paper-sized datasets and the full level sweep.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale FCF grid (hours)")
+    ap.add_argument("--skip-fcf", action="store_true",
+                    help="only the arithmetic/kernel/roofline sections")
+    args = ap.parse_args()
+
+    from benchmarks import (convergence, fcf_experiments, kernel_bench,
+                            payload_table, reduction_sweep, roofline, table4)
+
+    t0 = time.time()
+    print("=" * 72)
+    print("repro benchmarks — FCF-BTS payload optimization (RecSys'21)")
+    print("=" * 72)
+
+    payload_table.run()
+    kernel_bench.run()
+
+    if not args.skip_fcf:
+        scale = fcf_experiments.FULL if args.full else fcf_experiments.QUICK
+        levels = (reduction_sweep.PAPER_LEVELS if args.full
+                  else reduction_sweep.QUICK_LEVELS)
+        reduction_sweep.run(scale, levels)
+        table4.run(scale)
+        convergence.run(scale)
+
+    roofline.run(mesh="pod16x16")
+    roofline.run(mesh="pod2x16x16")
+
+    print(f"\ntotal benchmark wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

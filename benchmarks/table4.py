@@ -1,0 +1,63 @@
+"""Paper Table 4: detailed 90% payload-reduction analysis.
+
+mean±std across rebuilds for FCF / FCF-BTS / FCF-Random / TopList, plus the
+paper's two summary statistics:
+  Diff%  = |BTS - FCF| / FCF          (cost of the payload cut)
+  Impr%  = |BTS - baseline| / baseline (gain over Random / TopList)
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict
+
+from benchmarks.common import markdown_table
+from benchmarks.fcf_experiments import (
+    FULL, METRICS, QUICK, GridScale, ensure_cells, grid_mean,
+    toplist_baseline,
+)
+
+KEEP = 0.10     # 90% payload reduction
+
+
+def run(scale: GridScale = QUICK) -> Dict:
+    out: Dict = {"scale": scale.name, "datasets": {}}
+    for ds in scale.datasets:
+        full = grid_mean(ensure_cells(scale, ds, "full", 1.0))
+        bts = grid_mean(ensure_cells(scale, ds, "bts", KEEP))
+        rnd = grid_mean(ensure_cells(scale, ds, "random", KEEP))
+        top = toplist_baseline(scale, ds, seed=0)["final"]
+
+        def pct(a, b):
+            return abs(a - b) / max(abs(b), 1e-9) * 100.0
+
+        rows = []
+        for name, stats in (("FCF", full), ("FCF-BTS", bts),
+                            ("FCF-Random", rnd)):
+            rows.append([name] + [f"{stats[m][0]:.4f}±{stats[m][1]:.4f}"
+                                  for m in METRICS])
+        rows.append(["TopList"] + [f"{top[m]:.4f}" for m in METRICS])
+        rows.append(["BTS vs FCF (Diff%)"]
+                    + [f"{pct(bts[m][0], full[m][0]):.2f}" for m in METRICS])
+        rows.append(["BTS vs Random (Impr%)"]
+                    + [f"{pct(bts[m][0], rnd[m][0]):.2f}" for m in METRICS])
+        rows.append(["BTS vs TopList (Impr%)"]
+                    + [f"{pct(bts[m][0], top[m]):.2f}" for m in METRICS])
+
+        print(f"\n## Table 4 analogue — {ds} (90% payload reduction)\n")
+        print(markdown_table(["method"] + [m.upper() for m in METRICS], rows))
+        out["datasets"][ds] = {
+            "full": full, "bts": bts, "random": rnd, "toplist": top,
+            "diff_pct": {m: pct(bts[m][0], full[m][0]) for m in METRICS},
+            "impr_random_pct": {m: pct(bts[m][0], rnd[m][0]) for m in METRICS},
+            "impr_toplist_pct": {m: pct(bts[m][0], top[m]) for m in METRICS},
+        }
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=("quick", "mid", "full"))
+    args = ap.parse_args()
+    from benchmarks.fcf_experiments import MID
+    run({"quick": QUICK, "mid": MID, "full": FULL}[args.scale])

@@ -1,0 +1,45 @@
+"""The paper's generalization to deep models: federated LLM fine-tuning
+with bandit-selected *vocab-row* payloads.
+
+Arms = vocabulary rows of the embedding/unembedding tables (the
+item-dependent payload of an LLM); each round the BTS bandit picks 10% of
+rows to transmit, clients run standard local SGD, and the Eq. 13 reward is
+computed on the per-row embedding deltas. Compare against `--strategy full`
+or `random` to see the accuracy/traffic trade-off.
+
+  PYTHONPATH=src python examples/federated_llm_payload.py --strategy bts
+"""
+import argparse
+
+from repro.configs.registry import get_config
+from repro.federated.llm import FedLLMConfig, run_federated_llm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--strategy", default="bts",
+                    choices=("bts", "random", "full", "magnitude"))
+    ap.add_argument("--rounds", type=int, default=12)
+    args = ap.parse_args()
+
+    # 2-layer, 1024-vocab member of the arch family (CPU-sized)
+    cfg = get_config(args.arch).reduced()
+    fed = FedLLMConfig(strategy=args.strategy, keep_fraction=0.10,
+                       rounds=args.rounds, num_clients=6,
+                       clients_per_round=3, local_steps=2,
+                       batch_size=4, seq_len=32, seed=0)
+    out = run_federated_llm(cfg, fed)
+
+    print(f"\narch family: {args.arch} (reduced)  strategy: {args.strategy}")
+    print(f"eval loss:        {out['first_eval_loss']:.4f} -> "
+          f"{out['final_eval_loss']:.4f} over {args.rounds} rounds")
+    print(f"vocab-row bytes:  {out['bytes_item_dep'] / 1e6:.1f} MB "
+          f"(full-payload equivalent {out['bytes_item_dep_full_equivalent'] / 1e6:.1f} MB)")
+    print(f"item-dependent payload reduction: "
+          f"{out['item_payload_reduction_pct']:.1f}%")
+    print(f"body bytes (constant in vocab):   {out['bytes_body'] / 1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: the paper's technique in ~40 lines.
+
+Runs federated collaborative filtering on a synthetic Movielens-like
+dataset three ways — full payload (FCF), bandit-selected 10% payload
+(FCF-BTS, the paper's method), and random 10% payload (FCF-Random) —
+then prints recommendation quality next to the bytes actually moved.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.data.synthetic import load_dataset
+from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+
+def main() -> None:
+    spec, train, test = load_dataset("movielens-mini", seed=0)
+    print(f"dataset: {spec.name}  users={spec.num_users} items={spec.num_items}")
+
+    results = {}
+    for strategy in ("full", "bts", "random"):
+        cfg = FLSimConfig(strategy=strategy, keep_fraction=0.10, rounds=150,
+                          theta=50, eval_every=25, eval_users=200, seed=0)
+        results[strategy] = run_fcf_simulation(train, test, cfg)
+
+    print(f"\n{'method':<12} {'F1@10':>8} {'MAP@10':>8} {'MB moved':>10}")
+    for name, res in results.items():
+        mb = (res.bytes_down + res.bytes_up) / 1e6
+        print(f"{name:<12} {res.final['f1']:>8.4f} "
+              f"{res.final['map']:>8.4f} {mb:>10.1f}")
+
+    full, bts = results["full"], results["bts"]
+    saved = 100 * (1 - (bts.bytes_down + bts.bytes_up)
+                   / (full.bytes_down + full.bytes_up))
+    drop = 100 * (1 - bts.final["f1"] / full.final["f1"])
+    print(f"\nFCF-BTS moved {saved:.0f}% fewer bytes for a "
+          f"{drop:.1f}% F1 drop (paper: 90% fewer, ~4-8% drop on sparse data)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — payload-optimized federated recommender framework (FCF-BTS, RecSys'21).
+
+Layers:
+  repro.core       bandit payload selection (the paper's contribution)
+  repro.cf         collaborative-filtering substrate (CF/FCF)
+  repro.federated  federated-learning runtime (CF + LLM)
+  repro.models     transformer model zoo (assigned architectures)
+  repro.kernels    Pallas TPU kernels (interpret-mode validated on CPU)
+  repro.configs    architecture + dataset + shape configs
+  repro.launch     mesh construction, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,12 @@
+from repro.cf.model import CFConfig, CFModel, cf_init
+from repro.cf.local import solve_user_factors, item_gradients, local_update
+from repro.cf.server import FCFServer, FCFServerConfig
+from repro.cf.metrics import RecMetrics, evaluate_users, theoretical_best
+from repro.cf.toplist import toplist_ranking
+
+__all__ = [
+    "CFConfig", "CFModel", "cf_init",
+    "solve_user_factors", "item_gradients", "local_update",
+    "FCFServer", "FCFServerConfig",
+    "RecMetrics", "evaluate_users", "theoretical_best", "toplist_ranking",
+]

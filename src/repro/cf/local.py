@@ -1,0 +1,82 @@
+"""Client-side (on-device) FCF computation — Sec. 2.2, Eqs. 3, 5, 6.
+
+Everything here sees only (a) the user's own interaction row x_i and (b) the
+item factors the server chose to transmit (full Q or the payload subset Q*).
+The functions are batched over a cohort of users with vmap-style semantics so
+the simulation can process Theta users per round in one jit call; in a real
+deployment each user runs the B=1 slice.
+
+Implicit-feedback algebra used throughout (binary x, c = 1 + alpha*x):
+  Q C^i Q^T = Q Q^T + alpha * (Q^T diag(x_i) Q)   [only interacted items]
+  Q C^i x_i = (1 + alpha) * Q^T x_i                [since x in {0,1}]
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cf.model import CFConfig
+
+
+@partial(jax.jit, static_argnames=("l2", "alpha"))
+def solve_user_factors(
+    item_factors: jax.Array,   # (M_s, K) transmitted item factors (rows of Q^T)
+    x: jax.Array,              # (B, M_s) binary interactions restricted to them
+    l2: float = 1.0,
+    alpha: float = 4.0,
+) -> jax.Array:
+    """Exact per-user solve (Eq. 3), batched: returns (B, K) user factors.
+
+    p_i* = (Q C^i Q^T + lambda I)^(-1) Q C^i x_i
+    """
+    q = item_factors
+    k = q.shape[-1]
+    gram = q.T @ q                                     # (K, K), shared term
+    # per-user interacted-item correction: alpha * sum_j x_ij q_j q_j^T
+    corr = jnp.einsum("bm,mk,ml->bkl", x, q, q)        # (B, K, K)
+    lhs = gram[None] + alpha * corr + l2 * jnp.eye(k, dtype=q.dtype)[None]
+    rhs = (1.0 + alpha) * (x @ q)                      # (B, K)
+    return jnp.linalg.solve(lhs, rhs[..., None])[..., 0]
+
+
+@partial(jax.jit, static_argnames=("l2", "alpha"))
+def item_gradients(
+    item_factors: jax.Array,   # (M_s, K)
+    user_factors: jax.Array,   # (B, K)
+    x: jax.Array,              # (B, M_s)
+    l2: float = 1.0,
+    alpha: float = 4.0,
+) -> jax.Array:
+    """Aggregated item gradients over the user cohort (Eqs. 5-6): (M_s, K).
+
+    Per user i, item j:
+      dJ_i/dq_j = -2 c_ij (x_ij - p_i^T q_j) p_i + 2 lambda q_j
+    Summed over the B users in the cohort (the server only ever sees the sum,
+    preserving the paper's aggregate-only privacy model):
+      grad = -2 * (C . E)^T P + 2 lambda B q
+    with E = X - P Q^T the residual and C = 1 + alpha X the confidence.
+    """
+    b = x.shape[0]
+    err = x - user_factors @ item_factors.T            # (B, M_s)
+    cw = 1.0 + alpha * x                               # confidence c_ij
+    weighted = cw * err                                # (B, M_s)
+    grad = -2.0 * (weighted.T @ user_factors)          # (M_s, K)
+    grad = grad + 2.0 * l2 * b * item_factors
+    return grad
+
+
+def local_update(
+    item_factors: jax.Array,
+    x: jax.Array,
+    config: CFConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full client round: solve p_i (Eq. 3) then gradients (Eq. 6).
+
+    Returns (user_factors (B, K), aggregated item gradients (M_s, K)).
+    """
+    p = solve_user_factors(item_factors, x, l2=config.l2, alpha=config.alpha)
+    g = item_gradients(item_factors, p, x, l2=config.l2, alpha=config.alpha)
+    return p, g

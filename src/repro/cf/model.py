@@ -1,0 +1,41 @@
+"""Collaborative Filtering model (Sec. 2.1) — the base recommender.
+
+X ~ P^T Q with P in R^{K x N} (user factors, private, on device) and
+Q in R^{K x M} (item factors, the *global model* whose payload the paper
+optimizes). We store Q transposed as (M, K): row j = item j's factor q_j.
+Row-major item layout makes payload row-gather/scatter contiguous, which is
+also what the Pallas payload_gather kernel assumes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CFConfig(NamedTuple):
+    num_users: int
+    num_items: int
+    num_factors: int = 25     # K (paper Table 3)
+    l2: float = 1.0           # lambda
+    alpha: float = 4.0        # implicit-confidence weight: c = 1 + alpha*x
+    init_scale: float = 0.01
+
+
+class CFModel(NamedTuple):
+    item_factors: jax.Array   # (M, K) — the global model Q^T
+    # user factors are NOT stored server-side: they are private and exactly
+    # recomputable on-device from (Q, x_i) via the closed-form solve (Eq. 3).
+
+
+def cf_init(config: CFConfig, key: jax.Array) -> CFModel:
+    q = config.init_scale * jax.random.normal(
+        key, (config.num_items, config.num_factors), jnp.float32
+    )
+    return CFModel(item_factors=q)
+
+
+def predict_scores(user_factors: jax.Array, item_factors: jax.Array) -> jax.Array:
+    """x_hat = p_i^T q_j for a batch of users: (B, K) x (M, K) -> (B, M)."""
+    return user_factors @ item_factors.T

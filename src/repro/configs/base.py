@@ -1,0 +1,168 @@
+"""Architecture configuration.
+
+``block_pattern`` is the repeating unit of layer kinds; the model scans over
+``num_layers // len(pattern)`` periods (remainder layers, if any, are applied
+unscanned with the pattern prefix). Kinds:
+
+  attn      full-attention + dense MLP
+  swa       sliding-window attention + dense MLP
+  moe       full-attention + MoE FFN
+  moe_swa   sliding-window attention + MoE FFN
+  rglru     RecurrentGemma recurrent block + dense MLP
+  mlstm     xLSTM matrix-memory block (self-contained, no extra MLP)
+  slstm     xLSTM scalar-memory block (self-contained, no extra MLP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense | moe | ssm | hybrid | audio | vlm
+    source: str                         # citation ([arXiv:...] / [hf:...])
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # attention details
+    sliding_window: int = 4096
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # recurrent details
+    d_rnn: int = 0                      # rglru width (defaults to d_model)
+    conv_width: int = 4
+    mlstm_proj_factor: float = 2.0
+    # encoder-decoder (audio): encoder is bidirectional full attention
+    encoder_layers: int = 0
+    # multimodal stub frontend: #embedding positions supplied by input_specs
+    modality: str = "text"              # text | audio | vision
+    frontend_seq: int = 0
+    # numerics
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # activation checkpointing of the scanned block body during training:
+    #   "blocks" — jax.checkpoint every scanned period (memory-term default)
+    #   "none"   — store all residuals (the naive baseline; see §Perf)
+    remat: str = "blocks"
+
+    # ------------------------------------------------------------------ #
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding table rows: vocab_size rounded up to a
+        multiple of 512 so the vocab dim shards 16-way (and is MXU-aligned).
+        Logits for padded ids are masked to -inf in the loss / decode."""
+        if self.vocab_size % 512 == 0 or self.vocab_size % 16 == 0:
+            return self.vocab_size
+        return ((self.vocab_size + 511) // 512) * 512
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if every block is sub-quadratic in sequence length (windowed
+        attention or recurrent) — the long_500k eligibility rule."""
+        if self.is_enc_dec:
+            return False
+        return all(k in ("swa", "moe_swa", "rglru", "mlstm", "slstm")
+                   for k in self.block_pattern)
+
+    @property
+    def has_decode_step(self) -> bool:
+        return True   # all assigned archs are decoders or enc-dec
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (used for roofline MODEL_FLOPS)."""
+        return _count_params(self)
+
+    def active_param_count(self) -> int:
+        """MoE-active parameters (6*N_active*D convention)."""
+        return _count_params(self, active_only=True)
+
+    def reduced(self, num_layers: int = 2, d_model: int = 256,
+                vocab: int = 1024, num_experts: int = 4) -> "ModelConfig":
+        """CPU-smoke-test variant of the same family (assignment rule:
+        <=2 layers, d_model<=512, <=4 experts)."""
+        pattern = self.block_pattern
+        layers = max(num_layers, len(pattern))
+        layers = (layers // len(pattern)) * len(pattern)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        return dataclasses.replace(
+            self,
+            num_layers=layers,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=d_model // heads,
+            d_ff=2 * d_model,
+            vocab_size=vocab,
+            sliding_window=16,
+            num_experts=min(self.num_experts, num_experts),
+            experts_per_token=min(self.experts_per_token,
+                                  min(self.num_experts, num_experts)),
+            d_rnn=d_model if self.d_rnn else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            frontend_seq=min(self.frontend_seq, 8),
+            dtype="float32",
+        )
+
+
+def _slstm_ffn(d: int) -> int:
+    """Matches models/xlstm._ffn_dim: 4/3*d rounded up to a multiple of 256."""
+    return int(-(-(4 * d / 3) // 256) * 256)
+
+
+def _count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, ff = cfg.d_model, cfg.d_ff
+    qdim = cfg.num_heads * cfg.head_dim
+    kvdim = cfg.num_kv_heads * cfg.head_dim
+    attn = d * qdim * 2 + d * kvdim * 2
+    dense_mlp = 3 * d * ff
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+
+    def block_params(kind: str) -> int:
+        if kind in ("attn", "swa"):
+            return attn + dense_mlp + 2 * d
+        if kind in ("moe", "moe_swa"):
+            e = (cfg.experts_per_token if active_only else cfg.num_experts)
+            return attn + e * 3 * d * ff + d * cfg.num_experts + 2 * d
+        if kind == "rglru":
+            r = cfg.d_rnn or d
+            return 2 * d * r + 2 * r * r + cfg.conv_width * r + r * d \
+                + dense_mlp + 2 * d
+        if kind == "mlstm":
+            di = int(cfg.mlstm_proj_factor * d)
+            return 2 * d * di + 3 * di * di + di * 2 * cfg.num_heads + di * d + d
+        if kind == "slstm":
+            dh = d // cfg.num_heads
+            return 4 * d * d + cfg.num_heads * dh * 4 * dh \
+                + 2 * d * _slstm_ffn(d) + _slstm_ffn(d) * d + d
+        raise ValueError(kind)
+
+    pattern = cfg.block_pattern
+    for i in range(cfg.num_layers):
+        total += block_params(pattern[i % len(pattern)])
+    if cfg.is_enc_dec:
+        # encoder self-attn layers + decoder cross-attention additions
+        total += cfg.encoder_layers * (attn + dense_mlp + 2 * d)
+        total += cfg.num_layers * (attn + d)          # cross-attn per dec layer
+    return int(total)

@@ -1,0 +1,21 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 [arXiv:2404.16821].
+LM BACKBONE ONLY: the InternViT vision encoder + MLP projector is a stub;
+input_specs() supplies precomputed patch embeddings (B, patches, d_model)
+that are prepended to the text embeddings. long_500k skipped (full attn)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    arch_type="vlm",
+    source="[arXiv:2404.16821]",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    block_pattern=("attn",),
+    modality="vision",
+    frontend_seq=256,          # stub: ViT patch embeddings per image
+)

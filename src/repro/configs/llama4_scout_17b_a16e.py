@@ -1,0 +1,23 @@
+"""llama4-scout-17b-a16e [moe] — 16 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E]. Chunked/local attention (8k window)
+makes long_500k eligible. Text backbone (early-fusion image tokens arrive
+as ordinary embeddings through input_specs for the vlm-style shapes)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    source="[hf:meta-llama/Llama-4-Scout-17B-16E]",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,                 # per-expert FFN width
+    vocab_size=202_048,
+    block_pattern=("moe_swa",),
+    sliding_window=8192,       # chunked-attention analogue
+    num_experts=16,
+    experts_per_token=1,
+    rope_theta=500_000.0,
+)

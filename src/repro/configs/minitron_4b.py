@@ -1,0 +1,17 @@
+"""minitron-4b [dense] — pruned nemotron, GQA kv=8, full attention
+[arXiv:2407.14679]. Pure full attention => long_500k skipped (DESIGN.md §4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    arch_type="dense",
+    source="[arXiv:2407.14679]",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256_000,
+    block_pattern=("attn",),
+)

@@ -1,0 +1,19 @@
+"""qwen3-4b [dense] — qk_norm, GQA kv=8 [hf:Qwen/Qwen3-8B lineage].
+Pure full attention => long_500k skipped (DESIGN.md §4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    arch_type="dense",
+    source="[hf:Qwen/Qwen3-8B]",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151_936,
+    block_pattern=("attn",),
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,21 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1:2 attn:recurrent
+[arXiv:2402.19427]. Pattern: (rglru, rglru, attn) repeating; 26 layers =
+8 full periods + 2 remainder recurrent layers. Local attention window 2048."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    arch_type="hybrid",
+    source="[arXiv:2402.19427]",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,            # GQA kv=1 (MQA)
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=("rglru", "rglru", "swa"),
+    sliding_window=2048,       # RG's local attention window
+    d_rnn=2560,                # lru_width
+    conv_width=4,
+)

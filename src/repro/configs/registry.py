@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma_2b
+from repro.configs.starcoder2_7b import CONFIG as _starcoder2_7b
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral_8x7b
+from repro.configs.minitron_4b import CONFIG as _minitron_4b
+from repro.configs.stablelm_12b import CONFIG as _stablelm_12b
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm_1_3b
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4_scout
+from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
+from repro.configs.internvl2_2b import CONFIG as _internvl2_2b
+
+ARCH_CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _recurrentgemma_2b, _starcoder2_7b, _mixtral_8x7b, _minitron_4b,
+        _stablelm_12b, _seamless, _xlstm_1_3b, _llama4_scout, _qwen3_4b,
+        _internvl2_2b,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCH_CONFIGS:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCH_CONFIGS)}")
+    return ARCH_CONFIGS[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCH_CONFIGS)

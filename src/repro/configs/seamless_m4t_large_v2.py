@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal
+[arXiv:2308.11596]. TRANSFORMER BACKBONE ONLY: the mel-spectrogram +
+conformer feature extractor is a stub; input_specs() supplies precomputed
+frame embeddings (B, frames, d_model). 24 bidirectional encoder layers +
+24 causal decoder layers with cross-attention. long_500k skipped
+(enc-dec cross-attention is full; DESIGN.md §4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type="audio",
+    source="[arXiv:2308.11596]",
+    num_layers=24,             # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,           # GQA kv=16 (full MHA)
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256_206,
+    block_pattern=("attn",),
+    encoder_layers=24,
+    modality="audio",
+    frontend_seq=1024,         # stub: #audio frames after feature extraction
+)

@@ -1,0 +1,17 @@
+"""stablelm-12b [dense] — GQA kv=8, full attention
+[hf:stabilityai/stablelm-2-1_6b lineage]. long_500k skipped (full attn)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    arch_type="dense",
+    source="[hf:stabilityai/stablelm-2-1_6b]",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100_352,
+    block_pattern=("attn",),
+)

@@ -1,0 +1,19 @@
+"""starcoder2-7b [dense] — GQA kv=4, RoPE, 4k sliding-window attention
+[arXiv:2402.19173]. The SWA variant makes long_500k eligible (DESIGN.md §4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    arch_type="dense",
+    source="[arXiv:2402.19173]",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=49152,
+    block_pattern=("swa",),
+    sliding_window=4096,
+    rope_theta=100_000.0,
+)

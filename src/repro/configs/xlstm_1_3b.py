@@ -1,0 +1,20 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks at 7:1 (arXiv:2405.04517).
+48 layers = 6 periods of (7x mLSTM + 1x sLSTM). d_ff=0: xLSTM blocks carry
+their own internal up/down projections. Fully recurrent => long_500k runs."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    source="[arXiv:2405.04517]",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm", "mlstm", "mlstm", "mlstm",
+                   "mlstm", "mlstm", "mlstm", "slstm"),
+    mlstm_proj_factor=2.0,
+)

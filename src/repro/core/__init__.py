@@ -1,0 +1,15 @@
+"""The paper's primary contribution: bandit-based payload optimization.
+
+Model-agnostic — the same selector drives CF item-factor payloads and LLM
+vocab-row / MoE-expert payloads.
+"""
+from repro.core.bandit import BTSState, bts_init, bts_select, bts_update, bts_posterior
+from repro.core.rewards import RewardState, reward_init, compute_rewards, update_v
+from repro.core.payload import PayloadSelector, make_selector, payload_bytes
+from repro.core.regret import RegretTracker
+
+__all__ = [
+    "BTSState", "bts_init", "bts_select", "bts_update", "bts_posterior",
+    "RewardState", "reward_init", "compute_rewards", "update_v",
+    "PayloadSelector", "make_selector", "payload_bytes", "RegretTracker",
+]

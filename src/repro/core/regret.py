@@ -1,0 +1,49 @@
+"""Empirical regret / selection-statistics tracking (Sec. 3.3).
+
+The paper argues (without proof) that FCF-BTS regret should be sub-linear in
+FL iterations. We cannot prove a bound either, but we *measure* an empirical
+proxy: per-round pseudo-regret against the best fixed subset in hindsight,
+
+    regret_t = mean(reward of best-M_s arms by hindsight mean) - mean(reward_t)
+
+accumulated over rounds. A sub-linear cumulative curve (flattening slope) is
+reported by the convergence benchmark.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+class RegretTracker:
+    def __init__(self, num_arms: int):
+        self.num_arms = num_arms
+        self.reward_sum = np.zeros((num_arms,), np.float64)
+        self.counts = np.zeros((num_arms,), np.float64)
+        self.per_round_mean: List[float] = []
+        self.cumulative: List[float] = []
+        self._cum = 0.0
+
+    def record(self, indices, rewards) -> None:
+        indices = np.asarray(indices)
+        rewards = np.asarray(rewards, np.float64)
+        self.reward_sum[indices] += rewards
+        self.counts[indices] += 1.0
+        self.per_round_mean.append(float(rewards.mean()))
+
+        m_s = len(indices)
+        means = np.divide(
+            self.reward_sum, self.counts,
+            out=np.zeros_like(self.reward_sum), where=self.counts > 0,
+        )
+        best = np.sort(means)[-m_s:].mean()
+        self._cum += max(0.0, best - self.per_round_mean[-1])
+        self.cumulative.append(self._cum)
+
+    def slope_last(self, window: int = 50) -> float:
+        """Average per-round regret over the trailing window (lower = converged)."""
+        if len(self.cumulative) < 2:
+            return float("nan")
+        w = min(window, len(self.cumulative) - 1)
+        return (self.cumulative[-1] - self.cumulative[-1 - w]) / w

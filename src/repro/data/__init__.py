@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    DatasetSpec, DATASET_SPECS, generate_interactions, train_test_split, load_dataset,
+)
+from repro.data.tokens import TokenDataConfig, synthetic_token_batches
+
+__all__ = [
+    "DatasetSpec", "DATASET_SPECS", "generate_interactions", "train_test_split",
+    "load_dataset", "TokenDataConfig", "synthetic_token_batches",
+]

@@ -1,0 +1,3 @@
+from repro.federated.simulation import FLSimConfig, run_fcf_simulation, SimResult
+
+__all__ = ["FLSimConfig", "run_fcf_simulation", "SimResult"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  fcf_grad        fused FCF item-gradient (the paper's server/client compute)
+  payload_gather  payload row gather / scatter-add (the paper's subset ops)
+  flash_attention blockwise GQA attention w/ sliding window (model zoo)
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py exposes the jit'd
+wrappers that auto-interpret on CPU.
+"""
+from repro.kernels.ops import (
+    attention, fcf_item_gradients, gather_rows, scatter_add_rows,
+)
+
+__all__ = ["attention", "fcf_item_gradients", "gather_rows", "scatter_add_rows"]

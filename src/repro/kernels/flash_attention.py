@@ -1,0 +1,157 @@
+"""Blockwise (flash) attention Pallas kernel for TPU.
+
+Online-softmax attention with support for:
+  * causal masking,
+  * GQA (q heads grouped onto fewer kv heads) via index-map arithmetic —
+    kv blocks are never replicated in HBM,
+  * sliding-window masking (the sub-quadratic variant used by the SWA /
+    hybrid architectures and required for the long_500k decode shape),
+  * a query-position offset so the same kernel serves decode (1 query token
+    against a long KV cache).
+
+TPU mapping:
+  grid = (B, H, num_q_blocks, num_kv_blocks) — kv is the minor (sequential)
+  dimension, so the running max / denominator / accumulator for one q block
+  live in VMEM scratch across kv steps (revisited output block). Block shapes
+  keep the MXU busy: (block_q, d) x (d, block_k) with d padded to 128 by the
+  wrapper in ops.py; block_q/block_k default to 128/256.
+
+  VMEM working set per program ~= block_q*d + block_k*d (q,k,v tiles)
+  + block_q*block_k logits + scratch — ~1.2 MB at the defaults in f32,
+  comfortably under the ~16 MB/core v5e budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, out_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+):
+    kv_idx = pl.program_id(3)
+    q_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (block_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+
+    logits = jax.lax.dot_general(                # (block_q, block_k)
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+
+    qpos = q_offset + q_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = kv_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len                          # kv padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scratch[...]                       # (block_q, 1)
+    l_prev = l_scratch[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (all NEG_INF): keep exp at 0, not NaN
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+    acc = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+    acc_scratch[...] = acc
+
+    @pl.when(kv_idx == pl.num_programs(3) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scratch[...], 1e-30)
+        out_ref[0, 0] = (acc_scratch[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,                  # (B, H, S, D)
+    k: jax.Array,                  # (B, KVH, T, D)
+    v: jax.Array,                  # (B, KVH, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped-query flash attention. Returns (B, H, S, D) in q.dtype."""
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    assert h % kvh == 0, f"GQA requires H % KVH == 0, got {h} % {kvh}"
+    group = h // kvh
+    scale = 1.0 / (d ** 0.5)
+
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    s_pad = (s + block_q - 1) // block_q * block_q
+    t_pad = (t + block_k - 1) // block_k * block_k
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+
+    grid = (b, h, s_pad // block_q, t_pad // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            q_offset=q_offset, block_q=block_q, block_k=block_k, kv_len=t,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s, :]

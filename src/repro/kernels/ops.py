@@ -1,0 +1,81 @@
+"""Public jit'd kernel entry points.
+
+Backend dispatch:
+  * TPU: compiled Pallas kernels.
+  * CPU + REPRO_INTERPRET=1: Pallas interpret mode (kernel body in Python) —
+    what the kernel tests exercise.
+  * CPU default: the jnp oracles (bit-identical semantics, fast on CPU) so
+    simulations and benchmarks are not throttled by interpret mode.
+  * REPRO_FORCE_REF=1 forces oracles everywhere (A/B a suspected kernel bug).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import fcf_grad as _fcf
+from repro.kernels import payload_gather as _pg
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _use_ref() -> bool:
+    if os.environ.get("REPRO_FORCE_REF", "0") == "1":
+        return True
+    on_cpu = jax.default_backend() != "tpu"
+    return on_cpu and os.environ.get("REPRO_INTERPRET", "0") != "1"
+
+
+def fcf_item_gradients(
+    q: jax.Array, p: jax.Array, x: jax.Array,
+    *, alpha: float = 4.0, l2: float = 1.0, block_m: int = 256,
+) -> jax.Array:
+    """Fused FCF item gradient (Eqs. 5-6) over an item-blocked grid."""
+    if _use_ref():
+        return _ref.fcf_grad_ref(q, p, x, l2=l2, alpha=alpha)
+    return _fcf.fcf_grad(q, p, x, alpha=alpha, l2=l2, block_m=block_m,
+                         interpret=_interpret())
+
+
+def gather_rows(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Payload download: Q* = Q[idx]."""
+    if _use_ref():
+        return _ref.gather_rows_ref(table, idx)
+    return _pg.gather_rows(table, idx, interpret=_interpret())
+
+
+def scatter_add_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+    """Payload upload: Q[idx] += rows. ``idx`` must be unique."""
+    if _use_ref():
+        return _ref.scatter_add_rows_ref(table, idx, rows)
+    return _pg.scatter_add_rows(table, idx, rows, interpret=_interpret())
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 256,
+) -> jax.Array:
+    """Grouped-query flash attention (B, H, S, D) x (B, KVH, T, D)."""
+    if _use_ref():
+        # long sequences: chunked online-softmax oracle so the compiled HLO
+        # has flash-like O(S*chunk) memory (dry-run fidelity + CPU memory)
+        if q.shape[2] * k.shape[2] > 1024 * 2048:
+            return _ref.mha_chunked_ref(q, k, v, causal=causal, window=window,
+                                        q_offset=q_offset)
+        return _ref.mha_ref(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset)
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=_interpret())

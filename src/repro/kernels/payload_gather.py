@@ -1,0 +1,88 @@
+"""Payload row gather / scatter-add Pallas kernels.
+
+The payload subset operations are the per-round hot path of the FL server:
+  * download: Q* = Q[idx]            (gather M_s of M rows)
+  * upload:   Q[idx] += grad_rows    (scatter-add aggregated gradients)
+
+For LLM-scale tables (256k x 5120) these run every round; blocking them
+keeps only (block_rows, K) tiles in VMEM and uses scalar prefetch so the
+row indices are available to the index_map before the DMA is issued —
+the TPU-native equivalent of the paper's "subset the Q factor matrix".
+
+Note on scatter semantics: indices are assumed UNIQUE (payload selections
+are top-k / choice-without-replacement, so this holds by construction).
+TPU grids execute sequentially so revisiting would still be correct, but
+uniqueness is asserted in the ops.py wrapper for defense in depth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    # table_ref block is (1, K) at row idx[i] — selected by the index_map.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(
+    table: jax.Array,      # (M, K)
+    idx: jax.Array,        # (M_s,) int32 unique row ids
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[i] = table[idx[i]] via scalar-prefetch indexed DMA."""
+    m_s = idx.shape[0]
+    k = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m_s,),
+        in_specs=[pl.BlockSpec((1, k), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, k), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_s, k), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table)
+
+
+def _scatter_add_kernel(idx_ref, rows_ref, table_in_ref, out_ref):
+    # aliased in/out: accumulate the payload gradient row into the table row.
+    out_ref[...] = table_in_ref[...] + rows_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_add_rows(
+    table: jax.Array,      # (M, K) — donated and updated in place
+    idx: jax.Array,        # (M_s,) unique row ids
+    rows: jax.Array,       # (M_s, K)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """table[idx[i]] += rows[i]; the table is aliased (no O(M*K) copy)."""
+    m_s = idx.shape[0]
+    k = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m_s,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, idx_ref: (i, 0)),           # rows
+            pl.BlockSpec((1, k), lambda i, idx_ref: (idx_ref[i], 0)),  # table
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_add_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        # alias the table operand (positional arg 2: idx, rows, table)
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), rows, table)

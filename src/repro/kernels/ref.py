@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernels' tests sweep shapes
+and dtypes and assert_allclose against these."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fcf_grad_ref(
+    q: jax.Array,          # (M, K) item factors (payload rows)
+    p: jax.Array,          # (B, K) cohort user factors
+    x: jax.Array,          # (B, M) binary interactions
+    l2: float = 1.0,
+    alpha: float = 4.0,
+) -> jax.Array:
+    """Aggregated FCF item gradient (Eqs. 5-6 summed over the cohort)."""
+    err = x - p @ q.T                      # (B, M)
+    cw = 1.0 + alpha * x
+    grad = -2.0 * ((cw * err).T @ p)       # (M, K)
+    return grad + 2.0 * l2 * x.shape[0] * q
+
+
+def gather_rows_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = table[idx[i]] — payload subset download."""
+    return table[idx]
+
+
+def scatter_add_rows_ref(
+    table: jax.Array, idx: jax.Array, rows: jax.Array
+) -> jax.Array:
+    """table[idx[i]] += rows[i] — payload gradient write-back (unique idx)."""
+    return table.at[idx].add(rows)
+
+
+def mha_chunked_ref(
+    q: jax.Array,                  # (B, H, S, D)
+    k: jax.Array,                  # (B, KVH, T, D)
+    v: jax.Array,                  # (B, KVH, T, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention chunked over KV — the pure-jnp analogue of
+    the flash kernel's memory behaviour. Used as the CPU / dry-run stand-in
+    for long sequences so the compiled HLO's memory footprint reflects the
+    TPU kernel's O(S*chunk) working set instead of a naive S*T score matrix
+    (the dry-run cost analysis depends on this)."""
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    group = h // kvh
+    t_pad = (t + chunk - 1) // chunk * chunk
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    nk = t_pad // chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32)
+    qpos = (jnp.arange(s) + q_offset)[:, None]                     # (S, 1)
+
+    k_chunks = k.reshape(b, kvh, nk, chunk, d).transpose(2, 0, 1, 3, 4)
+    v_chunks = v.reshape(b, kvh, nk, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        j, kc, vc = inputs
+        kc = jnp.repeat(kc, group, axis=1).astype(jnp.float32)     # (B,H,C,D)
+        vc = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        logits = jnp.einsum("bhsd,bhcd->bhsc", qf, kc) * scale
+        kpos = (j * chunk + jnp.arange(chunk))[None, :]            # (1, C)
+        mask = kpos < t
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask[None, None], jnp.exp(logits - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhsc,bhcd->bhsd", p, vc)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+    acc0 = jnp.zeros((b, h, s, d), jnp.float32)
+    (m_f, l_f, acc_f), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(nk), k_chunks, v_chunks))
+    return (acc_f / jnp.maximum(l_f, 1e-30)).astype(q.dtype)
+
+
+def mha_ref(
+    q: jax.Array,                  # (B, H, S, D)
+    k: jax.Array,                  # (B, KVH, T, D)
+    v: jax.Array,                  # (B, KVH, T, D)
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (None = full)
+    q_offset: int = 0,             # absolute position of q[0] (decode)
+) -> jax.Array:
+    """Reference grouped-query attention with optional causal + sliding window.
+
+    GQA: head h of q attends to kv head h // (H // KVH).
+    Sliding window w: query at absolute position i sees keys in
+    (i - w, i] intersected with the causal constraint.
+    """
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    kk = jnp.repeat(k, group, axis=1)      # (B, H, T, D)
+    vv = jnp.repeat(v, group, axis=1)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+
+    t = k.shape[2]
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

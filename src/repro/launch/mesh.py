@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Mesh axes over which the global batch is sharded."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_axis_size(mesh: jax.sharding.Mesh) -> int:
+    size = 1
+    for ax in batch_axes(mesh):
+        size *= mesh.shape[ax]
+    return size

@@ -1,0 +1,184 @@
+"""Partition-spec assignment for every parameter / input / cache leaf.
+
+Rules are by leaf *name* (the trailing path component) with trailing-dims
+semantics: a rule gives the spec of the leaf's logical (unstacked) dims and
+is left-padded with None to the actual rank — so the same rule covers both
+plain blocks and scan-stacked (periods, ...) parameters.
+
+Mapping (DESIGN.md §5):
+  vocab tables          (V, d)      -> ("model", None)     vocab-parallel
+  attention in-proj     (d, X)      -> (None, "model")     head-parallel
+  attention out-proj    (X, d)      -> ("model", None)
+  MLP up/gate           (d, ff)     -> (None, "model")
+  MLP down              (ff, d)     -> ("model", None)
+  MoE experts (E>=model axis size)  -> expert-parallel on E
+  MoE experts (E < model axis size) -> shard the ff dim instead
+  recurrent widths (r / d_inner)    -> "model" on the wide dim
+  norms / biases / gates            -> replicated
+Activations: global batch over ("pod","data"); long_500k (batch=1) shards
+the KV-cache sequence dim over "data" instead (sequence parallelism).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+# name -> trailing-dims spec (None entries padded on the left to leaf rank)
+_IN_PROJ = ("wq", "wk", "wv", "w_up", "w_gate", "w_gate_branch", "w_in",
+            "w_up_gate")
+_OUT_PROJ = ("wo", "w_down", "w_out")
+_REPLICATED = ("scale", "bias", "b", "b_if", "lam", "w_if", "router", "r")
+
+
+def _rule_for(name: str, leaf, cfg: ModelConfig, model_axis: int,
+              path_names) -> tuple:
+    if name == "table":
+        return ("model", None)
+    moe = any(p == "moe" for p in path_names)
+    if moe and name in ("w_gate", "w_up"):
+        if cfg.num_experts >= model_axis:
+            return ("model", None, None)
+        return (None, None, "model")
+    if moe and name == "w_down":
+        if cfg.num_experts >= model_axis:
+            return ("model", None, None)
+        return (None, "model", None)
+    if name in _IN_PROJ:
+        return (None, "model")
+    if name in _OUT_PROJ:
+        return ("model", None)
+    if name in ("w_a", "w_x"):       # rglru square recurrences
+        return (None, "model")
+    if name == "conv_w":
+        return (None, "model")
+    if name in _REPLICATED:
+        return ()
+    return ()                        # default: replicate
+
+
+def _pad_spec(spec: tuple, rank: int) -> P:
+    spec = tuple(spec)[-rank:] if len(spec) > rank else spec
+    return P(*((None,) * (rank - len(spec)) + tuple(spec)))
+
+
+def param_pspecs(cfg: ModelConfig, params_tree: Any) -> Any:
+    """PartitionSpec tree matching an (eval_shape'd) params/opt-state tree."""
+    mesh_model = 16  # model-axis size is 16 on both meshes
+
+    def assign(path, leaf):
+        names = []
+        for entry in path:
+            if hasattr(entry, "key"):
+                names.append(str(entry.key))
+            elif hasattr(entry, "name"):
+                names.append(str(entry.name))
+        name = names[-1] if names else ""
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        rule = _rule_for(name, leaf, cfg, mesh_model, names)
+        return _pad_spec(rule, rank)
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def input_pspecs(cfg: ModelConfig, specs_tree: Any, mesh: Mesh,
+                 seq_shard: bool = False,
+                 kv_model_shard: bool = False) -> Any:
+    """Specs for batch inputs / decode caches.
+
+    seq_shard=True (long_500k, batch=1): KV-cache time dim goes over "data".
+    kv_model_shard=True (§Perf decode): KV-cache time dim goes over "model"
+    (batch stays on data); pairs with the distributed-LSE decode path.
+    """
+    baxes = batch_axes(mesh)
+    bspec = P(baxes)
+
+    def assign(path, leaf):
+        names = []
+        for entry in path:
+            if hasattr(entry, "key"):
+                names.append(str(entry.key))
+            elif hasattr(entry, "name"):
+                names.append(str(entry.name))
+        name = names[-1] if names else ""
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        # scan-stacked cache leaves carry a leading (periods,) axis
+        stacked = "scanned" in names
+        base = rank - (1 if stacked else 0)
+        spec = [None] * rank
+
+        def set_base(i_from_right: int, axis):
+            spec[rank - 1 - i_from_right] = axis
+
+        if name in ("tokens", "token", "prefix_embeds", "enc_embeds",
+                    "enc_out"):
+            if not seq_shard:
+                spec[0] = baxes
+            return P(*spec)
+        if name in ("k", "v", "xk", "xv"):        # base (B, KVH, T, D)
+            if kv_model_shard:
+                set_base(1, "model")               # time over model (+LSE)
+                set_base(3, baxes)
+                return P(*spec)
+            if seq_shard:
+                set_base(1, "data")                # sequence parallelism
+            else:
+                set_base(3, baxes)
+            if leaf.shape[rank - 3] % 16 == 0:     # KVH shardable (seamless)
+                set_base(2, "model")
+            return P(*spec)
+        if name == "h" and base == 2:              # rglru state (B, r)
+            set_base(0, "model")
+            if not seq_shard:
+                set_base(1, baxes)
+            return P(*spec)
+        if name == "conv" and base == 3:           # rglru conv (B, W-1, r)
+            set_base(0, "model")
+            if not seq_shard:
+                set_base(2, baxes)
+            return P(*spec)
+        if name in ("c", "n", "h") and base >= 3:  # xlstm states (B,H,dh[,dh])
+            set_base(0, "model")
+            if not seq_shard:
+                set_base(base - 1, baxes)
+            return P(*spec)
+        return P(*spec)                            # m, len, misc: replicate
+
+    return jax.tree_util.tree_map_with_path(assign, specs_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_shard_moments(cfg: ModelConfig, pspec_tree: Any,
+                       shape_tree: Any, axis: str = "data") -> Any:
+    """ZeRO-1-style optimizer-state sharding (beyond-paper §Perf lever):
+    shard each Adam-moment leaf over ``axis`` on its first still-
+    unsharded dim whose size divides the axis — XLA then reduce-scatters
+    the gradients into the moment sharding and all-gathers the updated
+    params, cutting per-chip f32 moment memory by the axis size."""
+    import numpy as _np
+
+    def upgrade(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (p, dim) in enumerate(zip(parts, leaf.shape)):
+            if p is None and dim % 16 == 0:
+                parts[i] = axis
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(upgrade, pspec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+from repro.models.lm import (
+    LMParams, init_lm_params, lm_forward, lm_loss, train_step, prefill_step,
+    decode_step, init_decode_cache, input_specs,
+)
+
+__all__ = [
+    "LMParams", "init_lm_params", "lm_forward", "lm_loss", "train_step",
+    "prefill_step", "decode_step", "init_decode_cache", "input_specs",
+]

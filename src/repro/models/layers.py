@@ -1,0 +1,133 @@
+"""Primitive layers shared by every architecture in the zoo.
+
+Parameters are plain nested dicts of jax.Arrays; every init function takes an
+explicit key and dtype. Layers are pure functions: ``apply(params, x, ...)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _he(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan, 1))
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------- #
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Dense / embedding
+# --------------------------------------------------------------------- #
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, bias: bool = False):
+    p = {"w": _he(key, (d_in, d_out), dtype, fan_in=d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": (0.02 * jax.random.normal(key, (vocab, dim), jnp.float32)
+                      ).astype(dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Tied or untied output projection onto the vocab: (..., d) -> (..., V)."""
+    return x @ params["table"].T
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+               ) -> jax.Array:
+    """x: (B, H, S, D), positions: (S,) absolute token positions."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, D/2)
+    cos = jnp.cos(angles)[None, None]                       # (1,1,S,D/2)
+    sin = jnp.sin(angles)[None, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Gated MLPs
+# --------------------------------------------------------------------- #
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
+             gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": _he(k1, (d_model, d_ff), dtype, fan_in=d_model),
+        "w_down": _he(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    if gated:
+        p["w_gate"] = _he(k3, (d_model, d_ff), dtype, fan_in=d_model)
+    return p
+
+
+def mlp(params, x):
+    """SwiGLU when gated, GELU otherwise."""
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        act = jax.nn.silu(x @ params["w_gate"]) * up
+    else:
+        act = jax.nn.gelu(up)
+    return act @ params["w_down"]
+
+
+# --------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------- #
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token loss. logits (B,S,V) f32-upcast, labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

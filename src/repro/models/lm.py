@@ -1,0 +1,357 @@
+"""Top-level language model: embeddings -> block stack -> norm -> unembed,
+with train / prefill / decode entry points, multimodal prefix support, and
+the paper's payload-selected vocab-row sync as a first-class train step.
+
+Encoder-decoder (audio): ``enc`` stack runs bidirectional over the frontend
+embeddings; decoder blocks cross-attend to its output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    embed, init_embedding, init_rmsnorm, rmsnorm, softmax_cross_entropy,
+)
+from repro.models.transformer import (
+    apply_stack, init_stack, init_stack_cache, _dtype_of,
+)
+
+LMParams = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def init_lm_params(cfg: ModelConfig, key: jax.Array) -> LMParams:
+    k_emb, k_stack, k_enc, k_out = jax.random.split(key, 4)
+    params: LMParams = {
+        "embed": init_embedding(k_emb, cfg.padded_vocab, cfg.d_model,
+                                _dtype_of(cfg)),
+        "stack": init_stack(k_stack, cfg, cross=cfg.is_enc_dec),
+        "final_norm": init_rmsnorm(cfg.d_model, _dtype_of(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(k_out, cfg.padded_vocab, cfg.d_model,
+                                           _dtype_of(cfg))
+    if cfg.is_enc_dec:
+        import dataclasses
+        enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                                      block_pattern=("attn",))
+        params["encoder"] = init_stack(k_enc, enc_cfg, cross=False)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, _dtype_of(cfg))
+    return params
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                               block_pattern=("attn",))
+
+
+def _unembed(params: LMParams, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    table = params["unembed"]["table"] if "unembed" in params \
+        else params["embed"]["table"]
+    return _mask_padded(x @ table.T, cfg)
+
+
+def _mask_padded(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """-inf out logits of vocab-padding rows (tables are padded to a
+    16-shardable row count; padded ids must never win argmax or enter CE)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ids = jnp.arange(logits.shape[-1])
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, logits.dtype)
+    return jnp.where(ids < cfg.vocab_size, logits, neg)
+
+
+def encode(params: LMParams, cfg: ModelConfig,
+           frontend_embeds: jax.Array) -> jax.Array:
+    """Bidirectional encoder over stub-frontend embeddings (audio)."""
+    positions = jnp.arange(frontend_embeds.shape[1])
+    h, _, _ = apply_stack(params["encoder"], _enc_cfg(cfg), frontend_embeds,
+                          positions=positions, mode="train", causal=False)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------- #
+# forward / loss
+# --------------------------------------------------------------------- #
+def lm_forward(
+    params: LMParams,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S) int32
+    *,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) vlm patches
+    enc_embeds: Optional[jax.Array] = None,      # (B, F, d) audio frames
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_total, V), aux_loss). For vlm, S_total includes
+    the visual prefix positions (their logits are present but unused in the
+    loss, which offsets labels accordingly)."""
+    x = embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+
+    enc_out = None
+    if cfg.is_enc_dec:
+        assert enc_embeds is not None, "enc-dec model needs encoder inputs"
+        enc_out = encode(params, cfg, enc_embeds)
+
+    h, _, aux = apply_stack(params["stack"], cfg, x, positions=positions,
+                            mode="train", enc_out=enc_out, causal=True)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _unembed(params, cfg, h), aux
+
+
+def lm_loss(
+    params: LMParams,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    tokens = batch["tokens"]                     # (B, S+1)
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = lm_forward(
+        params, cfg, inputs,
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_embeds=batch.get("enc_embeds"))
+    if batch.get("prefix_embeds") is not None:
+        p = batch["prefix_embeds"].shape[1]
+        logits = logits[:, p:]                   # text positions only
+    return softmax_cross_entropy(logits, labels) + aux_weight * aux
+
+
+# --------------------------------------------------------------------- #
+# train step (Adam, from-scratch)
+# --------------------------------------------------------------------- #
+class TrainState(NamedTuple):
+    params: LMParams
+    m: LMParams
+    v: LMParams
+    step: jax.Array
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = init_lm_params(cfg, key)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_step(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    lr: float = 3e-4,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+) -> Tuple[TrainState, jax.Array]:
+    """One Adam step. Returns (new_state, loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, batch))(state.params)
+    step = state.step + 1
+    tf = step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda mm, g: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+                     state.m, grads)
+    v = jax.tree.map(lambda vv, g: beta2 * vv
+                     + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+                     state.v, grads)
+    m_scale = 1.0 / (1.0 - beta1 ** tf)
+    v_scale = 1.0 / (1.0 - beta2 ** tf)
+    params = jax.tree.map(
+        lambda p, mm, vv: (p.astype(jnp.float32)
+                           - lr * (mm * m_scale)
+                           / (jnp.sqrt(vv * v_scale) + eps)).astype(p.dtype),
+        state.params, m, v)
+    return TrainState(params, m, v, step), loss
+
+
+# --------------------------------------------------------------------- #
+# payload-selected train step (the paper's technique at the jit level)
+# --------------------------------------------------------------------- #
+def payload_train_step(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    selected: jax.Array,                     # (M_s,) int32 vocab rows
+    cfg: ModelConfig,
+    lr: float = 3e-4,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    row_spec=None,                           # PartitionSpec for (M_s, d) rows
+) -> Tuple[TrainState, jax.Array, jax.Array]:
+    """train_step with vocab-table gradients restricted to ``selected``.
+
+    The FL mapping (DESIGN.md §3): the per-round item-dependent payload of
+    an LLM is the embedding/unembedding pair; restricting their gradient to
+    the bandit-selected rows shrinks the cross-replica (data-axis) gradient
+    collective from O(V×d) to O(M_s×d) — the paper's 90% payload reduction,
+    measurable in the compiled HLO. Rows not selected keep their server
+    values (stop_gradient), exactly "clients update the transmitted subset".
+
+    Returns (new_state, loss, selected-row grads of the unembedding) — the
+    row grads are the bandit feedback s_t (Alg. 1 line 11).
+    """
+    params = state.params
+    tables = [k for k in ("embed", "unembed") if k in params]
+    body = {k: v for k, v in params.items() if k not in tables}
+
+    def constrain(rows):
+        if row_spec is None:
+            return rows
+        return jax.lax.with_sharding_constraint(rows, row_spec)
+
+    rows0 = {t: constrain(params[t]["table"][selected]) for t in tables}
+
+    def loss_fn(body_p, rows):
+        p = dict(body_p)
+        for t in tables:
+            base = jax.lax.stop_gradient(params[t]["table"])
+            p[t] = {"table": base.at[selected].set(rows[t])}
+        return lm_loss(p, cfg, batch)
+
+    loss, (body_g, rows_g) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1))(body, rows0)
+    rows_g = {t: constrain(g) for t, g in rows_g.items()}
+
+    step = state.step + 1
+    tf = step.astype(jnp.float32)
+    m_scale = 1.0 / (1.0 - beta1 ** tf)
+    v_scale = 1.0 / (1.0 - beta2 ** tf)
+
+    new_params, new_m, new_v = dict(params), dict(state.m), dict(state.v)
+    # dense Adam on the body
+    for k in body:
+        mk = jax.tree.map(
+            lambda mm, g: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+            state.m[k], body_g[k])
+        vk = jax.tree.map(
+            lambda vv, g: beta2 * vv
+            + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+            state.v[k], body_g[k])
+        new_params[k] = jax.tree.map(
+            lambda p, mm, vv: (p.astype(jnp.float32)
+                               - lr * (mm * m_scale)
+                               / (jnp.sqrt(vv * v_scale) + eps)
+                               ).astype(p.dtype),
+            body[k], mk, vk)
+        new_m[k], new_v[k] = mk, vk
+
+    # sparse (selected-rows) Adam on the vocab tables — untouched rows keep
+    # their moments, matching the server-side selected-subset update
+    for t in tables:
+        g = rows_g[t].astype(jnp.float32)
+        m_rows = beta1 * state.m[t]["table"][selected] + (1 - beta1) * g
+        v_rows = (beta2 * state.v[t]["table"][selected]
+                  + (1 - beta2) * jnp.square(g))
+        p_rows = (params[t]["table"][selected].astype(jnp.float32)
+                  - lr * (m_rows * m_scale)
+                  / (jnp.sqrt(v_rows * v_scale) + eps))
+        new_params[t] = {"table": params[t]["table"].at[selected].set(
+            p_rows.astype(params[t]["table"].dtype))}
+        new_m[t] = {"table": state.m[t]["table"].at[selected].set(m_rows)}
+        new_v[t] = {"table": state.v[t]["table"].at[selected].set(v_rows)}
+
+    feedback = rows_g[tables[-1]]
+    return TrainState(new_params, new_m, new_v, step), loss, feedback
+
+
+# --------------------------------------------------------------------- #
+# serving: prefill + decode
+# --------------------------------------------------------------------- #
+def prefill_step(
+    params: LMParams,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S)
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Run the prompt, return (last-token logits (B, V), decode cache)."""
+    x = embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode(params, cfg, enc_embeds)
+    h, cache, _ = apply_stack(params["stack"], cfg, x, positions=positions,
+                              mode="prefill", enc_out=enc_out, causal=True)
+    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = _unembed(params, cfg, h)[:, 0]
+    return logits, cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    enc_len = cfg.frontend_seq if cfg.is_enc_dec else 0
+    return init_stack_cache(cfg, batch, max_len, enc_len)
+
+
+def decode_step(
+    params: LMParams,
+    cfg: ModelConfig,
+    cache: Dict,
+    token: jax.Array,                        # (B, 1) int32 — the new token
+    pos: jax.Array,                          # ()   int32 — its absolute position
+    *,
+    enc_out: Optional[jax.Array] = None,     # (B, F, d) cached encoder memory
+) -> Tuple[jax.Array, Dict]:
+    """serve_step: ONE new token against the KV cache. Returns (logits, cache)."""
+    x = embed(params["embed"], token)
+    positions = pos + jnp.arange(1)
+    h, new_cache, _ = apply_stack(params["stack"], cfg, x, positions=positions,
+                                  mode="decode", cache=cache, enc_out=enc_out,
+                                  causal=True)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _unembed(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------- #
+def input_specs(cfg: ModelConfig, shape, for_grad: bool = False) -> Dict:
+    """ShapeDtypeStruct inputs for (cfg, input shape) — the dry-run contract.
+
+    train:   {"tokens": (B, S+1)} (+ modality embeds)
+    prefill: {"tokens": (B, S)} (+ modality embeds)
+    decode:  {"token": (B, 1), "pos": (), "cache": <stack cache>} (+ enc_out)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    dt = _dtype_of(cfg)
+
+    def sds(shp, dtype):
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, s + 1), i32)}
+        if cfg.modality == "vision":
+            specs["prefix_embeds"] = sds((b, cfg.frontend_seq, cfg.d_model), dt)
+        if cfg.is_enc_dec:
+            specs["enc_embeds"] = sds((b, cfg.frontend_seq, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+        if cfg.modality == "vision":
+            specs["prefix_embeds"] = sds((b, cfg.frontend_seq, cfg.d_model), dt)
+        if cfg.is_enc_dec:
+            specs["enc_embeds"] = sds((b, cfg.frontend_seq, cfg.d_model), dt)
+        return specs
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: init_decode_cache(cfg, b, s))
+        specs = {"token": sds((b, 1), i32), "pos": sds((), i32),
+                 "cache": cache}
+        if cfg.is_enc_dec:
+            specs["enc_out"] = sds((b, cfg.frontend_seq, cfg.d_model), dt)
+        return specs
+    raise ValueError(shape.kind)

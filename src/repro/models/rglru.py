@@ -1,0 +1,116 @@
+"""RecurrentGemma's recurrent block: temporal conv + RG-LRU (arXiv:2402.19427).
+
+RG-LRU recurrence per channel:
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda) (learnable decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h, so training/prefill uses
+``jax.lax.associative_scan`` (log-depth, TPU-parallel, shardable over batch/
+channels); decode is the O(1) single-step update. This is the hardware
+adaptation of the paper-family's GPU linear-scan kernels to TPU: the
+associative scan lowers to a work-efficient parallel prefix on XLA:TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _he
+
+_C = 8.0  # RG-LRU temperature constant from the paper
+
+
+def init_rglru_block(key, d_model: int, d_rnn: int, conv_width: int = 4,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": _he(ks[0], (d_model, d_rnn), dtype, fan_in=d_model),
+        "w_gate_branch": _he(ks[1], (d_model, d_rnn), dtype, fan_in=d_model),
+        "conv_w": _he(ks[2], (conv_width, d_rnn), dtype, fan_in=conv_width),
+        "w_a": _he(ks[3], (d_rnn, d_rnn), dtype, fan_in=d_rnn),
+        "w_x": _he(ks[4], (d_rnn, d_rnn), dtype, fan_in=d_rnn),
+        # Lambda init so a = sigmoid(Lambda) ~ 0.9..0.999 (paper init range)
+        "lam": jnp.linspace(4.0, 8.0, d_rnn).astype(jnp.float32),
+        "w_out": _he(ks[5], (d_rnn, d_model), dtype, fan_in=d_rnn),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. x (B,S,D), w (W,D).
+
+    Returns (y, new_state) where state carries the last W-1 inputs for decode.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+W-1, D)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y.astype(x.dtype), new_state
+
+
+def _rglru_scan(a: jax.Array, bx: jax.Array,
+                h0: Optional[jax.Array]) -> jax.Array:
+    """h_t = a_t * h_{t-1} + bx_t via associative scan over time axis 1."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(
+    params,
+    x: jax.Array,                       # (B, S, d_model)
+    *,
+    cache: Optional[dict] = None,       # {"h": (B, d_rnn), "conv": (B,W-1,d_rnn)}
+) -> Tuple[jax.Array, Optional[dict]]:
+    """RecurrentGemma recurrent block. Returns (out (B,S,d_model), cache)."""
+    gate_branch = jax.nn.gelu(x @ params["w_gate_branch"])   # (B,S,R)
+    u = x @ params["w_in"]                                   # (B,S,R)
+    u, conv_state = _causal_conv(
+        u, params["conv_w"], None if cache is None else cache["conv"])
+
+    r = jax.nn.sigmoid(u @ params["w_a"])
+    i = jax.nn.sigmoid(u @ params["w_x"])
+    log_a = -_C * r * jax.nn.softplus(-params["lam"])        # log a_t <= 0
+    a = jnp.exp(log_a.astype(jnp.float32)).astype(x.dtype)
+    gated = i * u
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a.astype(jnp.float32)),
+                              1e-6)).astype(x.dtype) * gated
+
+    h0 = None if cache is None else cache["h"]
+    if x.shape[1] == 1 and cache is not None:
+        # decode fast path: single step, no scan
+        h = a[:, 0] * h0 + bx[:, 0] if h0 is not None else bx[:, 0]
+        h_seq = h[:, None]
+    else:
+        h_seq = _rglru_scan(a, bx, h0)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_seq[:, -1], "conv": conv_state}
+
+    out = (h_seq * gate_branch) @ params["w_out"]
+    return out, new_cache
+
+
+def init_rglru_cache(batch: int, d_rnn: int, conv_width: int = 4,
+                     dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), dtype),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    }

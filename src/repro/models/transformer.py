@@ -1,0 +1,334 @@
+"""Block assembly + scan-over-layers for every architecture in the zoo.
+
+A model is a repeating ``block_pattern`` (configs.base). Parameters for each
+pattern position are stacked along a leading ``periods`` axis and the stack
+is applied with ``jax.lax.scan`` — HLO size and dry-run compile time are
+per-period, not per-layer (48-layer models compile as one loop body).
+Remainder layers (num_layers % len(pattern)) are applied unscanned.
+
+Modes:
+  train   — full sequence, no cache
+  prefill — full sequence, returns a decode cache
+  decode  — S new tokens (usually 1) against the cache
+
+Encoder-decoder (audio): a bidirectional full-attention encoder stack feeds
+cross-attention in every decoder block.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _scan_unroll() -> bool:
+    """Full scan unroll (dry-run cost probes only; see launch/dryrun.py)."""
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    attention_block, init_attention, init_attention_cache,
+)
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.rglru import init_rglru_block, init_rglru_cache, rglru_block
+from repro.models.xlstm import (
+    init_mlstm_block, init_mlstm_cache, init_slstm_block, init_slstm_cache,
+    mlstm_block, slstm_block,
+)
+
+ATTN_KINDS = ("attn", "swa", "moe", "moe_swa")
+
+
+def _dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------- #
+# single block
+# --------------------------------------------------------------------- #
+def init_block(key, kind: str, cfg: ModelConfig, cross: bool = False) -> Dict:
+    dtype = _dtype_of(cfg)
+    keys = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if kind in ATTN_KINDS:
+        p["attn"] = init_attention(
+            keys[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim, dtype, qk_norm=cfg.qk_norm)
+        if cross:
+            p["norm_x"] = init_rmsnorm(cfg.d_model, dtype)
+            p["xattn"] = init_attention(
+                keys[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, dtype, qk_norm=False)
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        if kind in ("moe", "moe_swa"):
+            p["moe"] = init_moe(keys[2], cfg.d_model, cfg.d_ff,
+                                cfg.num_experts, dtype)
+        else:
+            p["mlp"] = init_mlp(keys[2], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru_block(
+            keys[0], cfg.d_model, cfg.d_rnn or cfg.d_model, cfg.conv_width,
+            dtype)
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        p["mlp"] = init_mlp(keys[2], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = init_mlstm_block(
+            keys[0], cfg.d_model, cfg.num_heads, cfg.mlstm_proj_factor, dtype)
+    elif kind == "slstm":
+        p["slstm"] = init_slstm_block(keys[0], cfg.d_model, cfg.num_heads, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     enc_len: int = 0) -> Dict:
+    """Decode-cache structure for one block."""
+    dtype = _dtype_of(cfg)
+    if kind in ATTN_KINDS:
+        window = cfg.sliding_window if kind in ("swa", "moe_swa") else None
+        buf_len = max_len if window is None else min(max_len, max(window, 1))
+        # NOTE: baseline allocates the full max_len buffer even for windowed
+        # attention; the ring-buffer variant is a §Perf optimization.
+        cache = init_attention_cache(batch, cfg.num_kv_heads, cfg.head_dim,
+                                     max_len, dtype)
+        if enc_len > 0:
+            cache["xk"] = jnp.zeros(
+                (batch, cfg.num_kv_heads, enc_len, cfg.head_dim), dtype)
+            cache["xv"] = jnp.zeros_like(cache["xk"])
+        return cache
+    if kind == "rglru":
+        return init_rglru_cache(batch, cfg.d_rnn or cfg.d_model,
+                                cfg.conv_width, dtype)
+    if kind == "mlstm":
+        return init_mlstm_cache(batch, cfg.num_heads, cfg.d_model,
+                                cfg.mlstm_proj_factor)
+    if kind == "slstm":
+        return init_slstm_cache(batch, cfg.num_heads, cfg.d_model)
+    raise ValueError(kind)
+
+
+def apply_block(
+    params: Dict,
+    kind: str,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    mode: str,                       # train | prefill | decode
+    cache: Optional[Dict] = None,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window if kind in ("swa", "moe_swa") else None
+
+    if kind in ATTN_KINDS:
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        attn_cache = None
+        if mode == "decode":
+            attn_cache = {k: cache[k] for k in ("k", "v", "len")}
+        out, new_attn_cache = attention_block(
+            params["attn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, causal=causal,
+            window=window, rope_theta=cfg.rope_theta, cache=attn_cache)
+        x = x + out
+
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _build_prefill_cache(params["attn"], h, cfg, positions,
+                                             enc_out)
+        elif mode == "decode":
+            new_cache = dict(cache)
+            new_cache.update(new_attn_cache)
+
+        if "xattn" in params and enc_out is not None:
+            hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+            x = x + _cross_attention(params["xattn"], hx, cfg, cache, enc_out,
+                                     mode)
+
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if kind in ("moe", "moe_swa"):
+            out2, aux = moe_ffn(params["moe"], h2, num_experts=cfg.num_experts,
+                                top_k=cfg.experts_per_token,
+                                capacity_factor=cfg.capacity_factor)
+        else:
+            out2 = mlp(params["mlp"], h2)
+        x = x + out2
+        return x, new_cache, aux
+
+    if kind == "rglru":
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        rg_cache = cache if mode == "decode" else (
+            init_rglru_cache(x.shape[0], cfg.d_rnn or cfg.d_model,
+                             cfg.conv_width, x.dtype) if mode == "prefill" else None)
+        out, new_cache = rglru_block(params["rglru"], h, cache=rg_cache)
+        x = x + out
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2)
+        return x, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        fn = mlstm_block if kind == "mlstm" else slstm_block
+        init_fn = init_mlstm_cache if kind == "mlstm" else init_slstm_cache
+        blk_cache = cache if mode == "decode" else (
+            (init_fn(x.shape[0], cfg.num_heads, cfg.d_model,
+                     cfg.mlstm_proj_factor) if kind == "mlstm"
+             else init_fn(x.shape[0], cfg.num_heads, cfg.d_model))
+            if mode == "prefill" else None)
+        out, new_cache = fn(params[kind], h, num_heads=cfg.num_heads,
+                            cache=blk_cache)
+        return x + out, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _build_prefill_cache(attn_params, h, cfg, positions, enc_out):
+    """Materialize the roped K/V of the prompt as the decode cache."""
+    from repro.models.attention import _split_heads
+    from repro.models.layers import apply_rope
+
+    k = _split_heads(h @ attn_params["wk"], cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(h @ attn_params["wv"], cfg.num_kv_heads, cfg.head_dim)
+    if "k_norm" in attn_params:
+        k = rmsnorm(attn_params["k_norm"], k)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return {"k": k, "v": v,
+            "len": jnp.asarray(h.shape[1], jnp.int32)}
+
+
+def _cross_attention(xattn_params, hx, cfg, cache, enc_out, mode):
+    """Cross-attention onto the encoder memory (no positional rotation)."""
+    from repro.models.attention import _merge_heads, _split_heads
+    from repro.kernels import ops
+
+    q = _split_heads(hx @ xattn_params["wq"], cfg.num_heads, cfg.head_dim)
+    if mode == "decode" and cache is not None and "xk" in cache:
+        k, v = cache["xk"], cache["xv"]
+    else:
+        k = _split_heads(enc_out @ xattn_params["wk"], cfg.num_kv_heads,
+                         cfg.head_dim)
+        v = _split_heads(enc_out @ xattn_params["wv"], cfg.num_kv_heads,
+                         cfg.head_dim)
+    out = ops.attention(q, k, v, causal=False)
+    return _merge_heads(out) @ xattn_params["wo"]
+
+
+# --------------------------------------------------------------------- #
+# stacked layers (scan over periods)
+# --------------------------------------------------------------------- #
+def init_stack(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    pattern = cfg.block_pattern
+    p_len = len(pattern)
+    periods = cfg.num_layers // p_len
+    remainder = cfg.num_layers % p_len
+
+    keys = jax.random.split(key, periods * p_len + remainder)
+    scanned = []
+    for pos, kind in enumerate(pattern):
+        per_period = [
+            init_block(keys[t * p_len + pos], kind, cfg, cross=cross)
+            for t in range(periods)
+        ]
+        scanned.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_period))
+    rem_blocks = [
+        init_block(keys[periods * p_len + i], pattern[i], cfg, cross=cross)
+        for i in range(remainder)
+    ]
+    return {"scanned": tuple(scanned), "remainder": tuple(rem_blocks)}
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     enc_len: int = 0) -> Dict:
+    pattern = cfg.block_pattern
+    p_len = len(pattern)
+    periods = cfg.num_layers // p_len
+    remainder = cfg.num_layers % p_len
+
+    def stacked(kind):
+        one = init_block_cache(kind, cfg, batch, max_len, enc_len)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (periods,) + x.shape), one)
+
+    return {
+        "scanned": tuple(stacked(kind) for kind in pattern),
+        "remainder": tuple(
+            init_block_cache(pattern[i], cfg, batch, max_len, enc_len)
+            for i in range(remainder)),
+    }
+
+
+def apply_stack(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    mode: str,
+    cache: Optional[Dict] = None,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Run all layers. Returns (x, new_cache, total_aux_loss)."""
+    pattern = cfg.block_pattern
+    p_len = len(pattern)
+    use_cache = mode in ("prefill", "decode")
+
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        new_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for pos, kind in enumerate(pattern):
+            blk_cache = None if layer_cache is None else layer_cache[pos]
+            h, new_c, aux = apply_block(
+                layer_params[pos], kind, cfg, h, positions=positions,
+                mode=mode, cache=blk_cache, enc_out=enc_out, causal=causal)
+            new_caches.append(new_c if new_c is not None else 0)
+            aux_total = aux_total + aux
+        return h, (tuple(new_caches), aux_total)
+
+    unroll = _scan_unroll()
+    scan_cache = cache["scanned"] if (use_cache and cache is not None) else None
+    if scan_cache is None and mode == "prefill":
+        def body_prefill(h, layer_params):
+            return body(h, (layer_params, None))
+
+        x, (new_caches, auxs) = jax.lax.scan(body_prefill, x,
+                                             params["scanned"], unroll=unroll)
+    else:
+        if use_cache:
+            x, (new_caches, auxs) = jax.lax.scan(
+                lambda h, s: body(h, s), x,
+                (params["scanned"], scan_cache), unroll=unroll)
+        else:
+            def body_train(h, layer_params):
+                return body(h, (layer_params, None))
+            if cfg.remat == "blocks":
+                body_train = jax.checkpoint(body_train)
+            x, (new_caches, auxs) = jax.lax.scan(body_train, x,
+                                                 params["scanned"],
+                                                 unroll=unroll)
+
+    aux_total = jnp.sum(auxs)
+
+    new_cache = None
+    rem_caches = []
+    for i, blk in enumerate(params["remainder"]):
+        kind = pattern[i]
+        blk_cache = cache["remainder"][i] if (use_cache and cache is not None
+                                              and mode == "decode") else None
+        x, new_c, aux = apply_block(
+            blk, kind, cfg, x, positions=positions, mode=mode,
+            cache=blk_cache, enc_out=enc_out, causal=causal)
+        rem_caches.append(new_c if new_c is not None else 0)
+        aux_total = aux_total + aux
+
+    if use_cache:
+        new_cache = {"scanned": new_caches, "remainder": tuple(rem_caches)}
+    return x, new_cache, aux_total

@@ -1,0 +1,212 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory with recurrent mixing), both with exponential gating + stabilizers.
+
+TPU adaptation notes (DESIGN.md §3): the xLSTM reference implementation uses
+fused CUDA kernels for the recurrences. Here both blocks lower to
+``jax.lax.scan`` over time — a single compiled loop body (HLO stays
+layer-count independent), with the matrix-memory update expressed as MXU
+outer products. The mLSTM's sequential scan is exact; a chunkwise-parallel
+formulation is a known optimization (see EXPERIMENTS.md §Perf) but the
+recurrent form is the correctness oracle. Decode is the natural O(1) step.
+
+Shapes: mLSTM state C (B, H, dh, dh), n (B, H, dh), m (B, H).
+        sLSTM state c/n/h (B, H, dh), m (B, H, dh).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _he, init_rmsnorm, rmsnorm
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+
+
+def _ffn_dim(d_model: int) -> int:
+    """sLSTM post-up/down FFN width: the paper's 4/3*d, rounded up to a
+    multiple of 256 for MXU alignment and 16-way model-parallel sharding."""
+    raw = 4 * d_model / 3
+    return int(-(-raw // 256) * 256)
+
+
+def init_mlstm_block(key, d_model: int, num_heads: int, proj_factor: float = 2.0,
+                     dtype=jnp.float32):
+    d_inner = int(proj_factor * d_model)
+    dh = d_inner // num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _he(ks[0], (d_model, d_inner), dtype, fan_in=d_model),
+        "w_gate": _he(ks[1], (d_model, d_inner), dtype, fan_in=d_model),
+        "wq": _he(ks[2], (d_inner, d_inner), dtype, fan_in=d_inner),
+        "wk": _he(ks[3], (d_inner, d_inner), dtype, fan_in=d_inner),
+        "wv": _he(ks[4], (d_inner, d_inner), dtype, fan_in=d_inner),
+        "w_if": _he(ks[5], (d_inner, 2 * num_heads), jnp.float32, fan_in=d_inner),
+        "b_if": jnp.concatenate([jnp.zeros((num_heads,)),
+                                 jnp.linspace(3.0, 6.0, num_heads)]).astype(jnp.float32),
+        "out_norm": init_rmsnorm(dh, dtype),
+        "w_down": _he(ks[6], (d_inner, d_model), dtype, fan_in=d_inner),
+    }
+
+
+def _mlstm_step(state, inputs):
+    """One recurrence step. state: (C, n, m); inputs per-step tensors."""
+    c_prev, n_prev, m_prev = state
+    q, k, v, i_log, f_log = inputs          # q/k/v: (B,H,dh); gates: (B,H)
+    m_new = jnp.maximum(f_log + m_prev, i_log)
+    i_g = jnp.exp(i_log - m_new)                      # (B,H)
+    f_g = jnp.exp(f_log + m_prev - m_new)
+    c_new = (f_g[..., None, None] * c_prev
+             + i_g[..., None, None] * (v[..., :, None] * k[..., None, :]))
+    n_new = f_g[..., None] * n_prev + i_g[..., None] * k
+    h_num = jnp.einsum("bhij,bhj->bhi", c_new, q)     # (B,H,dh)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    h = h_num / h_den[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def mlstm_block(
+    params, x: jax.Array, *, num_heads: int,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d_model = x.shape
+    u = x @ params["w_up"]                            # (B,S,Di)
+    gate = jax.nn.silu(x @ params["w_gate"])
+    d_inner = u.shape[-1]
+    dh = d_inner // num_heads
+
+    def heads(t):
+        return t.reshape(b, s, num_heads, dh).transpose(0, 2, 1, 3)
+
+    q = heads(u @ params["wq"]) / (dh ** 0.5)
+    k = heads(u @ params["wk"]) / (dh ** 0.5)
+    v = heads(u @ params["wv"])
+    if_log = u.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_log = if_log[..., :num_heads].transpose(0, 2, 1)          # (B,H,S)
+    f_log = jax.nn.log_sigmoid(if_log[..., num_heads:]).transpose(0, 2, 1)
+
+    if cache is None:
+        c0 = jnp.zeros((b, num_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, num_heads, dh), jnp.float32)
+        m0 = jnp.full((b, num_heads), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+
+    # scan over time (axis 2 for q/k/v heads layout, axis 2 for gates)
+    xs = (
+        q.transpose(2, 0, 1, 3).astype(jnp.float32),
+        k.transpose(2, 0, 1, 3).astype(jnp.float32),
+        v.transpose(2, 0, 1, 3).astype(jnp.float32),
+        i_log.transpose(2, 0, 1), f_log.transpose(2, 0, 1),
+    )
+    (c_f, n_f, m_f), h_seq = jax.lax.scan(_mlstm_step, (c0, n0, m0), xs)
+    h = h_seq.transpose(1, 2, 0, 3)                   # (B,H,S,dh)
+    h = rmsnorm(params["out_norm"], h.astype(x.dtype))
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d_inner)
+
+    out = (h * gate) @ params["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c_f, "n": n_f, "m": m_f}
+    return out, new_cache
+
+
+def init_mlstm_cache(batch: int, num_heads: int, d_model: int,
+                     proj_factor: float = 2.0) -> dict:
+    dh = int(proj_factor * d_model) // num_heads
+    return {
+        "c": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+def init_slstm_block(key, d_model: int, num_heads: int, dtype=jnp.float32):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 4)
+    # input projections for (z, i, f, o) and block-diagonal recurrent weights
+    return {
+        "w_in": _he(ks[0], (d_model, 4 * d_model), dtype, fan_in=d_model),
+        "r": _he(ks[1], (num_heads, dh, 4 * dh), dtype, fan_in=dh),
+        "b": jnp.concatenate([
+            jnp.zeros((2 * d_model,)),
+            jnp.linspace(3.0, 6.0, d_model),     # forget-gate bias (powerful init)
+            jnp.zeros((d_model,)),
+        ]).astype(jnp.float32),
+        "out_norm": init_rmsnorm(d_model, dtype),
+        # post-up-projection (PF 4/3 GLU) per the xLSTM block design
+        "w_up_gate": _he(ks[2], (d_model, _ffn_dim(d_model)), dtype,
+                         fan_in=d_model),
+        "w_up": _he(ks[2], (d_model, _ffn_dim(d_model)), dtype,
+                    fan_in=d_model),
+        "w_down": _he(ks[3], (_ffn_dim(d_model), d_model), dtype,
+                      fan_in=_ffn_dim(d_model)),
+    }
+
+
+def _slstm_step(params_r, state, inp):
+    """state: (c, n, h, m) each (B,H,dh); inp: pre-activation (B, 4*D)."""
+    c_prev, n_prev, h_prev, m_prev = state
+    b_, h_heads, dh = c_prev.shape
+    # recurrent contribution: block-diagonal per head
+    rec = jnp.einsum("bhd,hdf->bhf", h_prev, params_r)       # (B,H,4*dh)
+    raw = inp.reshape(b_, h_heads, 4 * dh) + rec
+    z_r, i_r, f_r, o_r = jnp.split(raw, 4, axis=-1)           # (B,H,dh)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    i_log = i_r
+    f_log = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(f_log + m_prev, i_log)
+    i_g = jnp.exp(i_log - m_new)
+    f_g = jnp.exp(f_log + m_prev - m_new)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(
+    params, x: jax.Array, *, num_heads: int,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d_model = x.shape
+    dh = d_model // num_heads
+    pre = x.astype(jnp.float32) @ params["w_in"].astype(jnp.float32) + params["b"]
+
+    if cache is None:
+        zeros = jnp.zeros((b, num_heads, dh), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, num_heads, dh), -1e30))
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    def step(st, inp):
+        return _slstm_step(params["r"].astype(jnp.float32), st, inp)
+
+    state_f, h_seq = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+    # h_seq: (S, B, H, dh) -> (B, S, D)
+    h = h_seq.transpose(1, 0, 2, 3).reshape(b, s, d_model).astype(x.dtype)
+    h = rmsnorm(params["out_norm"], h)
+
+    # gated post-up-projection
+    y = (jax.nn.gelu(h @ params["w_up_gate"]) * (h @ params["w_up"])
+         ) @ params["w_down"]
+    new_cache = None
+    if cache is not None:
+        c_f, n_f, h_f, m_f = state_f
+        new_cache = {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
+    return y, new_cache
+
+
+def init_slstm_cache(batch: int, num_heads: int, d_model: int) -> dict:
+    dh = d_model // num_heads
+    zeros = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros,
+            "m": jnp.full((batch, num_heads, dh), -1e30, jnp.float32)}

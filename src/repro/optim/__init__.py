@@ -1,0 +1,8 @@
+from repro.optim.adam import (
+    AdamConfig, AdamState, adam_init, adam_update, adam_update_rows, sgd_update,
+)
+
+__all__ = [
+    "AdamConfig", "AdamState", "adam_init", "adam_update", "adam_update_rows",
+    "sgd_update",
+]

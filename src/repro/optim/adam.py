@@ -1,0 +1,99 @@
+"""Adam (Kingma & Ba, 2015) from scratch — no optax in this environment.
+
+Two entry points:
+
+  * ``adam_update``       — dense update over an arbitrary pytree (LLM training).
+  * ``adam_update_rows``  — sparse row-subset update over a 2-D table: only the
+    selected rows' parameters *and moments* advance, with per-row timestep
+    bias correction. This is the server-side update of Algorithm 1 line 13 for
+    payload-selected item-factor (or vocab-embedding) rows.
+
+Paper server hyper-parameters (Table 3): beta1=0.1, beta2=0.99, eta=0.01,
+eps=1e-8.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamConfig(NamedTuple):
+    lr: float = 0.01
+    beta1: float = 0.1
+    beta2: float = 0.99
+    eps: float = 1e-8
+
+
+class AdamState(NamedTuple):
+    m: Any         # first-moment pytree (or (M, K) table for row mode)
+    v: Any         # second-moment pytree
+    t: jax.Array   # scalar step count (dense) or (M,) per-row step counts
+
+
+def adam_init(params: Any, per_row: bool = False) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    if per_row:
+        num_rows = params.shape[0]
+        return AdamState(m=zeros, v=zeros, t=jnp.zeros((num_rows,), jnp.int32))
+    return AdamState(m=zeros, v=zeros, t=jnp.zeros((), jnp.int32))
+
+
+def adam_update(
+    grads: Any, state: AdamState, params: Any, config: AdamConfig = AdamConfig()
+) -> Tuple[Any, AdamState]:
+    """Standard dense Adam over a pytree. Returns (new_params, new_state)."""
+    t = state.t + 1
+    tf = t.astype(jnp.float32)
+    b1, b2 = config.beta1, config.beta2
+
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), state.v, grads)
+    mhat_scale = 1.0 / (1.0 - jnp.power(b1, tf))
+    vhat_scale = 1.0 / (1.0 - jnp.power(b2, tf))
+
+    def step(p, mm, vv):
+        return p - config.lr * (mm * mhat_scale) / (
+            jnp.sqrt(vv * vhat_scale) + config.eps)
+
+    new_params = jax.tree.map(step, params, m, v)
+    return new_params, AdamState(m=m, v=v, t=t)
+
+
+def adam_update_rows(
+    grad_rows: jax.Array,   # (M_s, K) aggregated gradient for selected rows
+    indices: jax.Array,     # (M_s,) row ids
+    state: AdamState,       # per-row state over the full (M, K) table
+    table: jax.Array,       # (M, K) full parameter table
+    config: AdamConfig = AdamConfig(),
+) -> Tuple[jax.Array, AdamState]:
+    """Sparse Adam: advance only the selected rows (payload-subset update).
+
+    Per-row timesteps keep bias correction exact for rows that are selected
+    at different frequencies — important under bandit selection where popular
+    arms are updated far more often than tail arms.
+    """
+    b1, b2 = config.beta1, config.beta2
+    t_rows = state.t[indices] + 1
+    tf = t_rows.astype(jnp.float32)[:, None]
+
+    m_rows = b1 * state.m[indices] + (1 - b1) * grad_rows
+    v_rows = b2 * state.v[indices] + (1 - b2) * jnp.square(grad_rows)
+    mhat = m_rows / (1.0 - jnp.power(b1, tf))
+    vhat = v_rows / (1.0 - jnp.power(b2, tf))
+    new_rows = table[indices] - config.lr * mhat / (jnp.sqrt(vhat) + config.eps)
+
+    return (
+        table.at[indices].set(new_rows),
+        AdamState(
+            m=state.m.at[indices].set(m_rows),
+            v=state.v.at[indices].set(v_rows),
+            t=state.t.at[indices].set(t_rows),
+        ),
+    )
+
+
+def sgd_update(grads: Any, params: Any, lr: float) -> Any:
+    """Plain SGD (Eq. 4 without Adam), kept for ablations."""
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

@@ -1,0 +1,71 @@
+"""Activation-sharding hints.
+
+Model code stays mesh-agnostic; launchers (dryrun/train) install the mesh
+axes the global batch is sharded over, and perf-critical layers anchor
+their big activations with ``constrain_batch`` — a no-op when no hints are
+installed (single-device tests/benches) so the model zoo needs no mesh.
+
+SPMD sharding propagation alone loses the batch sharding through
+scatter/gather-based MoE dispatch (measured: 43GB all-gathers per layer in
+the mixtral dry-run, §Perf); one constraint on the dispatch path pins it.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_MESH = None
+_KV_TIME_SHARD = False
+
+
+@contextmanager
+def batch_axes(axes: Optional[Tuple[str, ...]], mesh=None,
+               kv_time_shard: bool = False):
+    """Install the mesh + batch axes of the global batch for the trace.
+
+    ``kv_time_shard``: decode KV caches are sharded over the model axis on
+    the TIME dim; the attention block switches to the shard_map
+    distributed-LSE decode path (§Perf, decode_32k memory iteration).
+    """
+    global _BATCH_AXES, _MESH, _KV_TIME_SHARD
+    prev = (_BATCH_AXES, _MESH, _KV_TIME_SHARD)
+    _BATCH_AXES = tuple(axes) if axes else None
+    _MESH = mesh
+    _KV_TIME_SHARD = kv_time_shard
+    try:
+        yield
+    finally:
+        _BATCH_AXES, _MESH, _KV_TIME_SHARD = prev
+
+
+def constrain_batch(x: jax.Array, *trailing) -> jax.Array:
+    """Anchor dim 0 of ``x`` to the batch mesh axes (no-op without hints).
+
+    ``trailing`` are specs for the remaining dims (padded with None).
+    """
+    if _BATCH_AXES is None:
+        return x
+    spec = [_BATCH_AXES] + list(trailing)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def active() -> bool:
+    return _BATCH_AXES is not None
+
+
+def get_batch_axes() -> Tuple[str, ...]:
+    assert _BATCH_AXES is not None, "no sharding hints installed"
+    return _BATCH_AXES
+
+
+def get_mesh():
+    return _MESH
+
+
+def kv_time_sharded() -> bool:
+    return _KV_TIME_SHARD and _BATCH_AXES is not None

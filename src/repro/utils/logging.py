@@ -1,0 +1,82 @@
+"""Lightweight structured logging + metric accumulation (no external deps)."""
+from __future__ import annotations
+
+import csv
+import logging
+import os
+import sys
+import time
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+_FORMAT = "%(asctime)s %(name)s %(levelname).1s | %(message)s"
+
+
+def get_logger(name: str, level: int = logging.INFO) -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+        logger.addHandler(handler)
+        logger.setLevel(level)
+        logger.propagate = False
+    return logger
+
+
+class MetricLogger:
+    """Accumulates scalar metrics per step and can dump a CSV.
+
+    Used by the FL simulation driver and the training loop. Keeps a rolling
+    window so the paper's "average of the previous ten global metric values"
+    convention (Sec 6.2) is directly supported via ``rolling_mean``.
+    """
+
+    def __init__(self, out_path: Optional[str] = None):
+        self.rows: List[Dict[str, Any]] = []
+        self.out_path = out_path
+        self._t0 = time.time()
+
+    def log(self, step: int, **metrics: float) -> None:
+        row = {"step": step, "wall_s": round(time.time() - self._t0, 3)}
+        row.update({k: float(v) for k, v in metrics.items()})
+        self.rows.append(row)
+
+    def rolling_mean(self, key: str, window: int = 10) -> float:
+        vals = [r[key] for r in self.rows if key in r][-window:]
+        return float(sum(vals) / max(len(vals), 1))
+
+    def series(self, key: str) -> List[float]:
+        return [r[key] for r in self.rows if key in r]
+
+    def last(self, key: str, default: float = float("nan")) -> float:
+        for r in reversed(self.rows):
+            if key in r:
+                return r[key]
+        return default
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        path = path or self.out_path
+        assert path is not None, "no output path configured"
+        keys: List[str] = []
+        for r in self.rows:
+            for k in r:
+                if k not in keys:
+                    keys.append(k)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(self.rows)
+        return path
+
+
+class Timer:
+    """Context-manager wall-clock timer: ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False

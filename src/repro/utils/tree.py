@@ -1,0 +1,39 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_num_params(tree) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total byte size of a pytree of arrays (or ShapeDtypeStructs)."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves of a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

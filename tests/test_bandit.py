@@ -1,0 +1,85 @@
+"""Unit + property tests for the BTS bandit (Sec. 3.1, Eqs. 7-12)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandit import (
+    bts_init, bts_posterior, bts_sample, bts_select, bts_update,
+)
+
+
+def test_posterior_equals_prior_before_observations():
+    state = bts_init(50, mu_theta=0.3, tau_theta=100.0)
+    mu_hat, tau_hat = bts_posterior(state)
+    np.testing.assert_allclose(mu_hat, 0.3 * np.ones(50), rtol=1e-6)
+    np.testing.assert_allclose(tau_hat, 100.0 * np.ones(50), rtol=1e-6)
+
+
+def test_posterior_update_matches_conjugate_formula():
+    # arm 3 receives rewards [2.0, 4.0] -> Z = 3.0, n = 2
+    state = bts_init(10, mu_theta=0.0, tau_theta=5.0, tau=1.0)
+    state = bts_update(state, jnp.array([3]), jnp.array([2.0]))
+    state = bts_update(state, jnp.array([3]), jnp.array([4.0]))
+    mu_hat, tau_hat = bts_posterior(state)
+    # Eq. 10: (5*0 + 2*3)/(5+2) = 6/7 ; Eq. 11: 5 + 2*1 = 7
+    assert mu_hat[3] == pytest.approx(6.0 / 7.0, rel=1e-6)
+    assert tau_hat[3] == pytest.approx(7.0, rel=1e-6)
+    # untouched arms keep the prior
+    assert mu_hat[0] == pytest.approx(0.0)
+    assert tau_hat[0] == pytest.approx(5.0)
+
+
+def test_select_returns_unique_topk():
+    state = bts_init(100, tau_theta=10_000.0)
+    idx, vals = bts_select(state, jax.random.PRNGKey(0), 20)
+    assert idx.shape == (20,)
+    assert len(np.unique(np.asarray(idx))) == 20
+    # values must be sorted descending (top_k contract)
+    v = np.asarray(vals)
+    assert np.all(v[:-1] >= v[1:])
+
+
+def test_nonfinite_rewards_are_sanitized():
+    state = bts_init(5)
+    state = bts_update(state, jnp.array([0, 1]), jnp.array([jnp.nan, jnp.inf]))
+    assert np.isfinite(np.asarray(state.reward_sum)).all()
+    np.testing.assert_allclose(state.reward_sum[:2], [0.0, 0.0])
+
+
+def test_bandit_identifies_best_arms():
+    """Stationary Gaussian environment: arms 0..9 pay 1.0, the rest 0.0.
+    After enough rounds BTS must concentrate its selections on the good arms."""
+    num_arms, m_s, good = 50, 10, 10
+    state = bts_init(num_arms, tau_theta=1.0)  # loose prior: fast learning
+    key = jax.random.PRNGKey(42)
+    true_means = jnp.where(jnp.arange(num_arms) < good, 1.0, 0.0)
+    for t in range(300):
+        key, k_sel, k_rew = jax.random.split(key, 3)
+        idx, _ = bts_select(state, k_sel, m_s)
+        rewards = true_means[idx] + 0.1 * jax.random.normal(k_rew, (m_s,))
+        state = bts_update(state, idx, rewards)
+    counts = np.asarray(state.counts)
+    # good arms selected far more often than bad arms
+    assert counts[:good].mean() > 5 * counts[good:].mean()
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    z=st.floats(min_value=-5, max_value=5),
+    tau_theta=st.floats(min_value=0.1, max_value=1e5),
+)
+def test_posterior_mean_is_convex_combination(n, z, tau_theta):
+    """Property: mu_hat always lies between the prior mean and the sample mean,
+    and tau_hat grows monotonically with n (information only accumulates)."""
+    state = bts_init(1, mu_theta=0.0, tau_theta=tau_theta, tau=1.0)
+    state = state._replace(
+        reward_sum=jnp.array([z * n], jnp.float32),
+        counts=jnp.array([float(n)], jnp.float32),
+    )
+    mu_hat, tau_hat = bts_posterior(state)
+    lo, hi = min(0.0, z), max(0.0, z)
+    assert lo - 1e-4 <= float(mu_hat[0]) <= hi + 1e-4
+    assert float(tau_hat[0]) >= tau_theta

@@ -1,0 +1,39 @@
+"""Checkpoint IO roundtrip tests."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import latest_checkpoint, load_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "q": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "opt": {"m": jnp.ones((3, 4)), "t": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 10, tree)
+    restored = load_checkpoint(path, like=tree)
+    np.testing.assert_array_equal(np.asarray(restored["q"]), np.asarray(tree["q"]))
+    np.testing.assert_array_equal(np.asarray(restored["opt"]["m"]),
+                                  np.asarray(tree["opt"]["m"]))
+    assert int(restored["opt"]["t"]) == 7
+
+
+def test_latest_and_retention(tmp_path):
+    tree = _tree()
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), step, tree, keep=3)
+    step, path = latest_checkpoint(str(tmp_path))
+    assert step == 5
+    import os
+    kept = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert len(kept) == 3
+
+
+def test_flat_load(tmp_path):
+    path = save_checkpoint(str(tmp_path), 0, _tree())
+    flat = load_checkpoint(path)
+    assert "q" in flat and "opt/m" in flat and "opt/t" in flat

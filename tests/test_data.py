@@ -1,0 +1,74 @@
+"""Tests for synthetic dataset generation and the token pipeline."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import (
+    DATASET_SPECS, generate_interactions, load_dataset, sparsity, train_test_split,
+)
+from repro.data.tokens import TokenDataConfig, synthetic_token_batches
+
+
+def test_mini_dataset_matches_spec():
+    spec = DATASET_SPECS["movielens-mini"]
+    x = generate_interactions(spec, seed=0)
+    assert x.shape == (spec.num_users, spec.num_items)
+    total = int(x.sum())
+    assert abs(total - spec.num_interactions) / spec.num_interactions < 0.15
+    # every user respects the paper's >=5-interaction preprocessing
+    assert (x.sum(axis=1) >= spec.min_degree).all()
+
+
+def test_popularity_is_skewed():
+    """The generator must plant a popularity power law (TopList needs it)."""
+    x = generate_interactions(DATASET_SPECS["mind-mini"], seed=1)
+    counts = np.sort(x.sum(axis=0))[::-1]
+    top_decile = counts[: len(counts) // 10].sum()
+    assert top_decile / counts.sum() > 0.3
+
+
+def test_split_is_disjoint_and_complete():
+    spec = DATASET_SPECS["lastfm-mini"]
+    x = generate_interactions(spec, seed=2)
+    train, test = train_test_split(x, 0.8, seed=3)
+    assert ((train + test) == x).all()          # partition of interactions
+    assert not np.logical_and(train, test).any()
+    # all users have at least one train and one test item (degree >= 5)
+    assert (train.sum(axis=1) >= 1).all()
+    assert (test.sum(axis=1) >= 1).all()
+    frac = train.sum() / x.sum()
+    assert 0.7 < frac < 0.9
+
+
+def test_split_determinism():
+    x = generate_interactions(DATASET_SPECS["movielens-mini"], seed=0)
+    a1, b1 = train_test_split(x, seed=5)
+    a2, b2 = train_test_split(x, seed=5)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+
+
+def test_load_dataset_api():
+    spec, train, test = load_dataset("mind-mini", seed=0)
+    assert train.dtype == np.float32
+    assert spec.num_users == train.shape[0]
+    assert sparsity(train + test) > 90.0
+
+
+def test_token_pipeline_shapes_and_noniid():
+    cfg = TokenDataConfig(vocab_size=1000, seq_len=32, batch_size=4,
+                          num_clients=4, seed=0)
+    b0 = next(iter(synthetic_token_batches(cfg, client_id=0, num_batches=1)))
+    b1 = next(iter(synthetic_token_batches(cfg, client_id=1, num_batches=1)))
+    assert b0["tokens"].shape == (4, 33)
+    assert b0["tokens"].dtype == np.int32
+    assert (b0["tokens"] >= 0).all() and (b0["tokens"] < 1000).all()
+    # non-IID: different clients draw visibly different unigram distributions
+    h0 = np.bincount(b0["tokens"].ravel(), minlength=1000)
+    h1 = np.bincount(b1["tokens"].ravel(), minlength=1000)
+    assert np.abs(h0 - h1).sum() > 0
+
+
+def test_token_pipeline_batch_count():
+    cfg = TokenDataConfig(vocab_size=50, seq_len=8, batch_size=2, seed=1)
+    batches = list(synthetic_token_batches(cfg, num_batches=5))
+    assert len(batches) == 5

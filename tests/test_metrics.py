@@ -1,0 +1,83 @@
+"""Tests for the normalized recommendation metrics (Sec. 6.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cf.metrics import ranked_metrics, theoretical_best
+from repro.cf.toplist import evaluate_toplist, toplist_ranking
+
+
+def test_perfect_ranking_scores_one():
+    """Scoring exactly the test items highest => all normalized metrics = 1."""
+    m = 50
+    train = np.zeros((2, m), np.float32)
+    test = np.zeros((2, m), np.float32)
+    test[0, :4] = 1          # user 0: 4 test items
+    test[1, 10:25] = 1       # user 1: 15 test items
+    scores = test + 0.5      # test items strictly highest
+    got = ranked_metrics(jnp.asarray(scores), jnp.asarray(train), jnp.asarray(test))
+    for v in got.as_dict().values():
+        assert v == pytest.approx(1.0, abs=1e-5)
+
+
+def test_train_items_are_excluded_from_ranking():
+    m = 20
+    train = np.zeros((1, m), np.float32)
+    test = np.zeros((1, m), np.float32)
+    train[0, :10] = 1
+    test[0, 10:12] = 1
+    scores = np.zeros((1, m), np.float32)
+    scores[0, :10] = 100.0     # train items score huge but must be masked
+    scores[0, 10:12] = 1.0
+    got = ranked_metrics(jnp.asarray(scores), jnp.asarray(train), jnp.asarray(test))
+    assert got.precision == pytest.approx(1.0, abs=1e-5)
+
+
+def test_theoretical_best_formulas():
+    best = theoretical_best(jnp.asarray([0.0, 3.0, 10.0, 40.0]), top_k=10)
+    np.testing.assert_allclose(best.precision, [0.0, 0.3, 1.0, 1.0], atol=1e-6)
+    np.testing.assert_allclose(best.recall, [0.0, 1.0, 1.0, 0.25], atol=1e-6)
+    np.testing.assert_allclose(best.map, [0.0, 1.0, 1.0, 1.0], atol=1e-6)
+
+
+def test_empty_test_users_do_not_contribute():
+    m = 30
+    train = np.zeros((2, m), np.float32)
+    test = np.zeros((2, m), np.float32)
+    test[0, :5] = 1            # user 1 has an empty test set
+    scores = np.asarray(test) + 0.1
+    got = ranked_metrics(jnp.asarray(scores), jnp.asarray(train), jnp.asarray(test))
+    assert got.precision == pytest.approx(1.0, abs=1e-5)  # only user 0 counts
+
+
+def test_map_penalizes_late_hits():
+    m = 30
+    train = np.zeros((1, m), np.float32)
+    test = np.zeros((1, m), np.float32)
+    test[0, [0, 1]] = 1
+    early = np.zeros((1, m), np.float32)
+    early[0, 0], early[0, 1] = 10, 9          # hits at ranks 1,2
+    late = np.zeros((1, m), np.float32)
+    late[0, 0], late[0, 1] = 2, 1             # hits at ranks 9,10
+    late[0, 2:10] = np.linspace(9, 3, 8)
+    m_early = ranked_metrics(jnp.asarray(early), jnp.asarray(train), jnp.asarray(test))
+    m_late = ranked_metrics(jnp.asarray(late), jnp.asarray(train), jnp.asarray(test))
+    assert float(m_early.map) > float(m_late.map)
+    assert float(m_early.precision) == pytest.approx(float(m_late.precision))
+
+
+def test_toplist_ranks_by_popularity():
+    counts = jnp.asarray([5.0, 100.0, 1.0, 50.0])
+    idx = np.asarray(toplist_ranking(counts, list_len=4))
+    np.testing.assert_array_equal(idx, [1, 3, 0, 2])
+
+
+def test_toplist_evaluation_runs():
+    rng = np.random.default_rng(0)
+    n, m = 20, 40
+    train = (rng.random((n, m)) < 0.3).astype(np.float32)
+    test = ((rng.random((n, m)) < 0.1) * (1 - train)).astype(np.float32)
+    counts = train.sum(0)
+    got = evaluate_toplist(jnp.asarray(counts), jnp.asarray(train), jnp.asarray(test))
+    for v in got.as_dict().values():
+        assert 0.0 <= v <= 1.0

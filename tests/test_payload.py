@@ -1,0 +1,82 @@
+"""Tests for payload selection strategies and the paper's payload accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.payload import PayloadSelector, make_selector, payload_bytes
+
+
+def test_payload_bytes_reproduces_table1():
+    """Paper Table 1: K=20, float64. 3912 items -> ~625KB; 1M -> ~160MB."""
+    assert payload_bytes(3912, 20, 64) == 3912 * 20 * 8          # 625,920 B
+    assert payload_bytes(3912, 20, 64) / 1e3 == pytest.approx(625.9, abs=0.1)
+    assert payload_bytes(10_000, 20, 64) / 1e6 == pytest.approx(1.6, abs=0.01)
+    assert payload_bytes(100_000, 20, 64) / 1e6 == pytest.approx(16.0, abs=0.1)
+    assert payload_bytes(1_000_000, 20, 64) / 1e6 == pytest.approx(160.0, abs=1)
+    assert payload_bytes(10_000_000, 20, 64) / 1e9 == pytest.approx(1.6, abs=0.01)
+
+
+@pytest.mark.parametrize("strategy", ["bts", "random", "magnitude"])
+def test_selector_counts_and_uniqueness(strategy):
+    sel = make_selector(strategy, num_arms=100, dim=8, keep_fraction=0.25, seed=3)
+    idx = np.asarray(sel.select())
+    assert idx.shape == (25,)
+    assert len(np.unique(idx)) == 25
+    assert idx.min() >= 0 and idx.max() < 100
+    rewards = sel.observe(jnp.asarray(idx), jnp.ones((25, 8)))
+    assert rewards.shape == (25,)
+
+
+def test_full_strategy_selects_everything():
+    sel = make_selector("full", num_arms=42, dim=4)
+    np.testing.assert_array_equal(np.asarray(sel.select()), np.arange(42))
+    assert sel.reduction_pct == 0.0
+
+
+def test_reduction_pct():
+    sel = make_selector("random", num_arms=1000, dim=4, keep_fraction=0.1)
+    assert sel.reduction_pct == pytest.approx(90.0)
+    assert sel.round_payload_bytes == payload_bytes(100, 4)
+    assert sel.full_payload_bytes == payload_bytes(1000, 4)
+
+
+def test_bad_strategy_raises():
+    with pytest.raises(ValueError):
+        PayloadSelector(num_arms=10, num_select=5, dim=2, strategy="nope")
+
+
+def test_magnitude_strategy_tracks_gradient_mass():
+    sel = make_selector("magnitude", num_arms=20, dim=3, keep_fraction=0.25, seed=0)
+    idx = sel.select()
+    grads = jnp.zeros((5, 3)).at[2].set(100.0)   # arm idx[2] gets huge gradients
+    sel.observe(idx, grads)
+    big_arm = int(idx[2])
+    nxt = np.asarray(sel.select())
+    assert big_arm in nxt
+
+
+def test_random_selection_changes_across_rounds():
+    sel = make_selector("random", num_arms=500, dim=2, keep_fraction=0.1, seed=1)
+    a = set(np.asarray(sel.select()).tolist())
+    b = set(np.asarray(sel.select()).tolist())
+    assert a != b
+
+
+def test_bts_selector_end_to_end_concentrates():
+    """Feed rewards that favour arms 0..9; selection frequency must follow."""
+    sel = make_selector("bts", num_arms=40, dim=4, keep_fraction=0.25,
+                        tau_theta=1.0, gamma=0.9, seed=7)
+    hits_good = 0
+    rng = np.random.default_rng(0)
+    for t in range(300):
+        idx = sel.select()
+        idx_np = np.asarray(idx)
+        # synthetic gradients: good arms (0..9) have persistent large gradients
+        g = rng.standard_normal((10, 4)).astype(np.float32) * 0.01
+        g[idx_np < 10] += 1.0
+        sel.observe(idx, jnp.asarray(g))
+        if t >= 250:
+            hits_good += (idx_np < 10).sum()
+    # in the last 50 rounds, good arms should clearly beat the 25% base rate
+    # a uniform selector would give (10/40)*10 = 2.5 hits/round = 0.25
+    assert hits_good / (50 * 10) > 0.45

@@ -1,0 +1,109 @@
+"""Tests for the composite reward function (Sec. 3.2, Eqs. 13-14)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.rewards import compute_rewards, reward_init, update_v
+
+
+def test_eq14_matches_manual():
+    v = jnp.array([[1.0, 2.0]])
+    g = jnp.array([[3.0, -1.0]])
+    beta2 = 0.99
+    out = update_v(v, g, beta2)
+    expected = beta2 * np.array([[1.0, 2.0]]) + 0.01 * np.array([[9.0, 1.0]])
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=1e-5)
+
+
+def test_eq14_literal_paper_form_diverges():
+    """Documents why we store the standard EMA: the literal Eq. 14 recursion
+    v <- (b2*v + (1-b2)*g^2)/(1-b2) multiplies v by ~99/selection and
+    overflows float32 within ~40 selections (DESIGN.md §8)."""
+    v = np.ones((1, 2), np.float32)
+    g = np.ones((1, 2), np.float32)
+    for _ in range(60):
+        v = (0.99 * v + 0.01 * g**2) / 0.01
+    assert not np.isfinite(v).all() or v.max() > 1e30
+
+
+def test_reward_order_of_operations_matches_algorithm1():
+    """v must be updated with the current gradient BEFORE the cosine term
+    (Alg. 1 line 14 precedes line 16), and prev_grad replaced after."""
+    state = reward_init(num_arms=4, dim=3)
+    idx = jnp.array([1, 2])
+    g = jnp.array([[1.0, 0.0, 0.0], [0.0, 2.0, 0.0]])
+    rewards, new_state = compute_rewards(state, idx, g, t=1.0, gamma=0.5, beta2=0.9)
+    # v_new = 0.9*0 + 0.1*g^2 ; cos(v_new, g) for axis-aligned positive g = 1
+    np.testing.assert_allclose(np.asarray(new_state.v[1]), [0.1, 0.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_state.prev_grad[2]), [0.0, 2.0, 0.0])
+    # r = (1-0.5^1)*1 + (0.5/1)*sum|0 - g| -> arm 1: 0.5 + 0.5*1 = 1.0
+    assert rewards[0] == pytest.approx(0.5 * 1.0 + 0.5 * 1.0, rel=1e-5)
+    assert rewards[1] == pytest.approx(0.5 * 1.0 + 0.5 * 2.0, rel=1e-5)
+
+
+def test_geometric_mode_weights_shift_over_time():
+    """Early rounds: |delta grad| term dominates; late rounds: cosine term."""
+    state = reward_init(1, 4)
+    g = jnp.ones((1, 4))
+    gamma = 0.999
+    r_early, _ = compute_rewards(state, jnp.array([0]), g, t=1.0, gamma=gamma)
+    # cosine weight at t=1 is tiny (1-0.999), delta term is gamma*|g| = ~4
+    assert float(r_early[0]) > 3.0
+    r_late, _ = compute_rewards(state, jnp.array([0]), g, t=5000.0, gamma=gamma)
+    # at t=5000 the delta term is ~gamma/5000*4 ~ 8e-4; cosine weight ~ 1
+    assert 0.9 < float(r_late[0]) < 1.1
+
+
+def test_paper_literal_mode_goes_negative():
+    state = reward_init(1, 4)
+    g = jnp.ones((1, 4)) * 0.001
+    r, _ = compute_rewards(state, jnp.array([0]), g, t=100.0, gamma=0.999,
+                           mode="paper_literal")
+    assert float(r[0]) < 0.0  # documents the typo rationale in DESIGN.md §8
+
+
+def test_unknown_mode_raises():
+    state = reward_init(1, 2)
+    with pytest.raises(ValueError):
+        compute_rewards(state, jnp.array([0]), jnp.ones((1, 2)), t=1.0, mode="bogus")
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    g=hnp.arrays(np.float32, (3, 8),
+                 elements=st.floats(-10, 10, width=32, allow_nan=False)),
+    t=st.integers(min_value=1, max_value=10_000),
+)
+def test_rewards_finite_and_bounded_geometric(g, t):
+    """Property: geometric-mode rewards are finite and bounded by
+    1 + gamma/t * sum|prev - g| for any gradient history."""
+    state = reward_init(3, 8)
+    idx = jnp.arange(3)
+    rewards, new_state = compute_rewards(state, idx, jnp.asarray(g), t=float(t))
+    r = np.asarray(rewards)
+    assert np.isfinite(r).all()
+    bound = 1.0 + (0.999 / t) * np.abs(g).sum(axis=-1) + 1e-4
+    assert (r <= bound).all()
+    assert np.isfinite(np.asarray(new_state.v)).all()
+
+
+def test_cosine_invariant_to_paper_v_normalization():
+    """The paper's Eq. 14 divides by (1-beta2); cosine similarity is scale
+    invariant so rewards match the un-normalized variant (DESIGN.md §8)."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((5, 16)).astype(np.float32))
+    v_prev = jnp.asarray(np.abs(rng.standard_normal((5, 16))).astype(np.float32))
+    beta2 = 0.99
+    v_paper = (beta2 * v_prev + (1 - beta2) * g**2) / (1 - beta2)
+    v_std = beta2 * v_prev + (1 - beta2) * g**2
+
+    def cos(a, b):
+        num = (a * b).sum(-1)
+        return num / (np.linalg.norm(a, axis=-1) * np.linalg.norm(b, axis=-1))
+
+    np.testing.assert_allclose(
+        cos(np.asarray(v_paper), np.asarray(g)),
+        cos(np.asarray(v_std), np.asarray(g)), rtol=1e-4,
+    )

@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the paper's system (integration level).
+
+These exercise the full FL loop on mini datasets: payload selection ->
+client solve -> gradient aggregation -> Theta-threshold commit -> bandit
+feedback -> evaluation, and check the paper's qualitative claims hold.
+"""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import load_dataset
+from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+ROUNDS = 150
+
+
+@pytest.fixture(scope="module")
+def mini_data():
+    spec, train, test = load_dataset("movielens-mini", seed=0)
+    return train, test
+
+
+@pytest.fixture(scope="module")
+def results(mini_data):
+    train, test = mini_data
+    out = {}
+    for strat in ("full", "bts", "random"):
+        # reward_norm=False: these tests characterize the paper-literal
+        # selector dynamics (concentration); the normalized variant is
+        # covered by test_bts_norm_rotates_and_covers below.
+        cfg = FLSimConfig(strategy=strat, keep_fraction=0.1, rounds=ROUNDS,
+                          theta=50, eval_every=25, eval_users=200, seed=0,
+                          reward_norm=False)
+        out[strat] = run_fcf_simulation(train, test, cfg)
+    return out
+
+
+def test_simulation_completes_and_metrics_valid(results):
+    for strat, res in results.items():
+        assert res.rounds == ROUNDS
+        for k, v in res.final.items():
+            assert 0.0 <= v <= 1.0, (strat, k, v)
+
+
+def test_full_payload_is_upper_bound(results):
+    """FCF (Original) must dominate the reduced-payload variants (Sec. 7)."""
+    assert results["full"].final["f1"] > results["bts"].final["f1"]
+    assert results["full"].final["f1"] > results["random"].final["f1"]
+
+
+def test_payload_accounting_reflects_reduction(results):
+    """90% payload reduction => ~10x fewer downlink bytes per round."""
+    full = results["full"].bytes_down / ROUNDS
+    bts = results["bts"].bytes_down / ROUNDS
+    assert bts / full == pytest.approx(0.1, rel=0.05)
+
+
+def test_bts_concentrates_selections(results):
+    """The bandit must NOT behave uniformly: selection counts should be
+    concentrated on a subset of items (unlike FCF-Random)."""
+    counts = results["bts"].selection_counts
+    top10 = np.sort(counts)[-len(counts) // 10:].sum()
+    assert top10 / counts.sum() > 0.2
+
+
+def test_bts_not_worse_than_random(results):
+    """Paper headline: FCF-BTS consistently outperforms FCF-Random. On the
+    mini dataset with few rounds we assert non-inferiority with margin."""
+    assert results["bts"].final["f1"] >= 0.85 * results["random"].final["f1"]
+
+
+def test_bts_norm_rotates_and_covers(mini_data):
+    """With per-round reward standardization (the default; EXPERIMENTS.md
+    Finding 2) the bandit must keep exploring: most items get selected at
+    least once instead of locking onto the first winners."""
+    train, test = mini_data
+    cfg = FLSimConfig(strategy="bts", keep_fraction=0.1, rounds=ROUNDS,
+                      theta=50, eval_every=75, eval_users=200, seed=0,
+                      reward_norm=True)
+    res = run_fcf_simulation(train, test, cfg)
+    counts = res.selection_counts
+    assert (counts > 0).mean() > 0.6
+    assert 0.0 <= res.final["f1"] <= 1.0
+
+
+def test_learning_happened(results, mini_data):
+    """The trained model must clearly beat an untrained (random Q) model."""
+    import jax
+    import jax.numpy as jnp
+    from repro.cf.metrics import evaluate_users
+    from repro.cf.model import CFConfig, cf_init
+
+    train, test = mini_data
+    cfg = CFConfig(num_users=train.shape[0], num_items=train.shape[1],
+                   num_factors=25)
+    q0 = cf_init(cfg, jax.random.PRNGKey(0)).item_factors
+    untrained = evaluate_users(q0, jnp.asarray(train[:200]), jnp.asarray(test[:200]))
+    assert results["full"].final["f1"] > 2 * float(untrained.f1)
