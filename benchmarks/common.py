@@ -15,16 +15,21 @@ def results_path(*parts: str) -> str:
     return path
 
 
+def write_json(path: str, obj: Dict) -> None:
+    """Atomically persist a result dict in the shared cache-file format."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path + ".tmp", "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    os.replace(path + ".tmp", path)
+
+
 def cached(path: str, fn: Callable[[], Dict], force: bool = False) -> Dict:
     """Run ``fn`` once; memoize its JSON-serializable result at ``path``."""
     if not force and os.path.exists(path):
         with open(path) as f:
             return json.load(f)
     out = fn()
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path + ".tmp", "w") as f:
-        json.dump(out, f, indent=1, default=float)
-    os.replace(path + ".tmp", path)
+    write_json(path, out)
     return out
 
 

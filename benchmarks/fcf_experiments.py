@@ -12,8 +12,9 @@ Two scales:
 """
 from __future__ import annotations
 
+import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -21,9 +22,11 @@ import numpy as np
 
 from repro.cf.toplist import evaluate_toplist
 from repro.data.synthetic import load_dataset
-from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+from repro.federated.simulation import (
+    FLSimConfig, SimResult, run_fcf_simulation, run_seed_sweep,
+)
 
-from benchmarks.common import cached, results_path
+from benchmarks.common import cached, results_path, write_json
 
 
 @dataclass(frozen=True)
@@ -59,28 +62,38 @@ def cell_key(scale: GridScale, dataset: str, strategy: str,
             f"__k{int(round(100 * keep)):03d}__s{seed}")
 
 
+def _cell_config(scale: GridScale, dataset: str, strategy: str, keep: float,
+                 seed: int) -> FLSimConfig:
+    return FLSimConfig(
+        strategy=strategy, keep_fraction=keep, rounds=scale.rounds,
+        theta=FULL_THETA.get(dataset, scale.theta),
+        eval_every=scale.eval_every, eval_users=scale.eval_users, seed=seed)
+
+
+def _cell_payload(scale: GridScale, dataset: str, strategy: str, keep: float,
+                  seed: int, res: SimResult, seconds: float) -> Dict:
+    return {
+        "dataset": dataset, "strategy": strategy, "keep": keep,
+        "seed": seed, "rounds": scale.rounds,
+        "final": res.final,
+        "trajectory": {
+            "t": [r["step"] for r in res.history.rows],
+            **{m: res.history.series(m) for m in METRICS}},
+        "bytes_down": res.bytes_down, "bytes_up": res.bytes_up,
+        "seconds": seconds,
+    }
+
+
 def run_cell(scale: GridScale, dataset: str, strategy: str, keep: float,
              seed: int, force: bool = False) -> Dict:
     """One simulation cell -> {final metrics, trajectory, bytes, seconds}."""
     def compute():
         _, train, test = load_dataset(dataset, seed=seed)
-        theta = FULL_THETA.get(dataset, scale.theta)
-        cfg = FLSimConfig(
-            strategy=strategy, keep_fraction=keep, rounds=scale.rounds,
-            theta=theta, eval_every=scale.eval_every,
-            eval_users=scale.eval_users, seed=seed)
         t0 = time.time()
-        res = run_fcf_simulation(train, test, cfg)
-        return {
-            "dataset": dataset, "strategy": strategy, "keep": keep,
-            "seed": seed, "rounds": scale.rounds,
-            "final": res.final,
-            "trajectory": {
-                "t": [r["step"] for r in res.history.rows],
-                **{m: res.history.series(m) for m in METRICS}},
-            "bytes_down": res.bytes_down, "bytes_up": res.bytes_up,
-            "seconds": time.time() - t0,
-        }
+        res = run_fcf_simulation(
+            train, test, _cell_config(scale, dataset, strategy, keep, seed))
+        return _cell_payload(scale, dataset, strategy, keep, seed, res,
+                             time.time() - t0)
 
     path = results_path("fcf", cell_key(scale, dataset, strategy, keep, seed)
                         + ".json")
@@ -115,5 +128,31 @@ def grid_mean(cells: Sequence[Dict]) -> Dict[str, Tuple[float, float]]:
 
 def ensure_cells(scale: GridScale, dataset: str, strategy: str,
                  keep: float) -> List[Dict]:
-    return [run_cell(scale, dataset, strategy, keep, seed)
-            for seed in range(scale.rebuilds)]
+    """All rebuild-seed cells for one (dataset, strategy, keep) point.
+
+    Missing seeds are computed together through the vmapped scan engine
+    (:func:`run_seed_sweep`) — one compile + one device program for the whole
+    rebuild axis — and persisted to the same per-seed JSON cache files that
+    :func:`run_cell` writes, so views over the grid are oblivious to which
+    path produced a cell.
+    """
+    seeds = list(range(scale.rebuilds))
+    paths = {
+        s: results_path("fcf", cell_key(scale, dataset, strategy, keep, s)
+                        + ".json")
+        for s in seeds
+    }
+    missing = [s for s in seeds if not os.path.exists(paths[s])]
+    if len(missing) > 1:
+        # rebuild seeds regenerate the dataset: stack per-seed matrices
+        data = [load_dataset(dataset, seed=s)[1:] for s in missing]
+        train = np.stack([d[0] for d in data])
+        test = np.stack([d[1] for d in data])
+        cfg = _cell_config(scale, dataset, strategy, keep, missing[0])
+        t0 = time.time()
+        sweep = run_seed_sweep(train, test, cfg, seeds=missing)
+        seconds = (time.time() - t0) / max(len(missing), 1)
+        for s, res in zip(missing, sweep):
+            write_json(paths[s], _cell_payload(scale, dataset, strategy,
+                                               keep, s, res, seconds))
+    return [run_cell(scale, dataset, strategy, keep, seed) for seed in seeds]

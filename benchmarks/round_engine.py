@@ -1,0 +1,204 @@
+"""Round-engine throughput: legacy loop vs per-round jitted step vs lax.scan.
+
+Measures steady-state FL rounds/sec of one server round at MIND-like scale
+(M = 10k items, K = 25 factors, Theta = 100 users/commit, 90% payload cut)
+for three execution models:
+
+  * ``legacy`` — the pre-refactor engine, reproduced faithfully: per-round
+    Python through the mutable ``FCFServer`` / ``PayloadSelector`` objects
+    (selection, Adam commit and reward updates run eagerly op-by-op; only
+    the client solve is jitted) with the seed's original client math (naive
+    (b,m,k,l) einsum normal equations + LU solve). This is how the seed
+    reproduction drove every round, and it is the baseline the refactor's
+    speedup claim is measured against.
+  * ``python`` — the fused pure ``server_round_step`` jitted once and
+    dispatched per round from Python (simulation ``backend="python"``).
+  * ``scan``   — the same step compiled into one ``jax.lax.scan`` program
+    (simulation ``backend="scan"``, the default engine).
+
+Compilation is excluded (warmup call per engine); the headline number is
+the legacy -> scan speedup, with a >= 5x acceptance bar for the bandit
+strategy on CPU. Writes ``BENCH_round_engine.json`` in the cwd.
+
+Usage:  PYTHONPATH=src python -m benchmarks.round_engine [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cf.local import item_gradients
+from repro.cf.server import FCFServer, FCFServerConfig
+from repro.core.payload import make_selector
+from repro.federated.simulation import FLSimConfig, _build, _make_round_fn
+
+from benchmarks.common import markdown_table
+
+OUT_PATH = "BENCH_round_engine.json"
+REPEATS = 3   # best-of repeats per engine (CPU benchmarks are noisy)
+
+
+def make_data(users: int, items: int, density: float = 0.02, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    train = (rng.random((users, items)) < density).astype(np.float32)
+    test = (rng.random((users, items)) < density / 4).astype(np.float32)
+    return train, test
+
+
+def _setup(train, test, cfg: FLSimConfig):
+    train_j = jnp.asarray(train, jnp.float32)
+    setup = _build(train_j, jnp.asarray(test, jnp.float32), cfg)
+    return train_j, setup, _make_round_fn(train_j, setup)
+
+
+@partial(jax.jit, static_argnames=("l2", "alpha"))
+def _seed_solve_user_factors(q, x, l2=1.0, alpha=4.0):
+    """The seed's original Eq. 3 solve (pre hot-path optimization): naive
+    per-user (b, m, k, l) einsum for the normal equations + batched LU."""
+    k = q.shape[-1]
+    gram = q.T @ q
+    corr = jnp.einsum("bm,mk,ml->bkl", x, q, q)
+    lhs = gram[None] + alpha * corr + l2 * jnp.eye(k, dtype=q.dtype)[None]
+    rhs = (1.0 + alpha) * (x @ q)
+    return jnp.linalg.solve(lhs, rhs[..., None])[..., 0]
+
+
+def _seed_local_update(q, x, cf_cfg):
+    p = _seed_solve_user_factors(q, x, l2=cf_cfg.l2, alpha=cf_cfg.alpha)
+    g = item_gradients(q, p, x, l2=cf_cfg.l2, alpha=cf_cfg.alpha)
+    return p, g
+
+
+def time_legacy(train, test, cfg: FLSimConfig, rounds: int) -> float:
+    """The seed's execution model: mutable objects, eager server math."""
+    train_j, setup, _ = _setup(train, test, cfg)
+    users = train.shape[0]
+    selector = make_selector(
+        cfg.strategy, num_arms=train.shape[1], dim=cfg.num_factors,
+        keep_fraction=cfg.keep_fraction, seed=cfg.seed + 13)
+    server = FCFServer(
+        item_factors=setup.state0.q, selector=selector,
+        config=FCFServerConfig(theta=cfg.theta))
+    rng = np.random.default_rng(cfg.seed + 31)
+
+    def one_round():
+        q_star = server.begin_round()
+        cohort = rng.choice(users, size=min(cfg.theta, users), replace=False)
+        x_sub = train_j[jnp.asarray(cohort)][:, server.selected]
+        _, grads = _seed_local_update(q_star, x_sub, setup.cf_cfg)
+        server.receive(grads, num_users=len(cohort))
+
+    for _ in range(3):                     # warmup / compile
+        one_round()
+    jax.block_until_ready(server.item_factors)
+    best = 0.0
+    for _ in range(REPEATS):               # best-of: least interference
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            one_round()
+        jax.block_until_ready(server.item_factors)
+        best = max(best, rounds / (time.perf_counter() - t0))
+    return best
+
+
+def time_python(train, test, cfg: FLSimConfig, rounds: int) -> float:
+    """Fused step, per-round dispatch (simulation backend="python")."""
+    _, setup, round_fn = _setup(train, test, cfg)
+    step = jax.jit(round_fn)
+    cohorts = jnp.asarray(setup.cohorts)
+    state, _ = step(setup.state0, cohorts[0])      # warmup / compile
+    jax.block_until_ready(state.q)
+    best = 0.0
+    for _ in range(REPEATS):
+        state = setup.state0
+        t0 = time.perf_counter()
+        for t in range(rounds):
+            state, _ = step(state, cohorts[t % cohorts.shape[0]])
+        jax.block_until_ready(state.q)
+        best = max(best, rounds / (time.perf_counter() - t0))
+    return best
+
+
+def time_scan(train, test, cfg: FLSimConfig, rounds: int) -> float:
+    """Whole-chunk lax.scan compilation (simulation backend="scan")."""
+    _, setup, round_fn = _setup(train, test, cfg)
+
+    def scan_chunk(state, cohorts):
+        def body(st, cohort):
+            st, _ = round_fn(st, cohort)
+            return st, None
+        return jax.lax.scan(body, state, cohorts)
+
+    run_chunk = jax.jit(scan_chunk)
+    cohorts = jnp.asarray(
+        np.resize(setup.cohorts, (rounds,) + setup.cohorts.shape[1:]))
+    state, _ = run_chunk(setup.state0, cohorts)    # warmup / compile
+    jax.block_until_ready(state.q)
+    best = 0.0
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        state, _ = run_chunk(setup.state0, cohorts)
+        jax.block_until_ready(state.q)
+        best = max(best, rounds / (time.perf_counter() - t0))
+    return best
+
+
+def run(quick: bool = False) -> Dict:
+    # MIND-like scale (paper Table 2): 10k items, K=25, Theta=100, 90% cut
+    users, items = (1000, 2000) if quick else (5000, 10_000)
+    scan_rounds = 100 if quick else 200
+    loop_rounds = 30 if quick else 60       # dispatch-bound: keep it short
+    train, test = make_data(users, items)
+    base = dict(keep_fraction=0.1, theta=100, num_factors=25, seed=0,
+                rounds=scan_rounds, eval_every=10 * scan_rounds)
+
+    out: Dict = {
+        "scale": {"users": users, "items": items, "k": 25, "theta": 100,
+                  "keep_fraction": 0.1},
+        "strategies": {},
+    }
+    rows = []
+    for strategy in ("bts", "random", "magnitude", "full"):
+        cfg = FLSimConfig(strategy=strategy, **base)
+        rps_legacy = time_legacy(train, test, cfg, loop_rounds)
+        rps_py = time_python(train, test, cfg, loop_rounds)
+        rps_scan = time_scan(train, test, cfg, scan_rounds)
+        speedup = rps_scan / rps_legacy
+        out["strategies"][strategy] = {
+            "legacy_rounds_per_sec": rps_legacy,
+            "python_rounds_per_sec": rps_py,
+            "scan_rounds_per_sec": rps_scan,
+            "speedup_scan_vs_legacy": speedup,
+            "speedup_scan_vs_python": rps_scan / rps_py,
+        }
+        rows.append((strategy, f"{rps_legacy:.1f}", f"{rps_py:.1f}",
+                     f"{rps_scan:.1f}", f"{speedup:.1f}x"))
+
+    print("\n## Round engine — rounds/sec "
+          f"(M={items}, K=25, Theta=100, 90% payload cut)\n")
+    print(markdown_table(
+        ("strategy", "legacy loop (r/s)", "fused step (r/s)",
+         "lax.scan (r/s)", "scan vs legacy"), rows))
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {OUT_PATH}")
+    bts = out["strategies"]["bts"]["speedup_scan_vs_legacy"]
+    print(f"bts scan-vs-legacy speedup: {bts:.1f}x (target >= 5x)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller scale for smoke runs")
+    args = ap.parse_args()
+    run(quick=args.quick)

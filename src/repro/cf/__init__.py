@@ -1,6 +1,9 @@
 from repro.cf.model import CFConfig, CFModel, cf_init
 from repro.cf.local import solve_user_factors, item_gradients, local_update
-from repro.cf.server import FCFServer, FCFServerConfig
+from repro.cf.server import (
+    FCFServer, FCFServerConfig, RoundAux, ServerState, server_init,
+    server_round_step,
+)
 from repro.cf.metrics import RecMetrics, evaluate_users, theoretical_best
 from repro.cf.toplist import toplist_ranking
 
@@ -8,5 +11,6 @@ __all__ = [
     "CFConfig", "CFModel", "cf_init",
     "solve_user_factors", "item_gradients", "local_update",
     "FCFServer", "FCFServerConfig",
+    "ServerState", "RoundAux", "server_init", "server_round_step",
     "RecMetrics", "evaluate_users", "theoretical_best", "toplist_ranking",
 ]

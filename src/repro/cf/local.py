@@ -17,6 +17,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.cf.model import CFConfig
 
@@ -31,15 +32,35 @@ def solve_user_factors(
     """Exact per-user solve (Eq. 3), batched: returns (B, K) user factors.
 
     p_i* = (Q C^i Q^T + lambda I)^(-1) Q C^i x_i
+
+    The per-user correction alpha * sum_j x_ij q_j q_j^T is symmetric, so it
+    is assembled as ONE (B, M_s) x (M_s, K(K+1)/2) matmul over the upper
+    triangle of the q_j outer products and mirrored afterwards — ~2x fewer
+    flops than the naive (b, m, k, l) einsum and a BLAS-friendly shape. This
+    is the flop hot spot of every FL round (and of evaluation).
     """
     q = item_factors
     k = q.shape[-1]
     gram = q.T @ q                                     # (K, K), shared term
-    # per-user interacted-item correction: alpha * sum_j x_ij q_j q_j^T
-    corr = jnp.einsum("bm,mk,ml->bkl", x, q, q)        # (B, K, K)
+    # upper-triangle outer products: (M_s, K(K+1)/2)
+    iu, il = np.triu_indices(k)
+    qq_tri = q[:, iu] * q[:, il]
+    corr_tri = x @ qq_tri                              # (B, K(K+1)/2)
+    # mirror to the full symmetric (B, K, K) via a trace-time gather map
+    tri_of = np.zeros((k, k), np.int32)
+    tri_of[iu, il] = np.arange(iu.size)
+    tri_of[il, iu] = tri_of[iu, il]
+    corr = corr_tri[:, tri_of.reshape(-1)].reshape(x.shape[0], k, k)
     lhs = gram[None] + alpha * corr + l2 * jnp.eye(k, dtype=q.dtype)[None]
     rhs = (1.0 + alpha) * (x @ q)                      # (B, K)
-    return jnp.linalg.solve(lhs, rhs[..., None])[..., 0]
+    # lhs = Q^T Q + alpha*sum x q q^T + l2 I is SPD by construction, so a
+    # batched Cholesky + two triangular solves (~3x cheaper than LU)
+    chol = jnp.linalg.cholesky(lhs)
+    y = jax.lax.linalg.triangular_solve(
+        chol, rhs[..., None], left_side=True, lower=True)
+    p = jax.lax.linalg.triangular_solve(
+        chol, y, left_side=True, lower=True, transpose_a=True)
+    return p[..., 0]
 
 
 @partial(jax.jit, static_argnames=("l2", "alpha"))

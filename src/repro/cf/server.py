@@ -1,34 +1,49 @@
-"""FL server for FCF — Algorithm 1.
+"""FL server for FCF — Algorithm 1, functional core + legacy shim.
 
-The server owns:
-  * the global model Q (item factors, (M, K)),
-  * a per-row Adam state (Eq. 4 with Adam, per the paper),
-  * a PayloadSelector (bts / random / full / magnitude),
-  * the Theta-threshold gradient accumulator (Algorithm 1 line 12).
+Primary API (jit/scan/vmap-safe):
 
-Round protocol (one call to ``begin_round`` + >=1 ``receive`` + auto-commit):
-  1. begin_round(): bandit selects M_s items; server exposes Q*        (l. 8-10)
-  2. clients send back aggregated gradients for Q*                     (l. 11)
-  3. once accumulated #user-updates >= Theta: Adam-update Q rows,
-     update v, compute rewards, update bandit posterior               (l. 12-20)
+  * :class:`ServerState` — the entire server as a pure pytree: global model
+    Q, per-row Adam state, selector state, PRNG key, round counter, and
+    byte counters carried as traced scalars.
+  * :func:`server_init` — build a fresh state.
+  * :func:`server_round_step` — ONE fused FL round (Alg. 1 lines 8-19):
+    select -> gather Q* (Pallas payload gather) -> cohort local solve ->
+    fused item gradients -> scatter-based sparse Adam commit -> reward /
+    BTS posterior update. Pure ``(state, cohort_x) -> (state, aux)``, so the
+    simulation can drive thousands of rounds through ``jax.lax.scan`` and
+    vectorize whole sweeps with ``jax.vmap``.
+
+:class:`FCFServer` is the original mutable, Python-driven server kept as a
+backwards-compatible shim (incremental ``begin_round``/``receive`` protocol
+with Theta-threshold accumulation across multiple cohort receipts); it now
+also routes its payload download through the kernel gather.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.cf.local import solve_user_factors
+from repro.cf.model import CFConfig
 from repro.core.payload import PayloadSelector
-from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update_rows
+from repro.core.selector import (
+    SelectorConfig, SelectorState, selector_init, selector_observe,
+    selector_select,
+)
+from repro.kernels import ops
+from repro.optim.adam import (
+    AdamConfig, AdamState, adam_init, adam_update_rows,
+    adam_update_rows_scattered,
+)
 
 
-@dataclass
-class FCFServerConfig:
+class FCFServerConfig(NamedTuple):
     theta: int = 100              # federated updates needed per global update
-    adam: AdamConfig = field(default_factory=lambda: AdamConfig(
-        lr=0.01, beta1=0.1, beta2=0.99, eps=1e-8))  # paper Table 3
+    adam: AdamConfig = AdamConfig(
+        lr=0.01, beta1=0.1, beta2=0.99, eps=1e-8)   # paper Table 3
     # Bandit feedback (beyond-paper fix, ablatable): each user's Eq. 6
     # gradient carries a +2λq_j term; aggregated over Θ users the feedback
     # becomes  data_term + 2λΘ·q_j.  The λ part is popularity-INDEPENDENT
@@ -42,8 +57,118 @@ class FCFServerConfig:
     l2: float = 1.0
 
 
+class ServerState(NamedTuple):
+    """The whole FL server as a pure pytree (scan carry / vmap axis)."""
+
+    q: jax.Array            # (M, K) global model Q^T
+    opt: AdamState          # per-row Adam moments + timesteps
+    sel: SelectorState      # strategy-specific selector state
+    key: jax.Array          # PRNG key driving the selection stream
+    t: jax.Array            # () int32 — committed global rounds
+    # cumulative payload bytes as traced float32 scalars. NOTE: float32 is
+    # exact only up to 2^24; past that the running totals round to the local
+    # ulp. The payload is shape-constant per round, so exact totals are
+    # always recoverable as t x per-round bytes (what SimResult reports).
+    bytes_down: jax.Array   # () float32 — cumulative payload downlink bytes
+    bytes_up: jax.Array     # () float32 — cumulative payload uplink bytes
+
+
+class RoundAux(NamedTuple):
+    """Per-round outputs surfaced by the fused step (scan ``ys``)."""
+
+    indices: jax.Array      # (M_s,) selected arms
+    rewards: jax.Array      # (M_s,) bandit rewards (zeros for non-learners)
+
+
+def server_init(
+    item_factors: jax.Array,
+    sel_cfg: SelectorConfig,
+    key: jax.Array,
+    config: FCFServerConfig = FCFServerConfig(),
+) -> ServerState:
+    """Fresh server state around an initialized global model."""
+    del config  # static hyper-parameters live outside the pytree
+    return ServerState(
+        q=item_factors,
+        opt=adam_init(item_factors, per_row=True),
+        sel=selector_init(sel_cfg),
+        key=key,
+        t=jnp.zeros((), jnp.int32),
+        bytes_down=jnp.zeros((), jnp.float32),
+        bytes_up=jnp.zeros((), jnp.float32),
+    )
+
+
+def server_round_step(
+    state: ServerState,
+    cohort_x,                      # (B, M) cohort rows, or idx -> (B, M_s)
+    *,
+    sel_cfg: SelectorConfig,
+    config: FCFServerConfig,
+    cf_cfg: CFConfig,
+) -> Tuple[ServerState, RoundAux]:
+    """One fused FL round (Alg. 1 lines 8-19) as a pure function.
+
+    The cohort of B users stands in for the asynchronous arrival of exactly
+    Theta federated updates that triggers a global commit; the server only
+    ever sees the aggregated gradient (the paper's privacy model).
+
+    ``cohort_x`` is either the dense (B, M) cohort slice of the interaction
+    matrix, or a callable mapping the selected indices (M_s,) to the (B, M_s)
+    column subset directly — the lazy form lets the driver fuse the
+    user-row/item-column gather into one indexed read instead of
+    materializing (B, M) per round (a real cost at web-scale M).
+    """
+    key, k_sel = jax.random.split(state.key)
+
+    # lines 8-10: select the payload subset, gather + "transmit" Q*
+    idx, sel = selector_select(sel_cfg, state.sel, k_sel)
+    q_star = ops.gather_rows(state.q, idx)                   # (M_s, K)
+    itemsize = jnp.dtype(state.q.dtype).itemsize
+    bytes_down = state.bytes_down + q_star.size * itemsize
+
+    # line 11: every cohort user solves p_i on-device and uplinks gradients;
+    # the server receives the cohort aggregate
+    if callable(cohort_x):
+        x_sub = cohort_x(idx)                                # (B, M_s)
+    else:
+        x_sub = jnp.take(cohort_x, idx, axis=1)              # (B, M_s)
+    p = solve_user_factors(q_star, x_sub, l2=cf_cfg.l2, alpha=cf_cfg.alpha)
+    grads = ops.fcf_item_gradients(
+        q_star, p, x_sub, alpha=cf_cfg.alpha, l2=cf_cfg.l2)  # (M_s, K)
+    num_users = x_sub.shape[0]
+    bytes_up = state.bytes_up + grads.size * itemsize * num_users
+
+    # line 13: sparse Adam commit on the selected rows (scatter kernels)
+    q_new, opt = adam_update_rows_scattered(
+        grads, idx, state.opt, state.q, config.adam)
+
+    # lines 14-18: reward feedback + posterior update
+    feedback = grads
+    if config.reward_feedback == "data_term":
+        feedback = grads - 2.0 * config.l2 * num_users * q_star
+    sel, rewards = selector_observe(sel_cfg, sel, idx, feedback)
+
+    new_state = ServerState(
+        q=q_new, opt=opt, sel=sel, key=key, t=state.t + 1,
+        bytes_down=bytes_down, bytes_up=bytes_up,
+    )
+    return new_state, RoundAux(indices=idx, rewards=rewards)
+
+
+# ===================================================================== #
+# Legacy mutable shim (incremental receive protocol)
+# ===================================================================== #
 @dataclass
 class FCFServer:
+    """Mutable Python-driven server (legacy shim over the pure pieces).
+
+    Unlike :func:`server_round_step` (one fused call per round), this keeps
+    the incremental protocol: ``begin_round()`` exposes Q*, any number of
+    ``receive`` calls accumulate cohort gradients, and the Theta-threshold
+    triggers the commit — matching a real deployment's asynchronous arrivals.
+    """
+
     item_factors: jax.Array            # (M, K) global model Q^T
     selector: PayloadSelector
     config: FCFServerConfig = field(default_factory=FCFServerConfig)
@@ -64,7 +189,7 @@ class FCFServer:
     def begin_round(self) -> jax.Array:
         """Select the payload subset and return Q* rows (Alg. 1 lines 8-10)."""
         self._selected = self.selector.select()
-        q_star = self.item_factors[self._selected]
+        q_star = ops.gather_rows(self.item_factors, self._selected)
         self.bytes_down += q_star.size * q_star.dtype.itemsize
         return q_star
 
@@ -95,7 +220,7 @@ class FCFServer:
     def _commit(self) -> None:
         """Global update + bandit feedback (Alg. 1 lines 13-19)."""
         idx, grads = self._selected, self._grad_accum
-        q_star = self.item_factors[idx]
+        q_star = ops.gather_rows(self.item_factors, idx)
         # line 13: Q <- Q - eta * sum_i grad_i (Adam-adapted, Eq. 4)
         self.item_factors, self.opt_state = adam_update_rows(
             grads, idx, self.opt_state, self.item_factors, self.config.adam

@@ -6,10 +6,26 @@ vocab-row / MoE-expert payloads.
 from repro.core.bandit import BTSState, bts_init, bts_select, bts_update, bts_posterior
 from repro.core.rewards import RewardState, reward_init, compute_rewards, update_v
 from repro.core.payload import PayloadSelector, make_selector, payload_bytes
+from repro.core.selector import (
+    STRATEGIES,
+    BTSSelectorState,
+    FullState,
+    MagnitudeState,
+    RandomState,
+    SelectorConfig,
+    SelectorState,
+    selector_counts,
+    selector_init,
+    selector_observe,
+    selector_select,
+)
 from repro.core.regret import RegretTracker
 
 __all__ = [
     "BTSState", "bts_init", "bts_select", "bts_update", "bts_posterior",
     "RewardState", "reward_init", "compute_rewards", "update_v",
     "PayloadSelector", "make_selector", "payload_bytes", "RegretTracker",
+    "STRATEGIES", "SelectorConfig", "SelectorState", "BTSSelectorState",
+    "RandomState", "FullState", "MagnitudeState",
+    "selector_init", "selector_select", "selector_observe", "selector_counts",
 ]

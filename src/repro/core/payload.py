@@ -1,4 +1,4 @@
-"""Unified payload-selection strategies.
+"""Unified payload-selection strategies (legacy stateful shim).
 
 A ``PayloadSelector`` decides, each FL round, which of the M arms (CF items,
 LLM vocab rows, MoE experts) have their parameters transmitted. Strategies:
@@ -11,32 +11,54 @@ LLM vocab rows, MoE experts) have their parameters transmitted. Strategies:
                     gradient magnitude (no exploration; lets us quantify how
                     much the bandit's exploration matters).
 
-The class is a thin stateful wrapper for the (Python-level) FL round loop;
-all inner math is pure-JAX and jitted.
+Since the functional-core refactor, ALL selection math lives in the pure,
+scan/vmap-safe :mod:`repro.core.selector`; this class is a thin mutable
+wrapper kept for backwards compatibility with Python-side round loops
+(``FCFServer``, the federated-LLM driver). New code — in particular the
+``lax.scan`` round engine in :mod:`repro.federated.simulation` — should use
+``SelectorConfig`` + ``selector_init/select/observe`` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bandit import BTSState, bts_init, bts_select, bts_update
-from repro.core.rewards import RewardState, compute_rewards, reward_init
+from repro.core.selector import (
+    STRATEGIES,
+    SelectorConfig,
+    SelectorState,
+    selector_counts,
+    selector_init,
+    selector_observe,
+    selector_select,
+)
 
-STRATEGIES = ("bts", "random", "full", "magnitude")
+__all__ = [
+    "STRATEGIES", "payload_bytes", "PayloadSelector", "make_selector",
+]
 
 
 def payload_bytes(num_selected: int, dim: int, dtype_bits: int = 64) -> int:
-    """Paper Table 1 formula: (#parameters x bits) / 8 bytes."""
+    """Paper Table 1 formula: (#parameters x bits) / 8 bytes.
+
+    The paper's Table 1 assumes float64 model payloads (``dtype_bits=64``);
+    the simulation transmits float32, so accounting call sites must pass the
+    *actual* transmission width (see ``PayloadSelector.dtype_bits``).
+    """
     return (num_selected * dim * dtype_bits) // 8
 
 
 @dataclass
 class PayloadSelector:
-    """Selects ``num_select`` of ``num_arms`` arms each round."""
+    """Selects ``num_select`` of ``num_arms`` arms each round.
+
+    Thin stateful compatibility shim over the pure functional selector core
+    (:mod:`repro.core.selector`): it owns a PRNG key and a state pytree and
+    mutates them in place, but every transition is a pure-core call, so a
+    shim-driven loop and a scan-driven loop traverse identical math.
+    """
 
     num_arms: int
     num_select: int
@@ -54,92 +76,84 @@ class PayloadSelector:
     # selection rotates instead of locking onto the first winners —
     # matters on DENSE data where coverage drives accuracy (§Paper-T4).
     reward_norm: bool = False
+    # transmission dtype width in bits: the simulation moves float32 payloads,
+    # so byte accounting defaults to 32 (the paper's Table 1 uses 64).
+    dtype_bits: int = 32
     seed: int = 0
 
-    bts_state: Optional[BTSState] = field(default=None, repr=False)
-    reward_state: Optional[RewardState] = field(default=None, repr=False)
-    t: int = 0
-
     def __post_init__(self):
-        if self.strategy not in STRATEGIES:
-            raise ValueError(f"strategy must be one of {STRATEGIES}, got {self.strategy!r}")
         if self.strategy == "full":
             self.num_select = self.num_arms
-        if not (0 < self.num_select <= self.num_arms):
-            raise ValueError(
-                f"num_select must be in (0, {self.num_arms}], got {self.num_select}")
+        self._cfg = SelectorConfig(
+            strategy=self.strategy, num_arms=self.num_arms,
+            num_select=self.num_select, dim=self.dim, gamma=self.gamma,
+            beta2=self.beta2, mu_theta=self.mu_theta,
+            tau_theta=self.tau_theta, reward_mode=self.reward_mode,
+            reward_norm=self.reward_norm,
+        )
+        self._state: SelectorState = selector_init(self._cfg)
         self._key = jax.random.PRNGKey(self.seed)
-        if self.strategy == "bts":
-            self.bts_state = bts_init(self.num_arms, self.mu_theta, self.tau_theta)
-            self.reward_state = reward_init(self.num_arms, self.dim)
-        elif self.strategy == "magnitude":
-            # accumulated |grad| mass per arm; start uniform so the first
-            # rounds are effectively random (cold start).
-            self._mass = jnp.zeros((self.num_arms,), jnp.float32)
 
     # ------------------------------------------------------------------ #
+    @property
+    def config(self) -> SelectorConfig:
+        return self._cfg
+
+    @property
+    def state(self) -> SelectorState:
+        return self._state
+
+    @property
+    def t(self) -> int:
+        return int(self._state.t)
+
+    @property
+    def bts_state(self):
+        """Bandit posterior stats (bts strategy only), for introspection."""
+        return getattr(self._state, "bts", None)
+
+    @property
+    def reward_state(self):
+        return getattr(self._state, "reward", None)
+
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    # ------------------------------------------------------------------ #
     def select(self) -> jax.Array:
         """Return (num_select,) arm indices for this round (Alg. 1 line 8)."""
-        self.t += 1
-        if self.strategy == "full":
-            return jnp.arange(self.num_arms, dtype=jnp.int32)
-        if self.strategy == "random":
-            return jax.random.choice(
-                self._next_key(), self.num_arms, (self.num_select,), replace=False
-            ).astype(jnp.int32)
-        if self.strategy == "magnitude":
-            noise = 1e-6 * jax.random.normal(self._next_key(), self._mass.shape)
-            _, idx = jax.lax.top_k(self._mass + noise, self.num_select)
-            return idx.astype(jnp.int32)
-        indices, _ = bts_select(self.bts_state, self._next_key(), self.num_select)
-        return indices.astype(jnp.int32)
+        indices, self._state = selector_select(
+            self._cfg, self._state, self._next_key())
+        return indices
 
     def observe(self, indices: jax.Array, grads: jax.Array) -> jax.Array:
         """Feed back aggregated gradients for the selected arms.
 
         ``grads`` has shape (num_select, dim). Returns the per-arm rewards
-        (zeros for non-bandit strategies, for uniform logging).
+        (zeros for non-learning strategies, for uniform logging).
         Implements Algorithm 1 lines 14-18 for the ``bts`` strategy.
         """
-        if self.strategy == "bts":
-            rewards, self.reward_state = compute_rewards(
-                self.reward_state, indices, grads,
-                t=jnp.asarray(self.t, jnp.float32),
-                gamma=self.gamma, beta2=self.beta2, mode=self.reward_mode,
-            )
-            if self.reward_norm:
-                mu = jnp.mean(rewards)
-                sd = jnp.maximum(jnp.std(rewards), 1e-9)
-                rewards = (rewards - mu) / sd
-            self.bts_state = bts_update(self.bts_state, indices, rewards)
-            return rewards
-        if self.strategy == "magnitude":
-            mass = jnp.sum(jnp.abs(grads), axis=-1)
-            self._mass = self._mass.at[indices].add(mass)
-            return mass
-        return jnp.zeros((indices.shape[0],), jnp.float32)
+        self._state, rewards = selector_observe(
+            self._cfg, self._state, indices, grads)
+        return rewards
 
     # ------------------------------------------------------------------ #
     @property
     def round_payload_bytes(self) -> int:
-        return payload_bytes(self.num_select, self.dim)
+        return payload_bytes(self.num_select, self.dim, self.dtype_bits)
 
     @property
     def full_payload_bytes(self) -> int:
-        return payload_bytes(self.num_arms, self.dim)
+        return payload_bytes(self.num_arms, self.dim, self.dtype_bits)
 
     @property
     def reduction_pct(self) -> float:
         return 100.0 * (1.0 - self.num_select / self.num_arms)
 
     def selection_counts(self) -> np.ndarray:
-        if self.strategy == "bts":
-            return np.asarray(self.bts_state.counts)
-        return np.zeros((self.num_arms,), np.float32)
+        """Per-arm transmission counts — meaningful for every strategy."""
+        return np.asarray(selector_counts(self._cfg, self._state))
 
 
 def make_selector(

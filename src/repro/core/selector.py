@@ -1,0 +1,202 @@
+"""Pure functional payload-selection core — the scan/vmap-safe engine.
+
+Each strategy is a pure state pytree behind a uniform API:
+
+    state            = selector_init(cfg)
+    indices, state   = selector_select(cfg, state, key)
+    state, rewards   = selector_observe(cfg, state, indices, feedback)
+    counts           = selector_counts(cfg, state)
+
+``cfg`` is a hashable :class:`SelectorConfig` NamedTuple resolved at *trace*
+time (strategy dispatch happens in Python, so a jitted/scanned round step
+compiles exactly one strategy's code path); every state field is a traced
+array, so the whole thing is safe under ``jax.jit``, ``jax.lax.scan`` and
+``jax.vmap`` (multi-seed / multi-config sweeps vectorize over the state).
+
+Strategies (Sec. 3 of the paper + beyond-paper baselines):
+
+  * ``bts``       — Bayesian Thompson Sampling over the composite reward.
+  * ``random``    — FCF-Random: uniform subset without replacement.
+  * ``full``      — FCF (Original): all arms, no reduction.
+  * ``magnitude`` — greedy top-M_s by accumulated |grad| mass.
+
+The legacy stateful :class:`repro.core.payload.PayloadSelector` is now a thin
+mutable shim over these functions.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandit import BTSState as BanditState
+from repro.core.bandit import bts_init, bts_select, bts_update
+from repro.core.rewards import RewardState, compute_rewards, reward_init
+
+STRATEGIES = ("bts", "random", "full", "magnitude")
+
+# tiny tiebreak noise so the magnitude strategy is uniform-random before any
+# mass has accumulated (cold start) instead of degenerate-argsort-stable
+_MAGNITUDE_NOISE = 1e-6
+
+
+class SelectorConfig(NamedTuple):
+    """Static (hashable) selector hyper-parameters, fixed for a whole run."""
+
+    strategy: str
+    num_arms: int
+    num_select: int
+    dim: int
+    gamma: float = 0.999
+    beta2: float = 0.99
+    mu_theta: float = 0.0
+    tau_theta: float = 10_000.0
+    reward_mode: str = "geometric"
+    reward_norm: bool = False
+
+
+class BTSSelectorState(NamedTuple):
+    """BTS strategy: bandit posterior + reward buffers + round counter."""
+
+    t: jax.Array          # () int32 — number of selections so far
+    bts: BanditState      # per-arm Gaussian posterior sufficient stats
+    reward: RewardState   # (M, K) v / prev_grad buffers (Eqs. 13-14)
+
+
+class RandomState(NamedTuple):
+    """FCF-Random: stateless selection; counts kept for analysis parity."""
+
+    t: jax.Array          # () int32
+    counts: jax.Array     # (M,) float32 — times each arm was transmitted
+
+
+class FullState(NamedTuple):
+    """FCF (Original): every arm every round; only the round counter."""
+
+    t: jax.Array          # () int32
+
+
+class MagnitudeState(NamedTuple):
+    """Greedy mass strategy: accumulated |grad| mass + selection counts."""
+
+    t: jax.Array          # () int32
+    mass: jax.Array       # (M,) float32 — accumulated sum_k |grad_jk|
+    counts: jax.Array     # (M,) float32 — times each arm was transmitted
+
+
+SelectorState = Union[BTSSelectorState, RandomState, FullState, MagnitudeState]
+
+
+def validate_config(cfg: SelectorConfig) -> None:
+    if cfg.strategy not in STRATEGIES:
+        raise ValueError(
+            f"strategy must be one of {STRATEGIES}, got {cfg.strategy!r}")
+    if cfg.strategy == "full" and cfg.num_select != cfg.num_arms:
+        raise ValueError("full strategy requires num_select == num_arms")
+    if not (0 < cfg.num_select <= cfg.num_arms):
+        raise ValueError(
+            f"num_select must be in (0, {cfg.num_arms}], got {cfg.num_select}")
+
+
+def selector_init(cfg: SelectorConfig) -> SelectorState:
+    """Fresh (all-zero) state for ``cfg.strategy``. Pure; needs no PRNG key."""
+    validate_config(cfg)
+    t0 = jnp.zeros((), jnp.int32)
+    if cfg.strategy == "bts":
+        return BTSSelectorState(
+            t=t0,
+            bts=bts_init(cfg.num_arms, cfg.mu_theta, cfg.tau_theta),
+            reward=reward_init(cfg.num_arms, cfg.dim),
+        )
+    if cfg.strategy == "random":
+        return RandomState(t=t0, counts=jnp.zeros((cfg.num_arms,), jnp.float32))
+    if cfg.strategy == "magnitude":
+        return MagnitudeState(
+            t=t0,
+            mass=jnp.zeros((cfg.num_arms,), jnp.float32),
+            counts=jnp.zeros((cfg.num_arms,), jnp.float32),
+        )
+    return FullState(t=t0)
+
+
+def selector_select(
+    cfg: SelectorConfig, state: SelectorState, key: jax.Array
+) -> Tuple[jax.Array, SelectorState]:
+    """One round of arm selection (Alg. 1 line 8).
+
+    Returns ``(indices (num_select,) int32, new_state)``. The caller owns the
+    PRNG stream and passes a fresh subkey each round.
+
+    The selection is a SET (Alg. 1 treats Q* as an unordered payload subset),
+    and it is returned in ascending index order: downstream consumers are all
+    per-row (gather, scatter, rewards), and sorted indices make the hot
+    (B, M) / (M, K) gathers sequential-ish — measurably faster per round on
+    large tables than value-ordered top-k output.
+    """
+    state = state._replace(t=state.t + 1)
+    if cfg.strategy == "full":
+        return jnp.arange(cfg.num_arms, dtype=jnp.int32), state
+    if cfg.strategy == "random":
+        # uniform subset without replacement as top-k of iid uniforms:
+        # O(M log M_s) instead of jax.random.choice's full M-permutation —
+        # the difference between ~0.3ms and ~3.5ms per round at M=10k
+        scores = jax.random.uniform(key, (cfg.num_arms,))
+        _, idx = jax.lax.top_k(scores, cfg.num_select)
+        idx = jnp.sort(idx).astype(jnp.int32)
+        return idx, state._replace(counts=state.counts.at[idx].add(1.0))
+    if cfg.strategy == "magnitude":
+        noise = _MAGNITUDE_NOISE * jax.random.normal(key, state.mass.shape)
+        _, idx = jax.lax.top_k(state.mass + noise, cfg.num_select)
+        idx = jnp.sort(idx).astype(jnp.int32)
+        return idx, state._replace(counts=state.counts.at[idx].add(1.0))
+    idx, _ = bts_select(state.bts, key, cfg.num_select)
+    return jnp.sort(idx).astype(jnp.int32), state
+
+
+def selector_observe(
+    cfg: SelectorConfig,
+    state: SelectorState,
+    indices: jax.Array,    # (num_select,) arms selected this round
+    feedback: jax.Array,   # (num_select, dim) aggregated gradient feedback
+) -> Tuple[SelectorState, jax.Array]:
+    """Feed back the round's aggregated gradients (Alg. 1 lines 14-18).
+
+    Returns ``(new_state, per-arm rewards)``; rewards are zeros for the
+    strategies that do not learn from feedback (uniform logging shape).
+    """
+    if cfg.strategy == "bts":
+        rewards, reward_state = compute_rewards(
+            state.reward, indices, feedback,
+            t=state.t.astype(jnp.float32),
+            gamma=cfg.gamma, beta2=cfg.beta2, mode=cfg.reward_mode,
+        )
+        if cfg.reward_norm:
+            mu = jnp.mean(rewards)
+            sd = jnp.maximum(jnp.std(rewards), 1e-9)
+            rewards = (rewards - mu) / sd
+        return (
+            state._replace(
+                bts=bts_update(state.bts, indices, rewards),
+                reward=reward_state,
+            ),
+            rewards,
+        )
+    if cfg.strategy == "magnitude":
+        mass = jnp.sum(jnp.abs(feedback), axis=-1)
+        return state._replace(mass=state.mass.at[indices].add(mass)), mass
+    return state, jnp.zeros((indices.shape[0],), jnp.float32)
+
+
+def selector_counts(cfg: SelectorConfig, state: SelectorState) -> jax.Array:
+    """Per-arm transmission counts, meaningful for every strategy.
+
+    bts: posterior observation counts n^j (updated at observe time);
+    random/magnitude: counts accumulated at select time; full: t per arm.
+    """
+    if cfg.strategy == "bts":
+        return state.bts.counts
+    if cfg.strategy in ("random", "magnitude"):
+        return state.counts
+    return jnp.full(
+        (cfg.num_arms,), state.t.astype(jnp.float32), jnp.float32)

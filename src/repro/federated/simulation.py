@@ -1,13 +1,31 @@
 """Round-based federated simulation of FCF / FCF-BTS / FCF-Random (Sec. 6).
 
-Each FL iteration t:
-  1. server (bandit) selects the payload subset and publishes Q*        | Alg.1
-  2. a cohort of Theta users is sampled (simulating the asynchronous    |
-     arrival of exactly-Theta updates that triggers a global commit),   |
-  3. each user solves its private p_i from (Q*, x_i) and returns the    |
-     item gradients; the simulation computes the cohort in one vmap'd   |
-     jit call but the server only ever sees the aggregate,              |
-  4. server commits: sparse Adam on selected rows, reward + BTS update. |
+Functional-core round engine. Each FL iteration t (Alg. 1):
+  1. server (bandit) selects the payload subset and publishes Q*,
+  2. a cohort of Theta users is sampled (simulating the asynchronous
+     arrival of exactly-Theta updates that triggers a global commit),
+  3. each user solves its private p_i from (Q*, x_i) and returns the
+     item gradients; the server only ever sees the cohort aggregate,
+  4. server commits: scatter-based sparse Adam on the selected rows,
+     reward + BTS posterior update.
+
+The whole round is ONE pure function (:func:`repro.cf.server.server_round_step`)
+and the training loop is compiled end-to-end:
+
+  * ``backend="scan"`` (default): cohort indices for all rounds are
+    pre-sampled, the loop runs as ``jax.lax.scan`` over the fused step in
+    chunks of ``eval_every`` rounds, with evaluation between chunks
+    ("periodic chunked evaluation"). One compile, zero per-round Python
+    dispatch — the engine for thousand-round experiment grids.
+  * ``backend="python"``: the same jitted step driven round-by-round from
+    Python. Kept as the reference implementation for equivalence testing
+    (same PRNG seed => bit-identical selections, Q trajectory and byte
+    counters) and as the dispatch-overhead baseline for
+    ``benchmarks/round_engine.py``.
+
+Sweep entry points (:func:`run_seed_sweep`, :func:`run_strategy_sweep`)
+vectorize the scan engine with ``jax.vmap`` over per-seed server states, so a
+multi-rebuild experiment cell runs as a single compiled program.
 
 Evaluation (Sec. 6.2): every ``eval_every`` rounds, a fixed user sample
 downloads the *full* global model (the paper's inference-time download),
@@ -17,21 +35,27 @@ smoothing at read-out time.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cf.local import local_update
 from repro.cf.metrics import RecMetrics, evaluate_users
 from repro.cf.model import CFConfig, cf_init
-from repro.cf.server import FCFServer, FCFServerConfig
-from repro.core.payload import make_selector
+from repro.cf.server import (
+    FCFServerConfig, ServerState, server_init, server_round_step,
+)
+from repro.core.selector import (
+    STRATEGIES, SelectorConfig, selector_counts,
+)
+from repro.optim.adam import AdamConfig
 from repro.utils.logging import MetricLogger, get_logger
 
 log = get_logger("repro.fl")
+
+BACKENDS = ("scan", "python")
 
 
 @dataclass
@@ -54,6 +78,11 @@ class FLSimConfig:
     reward_norm: bool = True             # per-round reward standardization
     eval_every: int = 25
     eval_users: int = 512
+    # evaluate the eval cohort in user-chunks of this size (None = one shot);
+    # bounds the (B, M) score matrix at web-scale M
+    eval_user_chunk: Optional[int] = None
+    backend: str = "scan"                # "scan" | "python" (reference)
+    record_selections: bool = False      # surface per-round indices/rewards
     seed: int = 0
 
 
@@ -65,79 +94,347 @@ class SimResult:
     bytes_up: int
     rounds: int
     selection_counts: np.ndarray
+    # per-round (rounds, M_s) selected indices / rewards, populated only
+    # when config.record_selections (equivalence tests, selection audits)
+    selections: Optional[np.ndarray] = None
+    rewards: Optional[np.ndarray] = None
+    # the raw final server pytree (traced byte counters included)
+    server_state: Optional[ServerState] = field(default=None, repr=False)
 
     def smoothed(self, key: str, window: int = 10) -> float:
         return self.history.rolling_mean(key, window)
 
 
-def run_fcf_simulation(
-    train_x: np.ndarray,
-    test_x: np.ndarray,
-    config: FLSimConfig,
-    csv_path: Optional[str] = None,
-) -> SimResult:
-    num_users, num_items = train_x.shape
+# ===================================================================== #
+# setup
+# ===================================================================== #
+class _SimSetup(NamedTuple):
+    cf_cfg: CFConfig
+    sel_cfg: SelectorConfig
+    srv_cfg: FCFServerConfig
+    state0: ServerState
+    cohorts: np.ndarray        # (rounds, B) int32 pre-sampled cohort ids
+    eval_train: jax.Array      # (E, M)
+    eval_test: jax.Array       # (E, M)
+
+
+def _num_select(config: FLSimConfig, num_items: int) -> int:
+    if config.strategy == "full":
+        return num_items
+    return max(1, int(round(config.keep_fraction * num_items)))
+
+
+def _chunk_bounds(rounds: int, eval_every: int) -> List[Tuple[int, int]]:
+    """[(start, end)] chunks whose right edges are the evaluation rounds."""
+    points = sorted({t for t in range(eval_every, rounds + 1, eval_every)}
+                    | {rounds})
+    bounds, start = [], 0
+    for p in points:
+        bounds.append((start, p))
+        start = p
+    return bounds
+
+
+def _build(train_j: jax.Array, test_j: jax.Array,
+           config: FLSimConfig) -> _SimSetup:
+    """Pure-data setup shared by every backend: states, cohorts, eval split.
+
+    PRNG discipline matches the legacy stateful path: PRNGKey(seed) splits
+    into (init, users, eval); the selection stream is PRNGKey(seed+13) split
+    once per round; cohorts come from numpy default_rng(seed+31).
+    """
+    if config.strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {config.strategy!r}")
+    if config.backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, "
+                         f"got {config.backend!r}")
+    num_users, num_items = train_j.shape
     key = jax.random.PRNGKey(config.seed)
-    k_init, k_users, k_eval = jax.random.split(key, 3)
+    k_init, _k_users, k_eval = jax.random.split(key, 3)
 
     cf_cfg = CFConfig(
         num_users=num_users, num_items=num_items,
         num_factors=config.num_factors, l2=config.l2, alpha=config.alpha,
     )
-    model = cf_init(cf_cfg, k_init)
-
-    selector = make_selector(
-        config.strategy, num_arms=num_items, dim=config.num_factors,
-        keep_fraction=config.keep_fraction, gamma=config.gamma,
-        beta2=config.beta2, mu_theta=config.mu_theta,
+    sel_cfg = SelectorConfig(
+        strategy=config.strategy, num_arms=num_items,
+        num_select=_num_select(config, num_items), dim=config.num_factors,
+        gamma=config.gamma, beta2=config.beta2, mu_theta=config.mu_theta,
         tau_theta=config.tau_theta, reward_mode=config.reward_mode,
         reward_norm=config.reward_norm,
-        seed=config.seed + 13,
     )
-    server = FCFServer(
-        item_factors=model.item_factors, selector=selector,
-        config=FCFServerConfig(theta=config.theta,
-                               reward_feedback=config.reward_feedback,
-                               l2=config.l2),
+    srv_cfg = FCFServerConfig(
+        theta=config.theta,
+        adam=AdamConfig(lr=config.lr, beta1=config.beta1,
+                        beta2=config.beta2, eps=1e-8),
+        reward_feedback=config.reward_feedback, l2=config.l2,
     )
-    server.config.adam = server.config.adam._replace(
-        lr=config.lr, beta1=config.beta1, beta2=config.beta2)
+    model = cf_init(cf_cfg, k_init)
+    state0 = server_init(model.item_factors, sel_cfg,
+                         key=jax.random.PRNGKey(config.seed + 13),
+                         config=srv_cfg)
 
-    train_j = jnp.asarray(train_x, jnp.float32)
-    test_j = jnp.asarray(test_x, jnp.float32)
+    cohort_n = min(config.theta, num_users)
+    rng = np.random.default_rng(config.seed + 31)
+    cohorts = np.stack([
+        rng.choice(num_users, size=cohort_n, replace=False)
+        for _ in range(config.rounds)
+    ]).astype(np.int32)
 
-    # fixed evaluation cohort (same across strategies given the same seed)
     eval_n = min(config.eval_users, num_users)
     eval_ids = jax.random.choice(k_eval, num_users, (eval_n,), replace=False)
-    eval_train = train_j[eval_ids]
-    eval_test = test_j[eval_ids]
+    return _SimSetup(
+        cf_cfg=cf_cfg, sel_cfg=sel_cfg, srv_cfg=srv_cfg, state0=state0,
+        cohorts=cohorts,
+        eval_train=train_j[eval_ids], eval_test=test_j[eval_ids],
+    )
 
-    history = MetricLogger(csv_path)
-    rng = np.random.default_rng(config.seed + 31)
 
-    for t in range(1, config.rounds + 1):
-        q_star = server.begin_round()
-        cohort = rng.choice(num_users, size=min(config.theta, num_users), replace=False)
-        x_sub = train_j[jnp.asarray(cohort)][:, server.selected]    # (Theta, M_s)
-        _, grads = local_update(q_star, x_sub, cf_cfg)
-        server.receive(grads, num_users=len(cohort))
+def _make_round_fn(train_j: jax.Array, setup: _SimSetup):
+    """(state, cohort_ids (B,)) -> (state, RoundAux): one fused FL round."""
+    sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
 
-        if t % config.eval_every == 0 or t == config.rounds:
-            m = evaluate_users(
-                server.item_factors, eval_train, eval_test,
-                l2=config.l2, alpha=config.alpha,
-            )
-            history.log(t, **m.as_dict())
+    def round_fn(state: ServerState, cohort: jax.Array):
+        # lazy cohort slice: one fused (user-row x item-column) gather once
+        # the payload subset is known, instead of a (B, M) copy per round
+        def cohort_x(idx):
+            return train_j[cohort[:, None], idx[None, :]]
+        return server_round_step(
+            state, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg)
 
+    return round_fn
+
+
+def _evaluate(q: jax.Array, eval_train: jax.Array, eval_test: jax.Array,
+              config: FLSimConfig) -> RecMetrics:
+    """Full-model eval, optionally chunked over users (bounded memory).
+
+    Chunk results combine exactly: each chunk mean is re-weighted by its
+    count of valid (non-empty-test) users before averaging.
+    """
+    chunk = config.eval_user_chunk
+    n = eval_train.shape[0]
+    if chunk is None or chunk >= n:
+        return evaluate_users(q, eval_train, eval_test,
+                              l2=config.l2, alpha=config.alpha)
+    sums = np.zeros(4)
+    weight = 0.0
+    for s in range(0, n, chunk):
+        tr, te = eval_train[s:s + chunk], eval_test[s:s + chunk]
+        m = evaluate_users(q, tr, te, l2=config.l2, alpha=config.alpha)
+        valid = float((np.asarray(te).sum(axis=-1) > 0).sum())
+        sums += valid * np.array([float(m.precision), float(m.recall),
+                                  float(m.f1), float(m.map)])
+        weight += valid
+    vals = sums / max(weight, 1.0)
+    return RecMetrics(*vals)
+
+
+def _finalize(setup: _SimSetup, config: FLSimConfig, state: ServerState,
+              history: MetricLogger, aux_chunks: List,
+              csv_path: Optional[str]) -> SimResult:
     final = {
         k: history.rolling_mean(k, 10)
         for k in ("precision", "recall", "f1", "map")
     }
     if csv_path:
         history.to_csv()
+    rounds = int(state.t)
+    # exact byte accounting: the per-round payload is shape-constant, so the
+    # totals are rounds x constants. (The traced float32 counters in the
+    # state are approximate once totals pass the float32 exact-integer range
+    # ~2^24; in-graph consumers needing exact totals at that scale should
+    # derive them from state.t x the per-round constants instead.)
+    itemsize = np.dtype(np.float32).itemsize
+    per_round_down = setup.sel_cfg.num_select * setup.cf_cfg.num_factors \
+        * itemsize
+    per_round_up = per_round_down * setup.cohorts.shape[1]
+    selections = rewards = None
+    if aux_chunks:
+        selections = np.concatenate(
+            [np.asarray(a.indices) for a in aux_chunks])
+        rewards = np.concatenate([np.asarray(a.rewards) for a in aux_chunks])
     return SimResult(
         final=final, history=history,
-        bytes_down=server.bytes_down, bytes_up=server.bytes_up,
-        rounds=server.rounds_committed,
-        selection_counts=selector.selection_counts(),
+        bytes_down=rounds * per_round_down,
+        bytes_up=rounds * per_round_up,
+        rounds=rounds,
+        selection_counts=np.asarray(
+            selector_counts(setup.sel_cfg, state.sel)),
+        selections=selections, rewards=rewards, server_state=state,
     )
+
+
+# ===================================================================== #
+# single-run engines
+# ===================================================================== #
+def run_fcf_simulation(
+    train_x: np.ndarray,
+    test_x: np.ndarray,
+    config: FLSimConfig,
+    csv_path: Optional[str] = None,
+) -> SimResult:
+    """Run one FL simulation with the backend named by ``config.backend``."""
+    train_j = jnp.asarray(train_x, jnp.float32)
+    test_j = jnp.asarray(test_x, jnp.float32)
+    setup = _build(train_j, test_j, config)
+    round_fn = _make_round_fn(train_j, setup)
+    record = config.record_selections
+
+    def scan_chunk(state, cohorts):
+        def body(st, cohort):
+            st, aux = round_fn(st, cohort)
+            return st, (aux if record else None)
+        return jax.lax.scan(body, state, cohorts)
+
+    history = MetricLogger(csv_path)
+    state = setup.state0
+    aux_chunks: List = []
+
+    if config.backend == "scan":
+        run_chunk = jax.jit(scan_chunk)
+        for start, end in _chunk_bounds(config.rounds, config.eval_every):
+            state, aux = run_chunk(
+                state, jnp.asarray(setup.cohorts[start:end]))
+            if record:
+                aux_chunks.append(aux)
+            m = _evaluate(state.q, setup.eval_train, setup.eval_test, config)
+            history.log(end, **m.as_dict())
+    else:  # "python": the per-round-dispatch reference loop
+        step = jax.jit(round_fn)
+        for t in range(1, config.rounds + 1):
+            state, aux = step(state, jnp.asarray(setup.cohorts[t - 1]))
+            if record:
+                aux_chunks.append(jax.tree.map(lambda a: a[None], aux))
+            if t % config.eval_every == 0 or t == config.rounds:
+                m = _evaluate(state.q, setup.eval_train, setup.eval_test,
+                              config)
+                history.log(t, **m.as_dict())
+
+    return _finalize(setup, config, state, history, aux_chunks, csv_path)
+
+
+# ===================================================================== #
+# vmapped sweep entry points
+# ===================================================================== #
+def run_seed_sweep(
+    train_x: np.ndarray,
+    test_x: np.ndarray,
+    config: FLSimConfig,
+    seeds: Sequence[int],
+) -> List[SimResult]:
+    """Run one config across many seeds as a single vmapped scan program.
+
+    ``train_x``/``test_x`` are either a single (N, M) matrix shared by every
+    seed, or stacked (S, N, M) per-seed matrices (the experiment grid's
+    rebuild seeds regenerate the dataset too). Every seed gets its own model
+    init, selection PRNG stream, cohort schedule and eval cohort (identical
+    to what ``run_fcf_simulation`` would use for that seed); the round loop
+    executes as ``vmap(scan(server_round_step))`` so the whole rebuild axis
+    of an experiment cell costs one compile + one device program.
+    """
+    if not seeds:
+        return []
+    train_np = np.asarray(train_x)
+    test_np = np.asarray(test_x)
+    per_seed_data = train_np.ndim == 3
+    if per_seed_data and train_np.shape[0] != len(seeds):
+        raise ValueError(
+            f"stacked data has {train_np.shape[0]} slices for "
+            f"{len(seeds)} seeds")
+
+    def data_for(i):
+        if per_seed_data:
+            return (jnp.asarray(train_np[i], jnp.float32),
+                    jnp.asarray(test_np[i], jnp.float32))
+        return (jnp.asarray(train_np, jnp.float32),
+                jnp.asarray(test_np, jnp.float32))
+
+    trains = []
+    setups = []
+    for i, s in enumerate(seeds):
+        train_j, test_j = data_for(i)
+        trains.append(train_j)
+        setups.append(_build(train_j, test_j, replace(config, seed=int(s))))
+    setup0 = setups[0]
+    sel_cfg, srv_cfg, cf_cfg = setup0.sel_cfg, setup0.srv_cfg, setup0.cf_cfg
+    record = config.record_selections
+
+    state = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[s.state0 for s in setups])
+    cohorts = np.stack([s.cohorts for s in setups])          # (S, R, B)
+    eval_train = jnp.stack([s.eval_train for s in setups])   # (S, E, M)
+    eval_test = jnp.stack([s.eval_test for s in setups])
+    train_batched = jnp.stack(trains) if per_seed_data else trains[0]
+
+    def scan_chunk(st, ch, train_j):
+        def body(s, cohort):
+            def cohort_x(idx):
+                return train_j[cohort[:, None], idx[None, :]]
+            s, aux = server_round_step(
+                s, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg)
+            return s, (aux if record else None)
+        return jax.lax.scan(body, st, ch)
+
+    run_chunk = jax.jit(jax.vmap(
+        scan_chunk, in_axes=(0, 0, 0 if per_seed_data else None)))
+    if config.eval_user_chunk is None:
+        eval_vmapped = jax.jit(jax.vmap(
+            lambda q, tr, te: evaluate_users(q, tr, te, l2=config.l2,
+                                             alpha=config.alpha)))
+
+        def eval_all(q_stack):
+            return eval_vmapped(q_stack, eval_train, eval_test)
+    else:
+        # memory-bounded chunked eval: per-seed python loop (the vmapped
+        # one-shot eval would materialize the full (S, E, M) score tensor,
+        # defeating the point of eval_user_chunk)
+        def eval_all(q_stack):
+            per_seed = [
+                _evaluate(q_stack[i], eval_train[i], eval_test[i], config)
+                for i in range(len(seeds))
+            ]
+            return RecMetrics(*[
+                jnp.stack([jnp.asarray(float(getattr(m, k)))
+                           for m in per_seed])
+                for k in ("precision", "recall", "f1", "map")
+            ])
+
+    histories = [MetricLogger() for _ in seeds]
+    aux_chunks: List = []
+    for start, end in _chunk_bounds(config.rounds, config.eval_every):
+        state, aux = run_chunk(state, jnp.asarray(cohorts[:, start:end]),
+                               train_batched)
+        if record:
+            aux_chunks.append(aux)
+        metrics = eval_all(state.q)
+        for i, h in enumerate(histories):
+            h.log(end, **{k: float(getattr(metrics, k)[i])
+                          for k in ("precision", "recall", "f1", "map")})
+
+    results = []
+    for i, s in enumerate(seeds):
+        state_i = jax.tree.map(lambda a: a[i], state)
+        aux_i = [jax.tree.map(lambda a: a[i], a) for a in aux_chunks]
+        results.append(_finalize(setups[i], config, state_i, histories[i],
+                                 aux_i, csv_path=None))
+    return results
+
+
+def run_strategy_sweep(
+    train_x: np.ndarray,
+    test_x: np.ndarray,
+    config: FLSimConfig,
+    strategies: Sequence[str] = STRATEGIES,
+    seeds: Sequence[int] = (0,),
+) -> Dict[str, List[SimResult]]:
+    """Sweep strategies x seeds: one vmapped scan program per strategy.
+
+    Strategies carry differently-shaped selector states (and ``full`` a
+    different payload width), so the strategy axis is a Python loop over
+    compiled seed sweeps rather than a vmap axis.
+    """
+    return {
+        s: run_seed_sweep(train_x, test_x, replace(config, strategy=s), seeds)
+        for s in strategies
+    }

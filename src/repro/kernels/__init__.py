@@ -9,6 +9,10 @@ wrappers that auto-interpret on CPU.
 """
 from repro.kernels.ops import (
     attention, fcf_item_gradients, gather_rows, scatter_add_rows,
+    scatter_set_rows,
 )
 
-__all__ = ["attention", "fcf_item_gradients", "gather_rows", "scatter_add_rows"]
+__all__ = [
+    "attention", "fcf_item_gradients", "gather_rows", "scatter_add_rows",
+    "scatter_set_rows",
+]

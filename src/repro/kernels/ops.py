@@ -58,6 +58,13 @@ def scatter_add_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.A
     return _pg.scatter_add_rows(table, idx, rows, interpret=_interpret())
 
 
+def scatter_set_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+    """Payload row commit: Q[idx] = rows. ``idx`` must be unique."""
+    if _use_ref():
+        return _ref.scatter_set_rows_ref(table, idx, rows)
+    return _pg.scatter_set_rows(table, idx, rows, interpret=_interpret())
+
+
 def attention(
     q: jax.Array, k: jax.Array, v: jax.Array,
     *,

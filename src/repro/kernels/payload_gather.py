@@ -53,6 +53,47 @@ def gather_rows(
     )(idx.astype(jnp.int32), table)
 
 
+def _scatter_set_kernel(idx_ref, rows_ref, table_in_ref, out_ref):
+    # aliased in/out: replace the table row with the payload row.
+    del table_in_ref
+    out_ref[...] = rows_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_set_rows(
+    table: jax.Array,      # (M, K) — donated and updated in place
+    idx: jax.Array,        # (M_s,) unique row ids
+    rows: jax.Array,       # (M_s, K)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """table[idx[i]] = rows[i]; the table is aliased (no O(M*K) copy).
+
+    The row-replace flavour of :func:`scatter_add_rows` — this is the commit
+    path of the payload-selected sparse Adam update, where the server writes
+    fully-formed new rows (params and moments) back into the global table.
+    """
+    m_s = idx.shape[0]
+    k = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m_s,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, idx_ref: (i, 0)),           # rows
+            pl.BlockSpec((1, k), lambda i, idx_ref: (idx_ref[i], 0)),  # table
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_set_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        # alias the table operand (positional arg 2: idx, rows, table)
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), rows, table)
+
+
 def _scatter_add_kernel(idx_ref, rows_ref, table_in_ref, out_ref):
     # aliased in/out: accumulate the payload gradient row into the table row.
     out_ref[...] = table_in_ref[...] + rows_ref[...].astype(out_ref.dtype)

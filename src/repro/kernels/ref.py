@@ -34,6 +34,13 @@ def scatter_add_rows_ref(
     return table.at[idx].add(rows)
 
 
+def scatter_set_rows_ref(
+    table: jax.Array, idx: jax.Array, rows: jax.Array
+) -> jax.Array:
+    """table[idx[i]] = rows[i] — payload row commit (unique idx)."""
+    return table.at[idx].set(rows.astype(table.dtype))
+
+
 def mha_chunked_ref(
     q: jax.Array,                  # (B, H, S, D)
     k: jax.Array,                  # (B, KVH, T, D)

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.utils import hints
+from repro.utils.compat import shard_map
 from repro.models.layers import _he, apply_rope, init_rmsnorm, rmsnorm
 
 
@@ -181,7 +182,7 @@ def _decode_attention_kv_sharded(q, ck, cv, k_new, v_new, pos, window):
         return out.astype(ql.dtype), ckl, cvl
 
     kv_spec = P(baxes, None, "model", None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(baxes), kv_spec, kv_spec, P(baxes), P(baxes)),
         out_specs=(P(baxes), kv_spec, kv_spec),

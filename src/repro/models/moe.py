@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import _he
 from repro.utils import hints
+from repro.utils.compat import shard_map
 
 
 def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype=jnp.float32):
@@ -153,7 +154,7 @@ def _moe_manual(params, x, *, num_experts, top_k, capacity_factor,
         # in-body pmean trips the same XLA CPU CHECK)
         return out.astype(xl.dtype), aux[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh, in_specs=(wspec, P(baxes)),
         out_specs=(P(baxes), P(baxes)), check_vma=False)
     out, aux_shards = fn(params, x)

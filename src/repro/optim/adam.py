@@ -7,6 +7,9 @@ Two entry points:
     selected rows' parameters *and moments* advance, with per-row timestep
     bias correction. This is the server-side update of Algorithm 1 line 13 for
     payload-selected item-factor (or vocab-embedding) rows.
+  * ``adam_update_rows_scattered`` — same update with row traffic routed
+    through the payload gather/scatter Pallas kernels; used by the fused
+    ``server_round_step`` so a compiled FL round never copies the full table.
 
 Paper server hyper-parameters (Table 3): beta1=0.1, beta2=0.99, eta=0.01,
 eps=1e-8.
@@ -89,6 +92,46 @@ def adam_update_rows(
         AdamState(
             m=state.m.at[indices].set(m_rows),
             v=state.v.at[indices].set(v_rows),
+            t=state.t.at[indices].set(t_rows),
+        ),
+    )
+
+
+def adam_update_rows_scattered(
+    grad_rows: jax.Array,   # (M_s, K) aggregated gradient for selected rows
+    indices: jax.Array,     # (M_s,) row ids
+    state: AdamState,       # per-row state over the full (M, K) table
+    table: jax.Array,       # (M, K) full parameter table
+    config: AdamConfig = AdamConfig(),
+) -> Tuple[jax.Array, AdamState]:
+    """:func:`adam_update_rows` with all row traffic routed through the
+    payload gather / scatter kernels (:mod:`repro.kernels.ops`).
+
+    Semantically identical to the ``.at[idx]`` variant; on TPU the four
+    (M, K) tables (params, m, v) never materialize an O(M*K) copy — only the
+    selected (M_s, K) tiles move through VMEM, which is what makes the fused
+    scan round step cheap at LLM-vocab scale. On CPU the ops layer dispatches
+    to the jnp oracles, so the math is bit-identical across backends.
+    """
+    from repro.kernels import ops  # deferred: keep optim importable standalone
+
+    b1, b2 = config.beta1, config.beta2
+    t_rows = state.t[indices] + 1            # (M_s,) 1-D: plain jnp indexing
+    tf = t_rows.astype(jnp.float32)[:, None]
+
+    m_rows = b1 * ops.gather_rows(state.m, indices) + (1 - b1) * grad_rows
+    v_rows = (b2 * ops.gather_rows(state.v, indices)
+              + (1 - b2) * jnp.square(grad_rows))
+    mhat = m_rows / (1.0 - jnp.power(b1, tf))
+    vhat = v_rows / (1.0 - jnp.power(b2, tf))
+    new_rows = (ops.gather_rows(table, indices)
+                - config.lr * mhat / (jnp.sqrt(vhat) + config.eps))
+
+    return (
+        ops.scatter_set_rows(table, indices, new_rows),
+        AdamState(
+            m=ops.scatter_set_rows(state.m, indices, m_rows),
+            v=ops.scatter_set_rows(state.v, indices, v_rows),
             t=state.t.at[indices].set(t_rows),
         ),
     )

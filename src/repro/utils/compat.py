@@ -1,0 +1,21 @@
+"""Version compatibility shims for the jax API surface.
+
+The repo targets the modern top-level ``jax.shard_map`` API; older jax
+releases (< 0.5) only ship ``jax.experimental.shard_map.shard_map`` with the
+``check_rep`` keyword where the new API has ``check_vma``. All internal code
+imports :func:`shard_map` from here so both generations work unchanged.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with graceful fallback to the experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

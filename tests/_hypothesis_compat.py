@@ -1,0 +1,101 @@
+"""Optional-hypothesis shim for the test suite.
+
+``hypothesis`` is not part of the baked container image, and a hard import
+used to fail collection for whole modules, taking their deterministic tests
+down too. Import the property-test tools from here instead:
+
+    from _hypothesis_compat import given, settings, st, hnp
+
+When hypothesis IS installed, these are the real objects. When it is not,
+``given`` degrades to a deterministic fallback: the wrapped property test
+runs against a handful of fixed pseudo-random samples drawn from lightweight
+stand-ins for the strategies actually used in this suite (``st.integers``,
+``st.floats``, ``hnp.arrays``). Weaker than real shrinking-based property
+testing, but the invariants still get exercised and — crucially — the
+deterministic tests in the same module still collect and run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        """Minimal sampler standing in for a hypothesis strategy."""
+
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: np.random.Generator):
+            return self._sample_fn(rng)
+
+    class _IntStrategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.integers(len(options))])
+
+        @staticmethod
+        def none() -> _Strategy:
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def one_of(*strategies: _Strategy) -> _Strategy:
+            return _Strategy(
+                lambda rng: strategies[rng.integers(len(strategies))]
+                .sample(rng))
+
+    class _NumpyStrategies:
+        @staticmethod
+        def arrays(dtype, shape, elements: _Strategy) -> _Strategy:
+            def sample(rng):
+                flat = [elements.sample(rng) for _ in range(int(np.prod(shape)))]
+                return np.asarray(flat, dtype=dtype).reshape(shape)
+            return _Strategy(sample)
+
+    st = _IntStrategies()
+    hnp = _NumpyStrategies()
+
+    def settings(*_args, **_kwargs):
+        """No-op replacement for ``hypothesis.settings`` as a decorator."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        """Run the test body on a few fixed pseudo-random samples."""
+        def deco(fn):
+            # NOT functools.wraps: pytest must see a zero-arg signature, or
+            # it would treat the strategy parameters as fixture requests
+            def wrapper():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {name: s.sample(rng)
+                             for name, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+
+__all__ = ["given", "settings", "st", "hnp", "HAVE_HYPOTHESIS"]

@@ -6,7 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import fcf_grad as fcf_mod
 from repro.kernels import flash_attention as flash_mod
@@ -97,6 +97,23 @@ def test_scatter_add_rows_sweep(m, k, ms):
     got = pg_mod.scatter_add_rows(table.copy(), idx, rows, interpret=True)
     want = ref.scatter_add_rows_ref(table, idx, rows)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,ms", [(100, 16, 10), (500, 25, 50), (64, 8, 64)])
+def test_scatter_set_rows_sweep(m, k, ms):
+    table = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    idx = jnp.asarray(RNG.choice(m, ms, replace=False).astype(np.int32))
+    rows = jnp.asarray(RNG.standard_normal((ms, k)), jnp.float32)
+    got = pg_mod.scatter_set_rows(table.copy(), idx, rows, interpret=True)
+    want = ref.scatter_set_rows_ref(table, idx, rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # selected rows replaced, untouched rows bit-identical
+    np.testing.assert_array_equal(np.asarray(got)[np.asarray(idx)],
+                                  np.asarray(rows))
+    mask = np.ones(m, bool)
+    mask[np.asarray(idx)] = False
+    np.testing.assert_array_equal(np.asarray(got)[mask],
+                                  np.asarray(table)[mask])
 
 
 def test_gather_then_scatter_roundtrip():

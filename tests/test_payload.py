@@ -36,8 +36,28 @@ def test_full_strategy_selects_everything():
 def test_reduction_pct():
     sel = make_selector("random", num_arms=1000, dim=4, keep_fraction=0.1)
     assert sel.reduction_pct == pytest.approx(90.0)
-    assert sel.round_payload_bytes == payload_bytes(100, 4)
-    assert sel.full_payload_bytes == payload_bytes(1000, 4)
+    # the simulation transmits float32, so the selector's accounting defaults
+    # to dtype_bits=32 (the bare payload_bytes default stays at the paper's
+    # Table-1 float64 convention)
+    assert sel.round_payload_bytes == payload_bytes(100, 4, 32)
+    assert sel.full_payload_bytes == payload_bytes(1000, 4, 32)
+    assert sel.round_payload_bytes == 100 * 4 * 4
+
+
+def test_round_payload_bytes_matches_transmitted_dtype():
+    """Regression (payload-accounting fix): round_payload_bytes must equal
+    the bytes the server actually moves per round for the simulated float32
+    payload — it used to report 2x (float64 default)."""
+    import jax.numpy as jnp
+
+    sel = make_selector("random", num_arms=64, dim=8, keep_fraction=0.5)
+    idx = sel.select()
+    q_star = jnp.zeros((64, 8), jnp.float32)[idx]
+    assert sel.round_payload_bytes == q_star.size * q_star.dtype.itemsize
+    # opting back into the paper's float64 accounting stays possible
+    sel64 = make_selector("random", num_arms=64, dim=8, keep_fraction=0.5,
+                          dtype_bits=64)
+    assert sel64.round_payload_bytes == 2 * sel.round_payload_bytes
 
 
 def test_bad_strategy_raises():

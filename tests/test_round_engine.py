@@ -1,0 +1,193 @@
+"""Functional round engine: scan-vs-python equivalence + sweep smoke tests.
+
+The ``lax.scan``-compiled engine must reproduce the per-round-dispatch
+Python reference loop bit-for-bit under the same PRNG seed: identical
+selections, identical Q trajectory, identical (traced) byte counters — for
+every strategy. This is what licenses using the fast engine for the paper's
+experiment grids.
+"""
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.payload import payload_bytes
+from repro.core.selector import (
+    SelectorConfig, selector_init, selector_observe, selector_select,
+)
+from repro.federated.simulation import (
+    FLSimConfig, run_fcf_simulation, run_seed_sweep, run_strategy_sweep,
+)
+
+STRATEGIES = ("bts", "random", "full", "magnitude")
+
+
+def _mini_data(seed=0, users=60, items=80):
+    rng = np.random.default_rng(seed)
+    train = (rng.random((users, items)) < 0.15).astype(np.float32)
+    test = (rng.random((users, items)) < 0.05).astype(np.float32)
+    return train, test
+
+
+def _cfg(strategy, **kw):
+    base = dict(strategy=strategy, keep_fraction=0.25, rounds=12, theta=10,
+                eval_every=6, eval_users=40, seed=0, record_selections=True)
+    base.update(kw)
+    return FLSimConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _mini_data()
+
+
+# --------------------------------------------------------------------- #
+# scan == python, bit for bit
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_scan_matches_python_loop_bitwise(data, strategy):
+    train, test = data
+    cfg = _cfg(strategy)
+    scan = run_fcf_simulation(train, test, replace(cfg, backend="scan"))
+    py = run_fcf_simulation(train, test, replace(cfg, backend="python"))
+
+    # same selections every round
+    np.testing.assert_array_equal(scan.selections, py.selections)
+    # same bandit rewards
+    np.testing.assert_array_equal(scan.rewards, py.rewards)
+    # same final global model, bit for bit
+    np.testing.assert_array_equal(np.asarray(scan.server_state.q),
+                                  np.asarray(py.server_state.q))
+    # same Adam moments
+    np.testing.assert_array_equal(np.asarray(scan.server_state.opt.m),
+                                  np.asarray(py.server_state.opt.m))
+    # same traced byte counters and exact byte totals
+    assert float(scan.server_state.bytes_down) == \
+        float(py.server_state.bytes_down)
+    assert float(scan.server_state.bytes_up) == \
+        float(py.server_state.bytes_up)
+    assert (scan.bytes_down, scan.bytes_up) == (py.bytes_down, py.bytes_up)
+    # same selection counts and metric trajectory
+    np.testing.assert_array_equal(scan.selection_counts, py.selection_counts)
+    assert scan.history.series("f1") == py.history.series("f1")
+
+
+def test_scan_engine_q_actually_changes(data):
+    train, test = data
+    res = run_fcf_simulation(train, test, _cfg("bts"))
+    assert res.rounds == 12
+    q = np.asarray(res.server_state.q)
+    assert np.isfinite(q).all()
+    assert np.abs(q).max() > 0
+
+
+# --------------------------------------------------------------------- #
+# byte accounting regression (float32 payload, not the Table-1 float64)
+# --------------------------------------------------------------------- #
+def test_byte_counters_match_float32_payload(data):
+    train, test = data
+    cfg = _cfg("random")
+    res = run_fcf_simulation(train, test, cfg)
+    num_select = max(1, int(round(cfg.keep_fraction * train.shape[1])))
+    per_round = payload_bytes(num_select, cfg.num_factors, dtype_bits=32)
+    assert res.bytes_down == cfg.rounds * per_round
+    assert res.bytes_up == cfg.rounds * per_round * cfg.theta
+    # the traced in-state counters agree (exactly, at this scale)
+    assert float(res.server_state.bytes_down) == res.bytes_down
+    assert float(res.server_state.bytes_up) == res.bytes_up
+
+
+# --------------------------------------------------------------------- #
+# vmapped sweeps
+# --------------------------------------------------------------------- #
+def test_vmap_seed_sweep_matches_single_runs(data):
+    train, test = data
+    cfg = _cfg("bts")
+    sweep = run_seed_sweep(train, test, cfg, seeds=[0, 1])
+    assert len(sweep) == 2
+    for seed, res in zip([0, 1], sweep):
+        single = run_fcf_simulation(train, test, replace(cfg, seed=seed))
+        np.testing.assert_array_equal(res.selections, single.selections)
+        np.testing.assert_array_equal(np.asarray(res.server_state.q),
+                                      np.asarray(single.server_state.q))
+    # different seeds must produce different trajectories
+    assert not np.array_equal(sweep[0].selections, sweep[1].selections)
+
+
+def test_seed_sweep_accepts_stacked_per_seed_data():
+    trains, tests = zip(*[_mini_data(seed=s) for s in (3, 4)])
+    cfg = _cfg("random")
+    sweep = run_seed_sweep(np.stack(trains), np.stack(tests), cfg,
+                           seeds=[3, 4])
+    assert len(sweep) == 2
+    for res in sweep:
+        assert res.rounds == cfg.rounds
+        assert np.isfinite(np.asarray(res.server_state.q)).all()
+
+
+def test_strategy_sweep_smoke(data):
+    train, test = data
+    out = run_strategy_sweep(train, test, _cfg("bts", rounds=6, eval_every=3),
+                             strategies=("bts", "random"), seeds=(0,))
+    assert set(out) == {"bts", "random"}
+    for results in out.values():
+        assert len(results) == 1
+        assert 0.0 <= results[0].final["f1"] <= 1.0
+
+
+# --------------------------------------------------------------------- #
+# pure selector API invariants
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_selector_api_is_scan_safe(strategy):
+    """select/observe must trace inside jit+scan with state as pure carry."""
+    num_arms, num_select, dim = 40, 40 if strategy == "full" else 10, 4
+    cfg = SelectorConfig(strategy=strategy, num_arms=num_arms,
+                         num_select=num_select, dim=dim)
+    state0 = selector_init(cfg)
+
+    def body(carry, key):
+        state = carry
+        idx, state = selector_select(cfg, state, key)
+        state, rewards = selector_observe(
+            cfg, state, idx, jax.numpy.ones((num_select, dim)))
+        return state, (idx, rewards)
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    state, (idxs, rewards) = jax.jit(
+        lambda s, k: jax.lax.scan(body, s, k))(state0, keys)
+    assert idxs.shape == (5, num_select)
+    assert rewards.shape == (5, num_select)
+    assert int(state.t) == 5
+    # every per-round selection is unique
+    for row in np.asarray(idxs):
+        assert len(np.unique(row)) == num_select
+
+
+def test_magnitude_selection_counts_accumulate():
+    """Satellite regression: magnitude counts used to be all zeros."""
+    from repro.core.payload import make_selector
+
+    sel = make_selector("magnitude", num_arms=30, dim=4, keep_fraction=0.2)
+    for _ in range(7):
+        idx = sel.select()
+        sel.observe(idx, jax.numpy.ones((6, 4)))
+    counts = sel.selection_counts()
+    assert counts.sum() == 7 * 6
+    assert (counts >= 0).all() and counts.max() <= 7
+
+
+def test_full_and_random_selection_counts_meaningful():
+    from repro.core.payload import make_selector
+
+    sel = make_selector("random", num_arms=30, dim=4, keep_fraction=0.5)
+    for _ in range(4):
+        sel.select()
+    assert sel.selection_counts().sum() == 4 * 15
+
+    full = make_selector("full", num_arms=12, dim=4)
+    full.select()
+    full.select()
+    np.testing.assert_array_equal(full.selection_counts(),
+                                  2.0 * np.ones(12))
