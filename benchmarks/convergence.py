@@ -9,13 +9,13 @@ datasets.
 from __future__ import annotations
 
 import argparse
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from benchmarks.common import markdown_table
 from benchmarks.fcf_experiments import (
-    FULL, QUICK, GridScale, ensure_cells,
+    FULL, QUICK, GridScale, cell_key, ensure_cells,
 )
 
 KEEP = 0.10
@@ -60,10 +60,25 @@ def run(scale: GridScale = QUICK) -> Dict:
     return out
 
 
-if __name__ == "__main__":
+def dry_run(scale: GridScale = QUICK) -> Dict:
+    cells = [cell_key(scale, ds, s, k, 0) for ds in scale.datasets
+             for s, k in (("full", 1.0), ("bts", KEEP))]
+    print(f"[dry-run] convergence — would read {len(cells)} grid points "
+          f"at scale '{scale.name}' (none executed)")
+    return {"dry_run": True, "cells": cells}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="quick",
                     choices=("quick", "mid", "full"))
-    args = ap.parse_args()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="list the grid points, execute nothing")
+    args = ap.parse_args(argv)
     from benchmarks.fcf_experiments import MID
-    run({"quick": QUICK, "mid": MID, "full": FULL}[args.scale])
+    scale = {"quick": QUICK, "mid": MID, "full": FULL}[args.scale]
+    return dry_run(scale) if args.dry_run else run(scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,13 +9,16 @@ Two scales:
           scale ``python -m benchmarks.run`` exercises end-to-end.
   full  — paper-sized synthetic datasets (Table 2 stats) and 1000 rounds;
           produces the EXPERIMENTS.md headline numbers (hours of CPU).
+Usage:  PYTHONPATH=src python -m benchmarks.fcf_experiments --dry-run
+        (the grid itself is driven by the view modules / benchmarks.run)
 """
 from __future__ import annotations
 
+import argparse
 import os
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -156,3 +159,39 @@ def ensure_cells(scale: GridScale, dataset: str, strategy: str,
             write_json(paths[s], _cell_payload(scale, dataset, strategy,
                                                keep, s, res, seconds))
     return [run_cell(scale, dataset, strategy, keep, seed) for seed in seeds]
+
+
+def dry_run(scale: GridScale = QUICK) -> Dict:
+    """Enumerate the grid without running a cell: configs must construct
+    and cache paths must resolve (catches config/IO rot cheaply)."""
+    planned = []
+    for ds in scale.datasets:
+        for strategy, keep in (("full", 1.0), ("bts", 0.1), ("random", 0.1)):
+            for seed in range(scale.rebuilds):
+                _cell_config(scale, ds, strategy, keep, seed)   # validates
+                planned.append(
+                    results_path("fcf", cell_key(scale, ds, strategy, keep,
+                                                 seed) + ".json"))
+    print(f"[dry-run] fcf_experiments — {len(planned)} cells planned at "
+          f"scale '{scale.name}' (none executed)")
+    return {"dry_run": True, "cells_planned": len(planned)}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=("quick", "mid", "full"))
+    ap.add_argument("--dry-run", action="store_true",
+                    help="enumerate grid cells, execute nothing")
+    args = ap.parse_args(argv)
+    scale = {"quick": QUICK, "mid": MID, "full": FULL}[args.scale]
+    if args.dry_run:
+        return dry_run(scale)
+    out: Dict = {}
+    for ds in scale.datasets:
+        out[ds] = grid_mean(ensure_cells(scale, ds, "bts", 0.1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

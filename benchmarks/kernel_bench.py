@@ -6,10 +6,13 @@ at production arm counts — the paper's claim (iv): payload optimization
 adds no client cost and negligible server cost.
 
 CSV: name,us_per_call,derived
+
+Usage:  PYTHONPATH=src python -m benchmarks.kernel_bench [--dry-run]
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import argparse
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +21,30 @@ from repro.core.bandit import bts_init, bts_select, bts_update
 from repro.kernels import ops
 
 from benchmarks.common import time_fn
+
+
+def dry_run() -> List[Dict]:
+    """One tiny un-timed call per kernel path: catches import/shape rot."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (64, 25), jnp.float32)
+    p = jax.random.normal(key, (8, 25), jnp.float32)
+    x = (jax.random.uniform(key, (8, 64)) < 0.1).astype(jnp.float32)
+    jax.block_until_ready(ops.fcf_item_gradients(q, p, x))
+    table = jax.random.normal(key, (128, 32), jnp.float32)
+    idx = jnp.arange(16, dtype=jnp.int32)
+    jax.block_until_ready(ops.gather_rows(table, idx))
+    # scatter ops donate their table: rebind so later calls see live buffers
+    table = ops.scatter_add_rows(table, idx, jnp.ones((16, 32), jnp.float32))
+    jax.block_until_ready(table)
+    codes, scales = ops.gather_quantize_rows(table, idx)
+    table = ops.dequant_scatter_set_rows(table, idx, codes, scales)
+    jax.block_until_ready(table)
+    state = bts_init(256, 0.0, 10_000.0)
+    sel, _ = bts_select(state, key, 25)
+    jax.block_until_ready(bts_update(
+        state, sel, jnp.zeros((25,), jnp.float32)))
+    print("[dry-run] kernel_bench — all kernel paths dispatched OK")
+    return [{"name": "dry_run", "us_per_call": 0.0, "derived": "ok"}]
 
 
 def run() -> List[Dict]:
@@ -50,6 +77,16 @@ def run() -> List[Dict]:
     us = time_fn(s, table, idx, rowsv)
     add("scatter_add_rows_15k", us)
 
+    # fused payload compression kernels (int8 wire) at the same scale
+    gq = jax.jit(ops.gather_quantize_rows)
+    us = time_fn(gq, table, idx)
+    add("gather_quantize_rows_15k", us,
+        f"{idx.shape[0] * table.shape[1] * 4 / us / 1e3:.1f}GB/s-in")
+    codes, scales = ops.gather_quantize_rows(table, idx)
+    dq = jax.jit(ops.dequant_scatter_set_rows)
+    us = time_fn(dq, table, idx, codes, scales)
+    add("dequant_scatter_set_rows_15k", us)
+
     # flash attention oracle at a serving shape
     q = jax.random.normal(key, (1, 8, 1024, 128), jnp.float32)
     k_ = jax.random.normal(key, (1, 2, 1024, 128), jnp.float32)
@@ -79,5 +116,13 @@ def run() -> List[Dict]:
     return rows
 
 
+def main(argv: Optional[Sequence[str]] = None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="single tiny call per kernel, no timing")
+    args = ap.parse_args(argv)
+    return dry_run() if args.dry_run else run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -18,6 +18,7 @@ Run:  PYTHONPATH=src python -m benchmarks.payload_dryrun --items 1000000
 """
 import argparse
 import json
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -96,12 +97,34 @@ def run(items: int = 1_000_000, factors: int = 25, theta: int = 1024,
     return out
 
 
-if __name__ == "__main__":
+def dry_run(items: int = 1_000_000, factors: int = 25,
+            keep: float = 0.10) -> Dict:
+    """Payload arithmetic only — no mesh construction, no HLO lowering."""
+    from repro.compress import CodecConfig, wire_bytes
+
+    m_s = int(keep * items) // 16 * 16
+    full = wire_bytes(CodecConfig(name="fp32"), items, factors)
+    sel = wire_bytes(CodecConfig(name="fp32"), m_s, factors)
+    print(f"[dry-run] payload_dryrun — M={items:,}: full collective "
+          f"{full / 1e6:.1f} MB, keep={keep:.2f} -> {sel / 1e6:.1f} MB "
+          f"({100 * sel / full:.1f}%); no lowering performed")
+    return {"dry_run": True, "full_bytes": full, "selected_bytes": sel}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--items", type=int, default=1_000_000)
     ap.add_argument("--theta", type=int, default=1024)
     ap.add_argument("--keep", type=float, default=0.10)
     ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
-    run(args.items, theta=args.theta, keep=args.keep,
-        multi_pod=args.multi_pod)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="payload byte math only; skip mesh + HLO lowering")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        return dry_run(args.items, keep=args.keep)
+    return run(args.items, theta=args.theta, keep=args.keep,
+               multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

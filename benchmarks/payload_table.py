@@ -1,10 +1,17 @@
 """Paper Table 1: FCF model payload vs number of items (exact formula).
 
 payload_bytes = (#items x #factors x 64 bits) / 8.  Validates our
-payload accounting helper against the paper's published numbers.
+payload accounting helper against the paper's published numbers, plus the
+quantized-wire equivalents from the compression subsystem.
+
+Usage:  PYTHONPATH=src python -m benchmarks.payload_table [--dry-run]
 """
 from __future__ import annotations
 
+import argparse
+from typing import Optional, Sequence
+
+from repro.compress import CodecConfig, wire_bytes
 from repro.core.payload import payload_bytes
 
 from benchmarks.common import markdown_table
@@ -30,12 +37,23 @@ def run() -> dict:
     out = {}
     for items, paper in PAPER_ROWS:
         b = payload_bytes(items, K, dtype_bits=64)
-        rows.append((items, _human(b), paper))
+        int8 = wire_bytes(CodecConfig(name="int8"), items, K)
+        rows.append((items, _human(b), paper, _human(int8)))
         out[str(items)] = b
-    print("\n## Paper Table 1 — payload vs #items (K=20, float64)\n")
-    print(markdown_table(("#items", "ours", "paper"), rows))
+    print("\n## Paper Table 1 — payload vs #items (K=20, float64; "
+          "int8 wire alongside)\n")
+    print(markdown_table(("#items", "ours", "paper", "int8 wire"), rows))
     return out
 
 
+def main(argv: Optional[Sequence[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="pure-arithmetic table; same as a full run")
+    ap.parse_args(argv)
+    # the table IS arithmetic — dry-run and full run coincide
+    return run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

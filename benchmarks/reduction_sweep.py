@@ -8,11 +8,12 @@ raw grid for EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 from benchmarks.common import markdown_table
 from benchmarks.fcf_experiments import (
-    FULL, QUICK, GridScale, ensure_cells, grid_mean, toplist_baseline,
+    FULL, QUICK, GridScale, cell_key, ensure_cells, grid_mean,
+    toplist_baseline,
 )
 
 # payload reduction % -> keep fraction (paper Sec. 7 grid)
@@ -47,11 +48,28 @@ def run(scale: GridScale = QUICK,
     return out
 
 
-if __name__ == "__main__":
+def dry_run(scale: GridScale = QUICK,
+            levels: Sequence[int] = QUICK_LEVELS) -> Dict:
+    cells = [cell_key(scale, ds, s, 1.0 - lvl / 100.0, 0)
+             for ds in scale.datasets for lvl in levels
+             for s in ("bts", "random")]
+    print(f"[dry-run] reduction_sweep — would read {len(cells)} grid "
+          f"points at scale '{scale.name}' (none executed)")
+    return {"dry_run": True, "cells": cells}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="quick",
                     choices=("quick", "mid", "full"))
-    args = ap.parse_args()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="list the grid points, execute nothing")
+    args = ap.parse_args(argv)
     from benchmarks.fcf_experiments import MID
     scale = {"quick": QUICK, "mid": MID, "full": FULL}[args.scale]
-    run(scale, QUICK_LEVELS if args.scale == "quick" else PAPER_LEVELS)
+    levels = QUICK_LEVELS if args.scale == "quick" else PAPER_LEVELS
+    return dry_run(scale, levels) if args.dry_run else run(scale, levels)
+
+
+if __name__ == "__main__":
+    main()

@@ -104,10 +104,21 @@ def run(dryrun_dir: str = "results/dryrun_final", mesh: str = "pod16x16") -> Dic
     return s
 
 
-if __name__ == "__main__":
+def main(argv: Optional[List[str]] = None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod16x16",
                     choices=("pod16x16", "pod2x16x16"))
     ap.add_argument("--dir", default="results/dryrun_final")
-    args = ap.parse_args()
-    run(args.dir, args.mesh)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="report which artifacts would be read, no tables")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        recs = load_records(args.dir, args.mesh)
+        print(f"[dry-run] roofline — {len(recs)} dry-run artifacts under "
+              f"{args.dir}/{args.mesh}")
+        return {"dry_run": True, "n_artifacts": len(recs)}
+    return run(args.dir, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,14 +20,14 @@ Compilation is excluded (warmup call per engine); the headline number is
 the legacy -> scan speedup, with a >= 5x acceptance bar for the bandit
 strategy on CPU. Writes ``BENCH_round_engine.json`` in the cwd.
 
-Usage:  PYTHONPATH=src python -m benchmarks.round_engine [--quick]
+Usage:  PYTHONPATH=src python -m benchmarks.round_engine [--quick] [--dry-run]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import Dict
+from typing import Dict, Optional, Sequence
 
 from functools import partial
 
@@ -196,9 +196,26 @@ def run(quick: bool = False) -> Dict:
     return out
 
 
-if __name__ == "__main__":
+def dry_run() -> Dict:
+    """Two scan rounds at toy scale: the engine must build and execute."""
+    train, test = make_data(40, 60)
+    cfg = FLSimConfig(strategy="bts", keep_fraction=0.25, theta=8,
+                      num_factors=8, rounds=2, eval_every=20, seed=0)
+    rps = time_scan(train, test, cfg, rounds=2)
+    print(f"[dry-run] round_engine — 2-round toy scan OK "
+          f"({rps:.0f} rounds/s)")
+    return {"dry_run": True, "toy_rounds_per_sec": rps}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller scale for smoke runs")
-    args = ap.parse_args()
-    run(quick=args.quick)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="two toy rounds through the scan engine only")
+    args = ap.parse_args(argv)
+    return dry_run() if args.dry_run else run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

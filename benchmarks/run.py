@@ -2,29 +2,46 @@
 deliverable reports. Default scale finishes on a CPU container; --full
 switches the FCF grid to paper-sized datasets and the full level sweep.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run [--full | --dry-run]
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional, Sequence
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale FCF grid (hours)")
     ap.add_argument("--skip-fcf", action="store_true",
                     help="only the arithmetic/kernel/roofline sections")
-    args = ap.parse_args()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="run every section's dry-run smoke, execute nothing")
+    args = ap.parse_args(argv)
 
     from benchmarks import (convergence, fcf_experiments, kernel_bench,
-                            payload_table, reduction_sweep, roofline, table4)
+                            payload_compression, payload_table,
+                            reduction_sweep, roofline, table4)
 
     t0 = time.time()
     print("=" * 72)
     print("repro benchmarks — FCF-BTS payload optimization (RecSys'21)")
     print("=" * 72)
+
+    if args.dry_run:
+        payload_table.main(["--dry-run"])
+        kernel_bench.main(["--dry-run"])
+        fcf_experiments.main(["--dry-run"])
+        reduction_sweep.main(["--dry-run"])
+        table4.main(["--dry-run"])
+        convergence.main(["--dry-run"])
+        payload_compression.main(["--dry-run"])
+        roofline.main(["--dry-run"])
+        print(f"\n[dry-run] all sections smoke-checked in "
+              f"{time.time() - t0:.1f}s")
+        return
 
     payload_table.run()
     kernel_bench.run()
@@ -36,6 +53,13 @@ def main() -> None:
         reduction_sweep.run(scale, levels)
         table4.run(scale)
         convergence.run(scale)
+        if args.full:
+            # full scale regenerates the committed Pareto artifact
+            payload_compression.run()
+        else:
+            # default CPU scale: smaller grid, don't clobber the artifact
+            payload_compression.run(rounds=60, theta=30, keeps=(0.10,),
+                                    time_rounds=20, out_path=None)
 
     roofline.run(mesh="pod16x16")
     roofline.run(mesh="pod2x16x16")

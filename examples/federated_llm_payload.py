@@ -5,7 +5,9 @@ Arms = vocabulary rows of the embedding/unembedding tables (the
 item-dependent payload of an LLM); each round the BTS bandit picks 10% of
 rows to transmit, clients run standard local SGD, and the Eq. 13 reward is
 computed on the per-row embedding deltas. Compare against `--strategy full`
-or `random` to see the accuracy/traffic trade-off.
+or `random` to see the accuracy/traffic trade-off, and add `--codec int8`
+to also quantize the row payload on the wire (fused dequant+scatter
+patch-in on the client).
 
   PYTHONPATH=src python examples/federated_llm_payload.py --strategy bts
 """
@@ -21,6 +23,9 @@ def main() -> None:
     ap.add_argument("--strategy", default="bts",
                     choices=("bts", "random", "full", "magnitude"))
     ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--codec", default="fp32",
+                    choices=("fp32", "fp16", "int8", "int4", "topk"),
+                    help="wire format for the vocab-row payload")
     args = ap.parse_args()
 
     # 2-layer, 1024-vocab member of the arch family (CPU-sized)
@@ -28,10 +33,11 @@ def main() -> None:
     fed = FedLLMConfig(strategy=args.strategy, keep_fraction=0.10,
                        rounds=args.rounds, num_clients=6,
                        clients_per_round=3, local_steps=2,
-                       batch_size=4, seq_len=32, seed=0)
+                       batch_size=4, seq_len=32, seed=0, codec=args.codec)
     out = run_federated_llm(cfg, fed)
 
-    print(f"\narch family: {args.arch} (reduced)  strategy: {args.strategy}")
+    print(f"\narch family: {args.arch} (reduced)  strategy: {args.strategy}"
+          f"  codec: {args.codec}")
     print(f"eval loss:        {out['first_eval_loss']:.4f} -> "
           f"{out['final_eval_loss']:.4f} over {args.rounds} rounds")
     print(f"vocab-row bytes:  {out['bytes_item_dep'] / 1e6:.1f} MB "

@@ -2,6 +2,7 @@
 
 Layers:
   repro.core       bandit payload selection (the paper's contribution)
+  repro.compress   payload wire-format codecs (bits-per-row axis)
   repro.cf         collaborative-filtering substrate (CF/FCF)
   repro.federated  federated-learning runtime (CF + LLM)
   repro.models     transformer model zoo (assigned architectures)

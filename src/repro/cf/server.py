@@ -21,13 +21,17 @@ also routes its payload download through the kernel gather.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.cf.local import solve_user_factors
 from repro.cf.model import CFConfig
+from repro.compress import (
+    CodecConfig, QuantWire, codec_state_init, decode, direction_configs,
+    encode, encode_with_residual, is_stateful, wire_bytes,
+)
 from repro.core.payload import PayloadSelector
 from repro.core.selector import (
     SelectorConfig, SelectorState, selector_init, selector_observe,
@@ -71,6 +75,10 @@ class ServerState(NamedTuple):
     # always recoverable as t x per-round bytes (what SimResult reports).
     bytes_down: jax.Array   # () float32 — cumulative payload downlink bytes
     bytes_up: jax.Array     # () float32 — cumulative payload uplink bytes
+    # payload codec state: the (M, K) error-feedback residual for stateful
+    # codecs (topk uplink sparsification), the empty pytree () otherwise —
+    # either way a fixed-shape scan carry / vmap axis
+    codec: Any = ()
 
 
 class RoundAux(NamedTuple):
@@ -85,6 +93,7 @@ def server_init(
     sel_cfg: SelectorConfig,
     key: jax.Array,
     config: FCFServerConfig = FCFServerConfig(),
+    codec_cfg: CodecConfig = CodecConfig(),
 ) -> ServerState:
     """Fresh server state around an initialized global model."""
     del config  # static hyper-parameters live outside the pytree
@@ -96,6 +105,8 @@ def server_init(
         t=jnp.zeros((), jnp.int32),
         bytes_down=jnp.zeros((), jnp.float32),
         bytes_up=jnp.zeros((), jnp.float32),
+        codec=codec_state_init(
+            codec_cfg, item_factors.shape[0], item_factors.shape[1]),
     )
 
 
@@ -106,6 +117,7 @@ def server_round_step(
     sel_cfg: SelectorConfig,
     config: FCFServerConfig,
     cf_cfg: CFConfig,
+    codec_cfg: CodecConfig = CodecConfig(),
 ) -> Tuple[ServerState, RoundAux]:
     """One fused FL round (Alg. 1 lines 8-19) as a pure function.
 
@@ -118,14 +130,35 @@ def server_round_step(
     column subset directly — the lazy form lets the driver fuse the
     user-row/item-column gather into one indexed read instead of
     materializing (B, M) per round (a real cost at web-scale M).
+
+    ``codec_cfg`` names the wire format for the item-dependent payload
+    (:mod:`repro.compress`). Every transmitted tensor physically goes
+    through encode->decode, so clients solve against the *decoded* Q* and
+    the server commits the *decoded* gradients — quality degradation from
+    lossy codecs is real, not just accounted. The int8 downlink routes
+    through the fused gather+quantize Pallas kernel; stateful codecs carry
+    their error-feedback residual in ``state.codec`` (residual rows are
+    gathered/scattered with the payload kernels alongside Q). In the
+    simulation the cohort-aggregated uplink gradient is encoded once — the
+    wire image of the aggregate each of the ``B`` users' updates passes
+    through — and the per-user byte accounting multiplies that row cost
+    by ``B``, exactly like the dense accounting did.
     """
+    down_cfg, up_cfg = direction_configs(codec_cfg)
+    m_s = sel_cfg.num_select
+    kdim = state.q.shape[1]
     key, k_sel = jax.random.split(state.key)
 
-    # lines 8-10: select the payload subset, gather + "transmit" Q*
+    # lines 8-10: select the payload subset, gather + encode + "transmit" Q*;
+    # clients decode the wire image, so q_star below is what they compute on
     idx, sel = selector_select(sel_cfg, state.sel, k_sel)
-    q_star = ops.gather_rows(state.q, idx)                   # (M_s, K)
-    itemsize = jnp.dtype(state.q.dtype).itemsize
-    bytes_down = state.bytes_down + q_star.size * itemsize
+    if down_cfg.name == "int8":
+        # hot path: fused gather+quantize kernel (one HBM trip per row)
+        down_wire = QuantWire(*ops.gather_quantize_rows(state.q, idx))
+    else:
+        down_wire = encode(down_cfg, ops.gather_rows(state.q, idx))
+    q_star = decode(down_cfg, down_wire, kdim)               # (M_s, K)
+    bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
 
     # line 11: every cohort user solves p_i on-device and uplinks gradients;
     # the server receives the cohort aggregate
@@ -137,21 +170,32 @@ def server_round_step(
     grads = ops.fcf_item_gradients(
         q_star, p, x_sub, alpha=cf_cfg.alpha, l2=cf_cfg.l2)  # (M_s, K)
     num_users = x_sub.shape[0]
-    bytes_up = state.bytes_up + grads.size * itemsize * num_users
+
+    # uplink encode (+ error feedback for stateful codecs): the server only
+    # ever sees the decoded wire image of the aggregated gradient
+    codec_state = state.codec
+    if is_stateful(up_cfg):
+        res_rows = ops.gather_rows(codec_state, idx)         # (M_s, K)
+        _, grads_hat, new_res = encode_with_residual(up_cfg, grads, res_rows)
+        codec_state = ops.scatter_set_rows(codec_state, idx, new_res)
+    else:
+        grads_hat = decode(up_cfg, encode(up_cfg, grads), kdim)
+    bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
 
     # line 13: sparse Adam commit on the selected rows (scatter kernels)
     q_new, opt = adam_update_rows_scattered(
-        grads, idx, state.opt, state.q, config.adam)
+        grads_hat, idx, state.opt, state.q, config.adam)
 
-    # lines 14-18: reward feedback + posterior update
-    feedback = grads
+    # lines 14-18: reward feedback + posterior update — on the decoded
+    # gradients (the only thing a codec-running server would have)
+    feedback = grads_hat
     if config.reward_feedback == "data_term":
-        feedback = grads - 2.0 * config.l2 * num_users * q_star
+        feedback = grads_hat - 2.0 * config.l2 * num_users * q_star
     sel, rewards = selector_observe(sel_cfg, sel, idx, feedback)
 
     new_state = ServerState(
         q=q_new, opt=opt, sel=sel, key=key, t=state.t + 1,
-        bytes_down=bytes_down, bytes_up=bytes_up,
+        bytes_down=bytes_down, bytes_up=bytes_up, codec=codec_state,
     )
     return new_state, RoundAux(indices=idx, rewards=rewards)
 

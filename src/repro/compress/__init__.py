@@ -1,0 +1,39 @@
+"""Payload compression subsystem: quantized wire formats for FL payloads.
+
+See :mod:`repro.compress.codecs` for the codec registry and
+:mod:`repro.kernels.payload_quant` for the fused server-side kernels.
+"""
+from repro.compress.codecs import (
+    CODECS,
+    CodecConfig,
+    CodecState,
+    DenseWire,
+    QuantWire,
+    TopKWire,
+    Wire,
+    codec_state_init,
+    compression_ratio,
+    decode,
+    dense_bytes,
+    dequantize_rows,
+    direction_configs,
+    encode,
+    encode_with_residual,
+    is_stateful,
+    pack_int4,
+    quantize_rows,
+    roundtrip,
+    topk_k,
+    unpack_int4,
+    validate_config,
+    wire_bytes,
+)
+
+__all__ = [
+    "CODECS", "CodecConfig", "CodecState", "DenseWire", "QuantWire",
+    "TopKWire", "Wire", "codec_state_init", "compression_ratio", "decode",
+    "dense_bytes", "dequantize_rows", "direction_configs", "encode",
+    "encode_with_residual",
+    "is_stateful", "pack_int4", "quantize_rows", "roundtrip", "topk_k",
+    "unpack_int4", "validate_config", "wire_bytes",
+]

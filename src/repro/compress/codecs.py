@@ -1,0 +1,277 @@
+"""Pure payload codecs — the bits-per-row axis of payload optimization.
+
+The paper cuts payload along one axis: *which* rows move (bandit selection).
+This module adds the second axis: *how many bits* each transmitted row
+costs. A codec maps a dense (rows, dim) float32 payload block to a wire
+pytree (what would actually cross the network) and back:
+
+    wire          = encode(cfg, rows)
+    rows_hat      = decode(cfg, wire)
+    bytes_on_wire = wire_bytes(cfg, num_rows, dim)     # static Python int
+
+Wire formats (registry ``CODECS``):
+
+  * ``fp32`` — passthrough (the repo's historical format; exact).
+  * ``fp16`` — IEEE half precision, 2 bytes/value.
+  * ``int8`` — uniform per-row-scale quantization, 1 byte/value + one
+               float32 scale per row. Backed by the fused Pallas
+               gather+quantize / dequantize+scatter kernels on the
+               server hot path (:mod:`repro.kernels.payload_quant`).
+  * ``int4`` — 15-level symmetric quantization, two values packed per
+               byte + one float32 scale per row.
+  * ``topk`` — magnitude sparsification: the ``topk_fraction`` largest-
+               magnitude entries per row as (float32 value, int32 index)
+               pairs. Stateful: the dropped mass is carried as an
+               error-feedback residual (a pytree living in
+               ``ServerState.codec``) and re-injected next time the row
+               is transmitted, so the *cumulative* update converges even
+               though each round's wire image is sparse.
+
+Every function here is pure jnp with static shapes, so codecs trace inside
+``jit``/``lax.scan``/``vmap`` (the round engine carries the codec state as
+part of the scan carry). Dispatch on ``cfg.name`` happens in Python at
+trace time, exactly like strategy dispatch in :mod:`repro.core.selector`.
+
+Byte accounting everywhere in the repo routes through :func:`wire_bytes` /
+:func:`dense_bytes` so the simulation, the LLM driver and the paper-table
+formulas can never disagree. ``wire_bytes`` equals the sum of the actual
+wire arrays' ``nbytes`` exactly — enforced by a property test.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+CODECS = ("fp32", "fp16", "int8", "int4", "topk")
+
+# quantization grids: symmetric int8 uses the full [-127, 127] range;
+# int4 uses the 15-level symmetric grid [-7, 7] (the -8 code is unused so
+# that 0.0 encodes exactly and dequantization is a pure scale multiply)
+_QMAX = {8: 127.0, 4: 7.0}
+
+
+class CodecConfig(NamedTuple):
+    """Static (hashable) codec hyper-parameters, fixed for a whole run."""
+
+    name: str = "fp32"
+    topk_fraction: float = 0.25   # fraction of dim kept per row (topk only)
+    error_feedback: bool = True   # topk: carry dropped mass as a residual
+
+
+class DenseWire(NamedTuple):
+    """fp32 / fp16: the payload block itself (possibly narrowed)."""
+
+    values: jax.Array             # (rows, dim) float32 or float16
+
+
+class QuantWire(NamedTuple):
+    """int8 / int4: quantized codes + one float32 scale per row."""
+
+    values: jax.Array             # int8 (rows, dim) | uint8 (rows, ceil(dim/2))
+    scales: jax.Array             # (rows, 1) float32
+
+
+class TopKWire(NamedTuple):
+    """topk: per-row (value, index) pairs for the surviving entries."""
+
+    values: jax.Array             # (rows, k) float32
+    indices: jax.Array            # (rows, k) int32
+
+
+Wire = Union[DenseWire, QuantWire, TopKWire]
+
+# stateless codecs carry an empty pytree; topk+error_feedback carries the
+# full-table residual (scan/vmap axis like every other ServerState leaf)
+CodecState = Any
+
+
+def validate_config(cfg: CodecConfig) -> None:
+    if cfg.name not in CODECS:
+        raise ValueError(f"codec must be one of {CODECS}, got {cfg.name!r}")
+    if cfg.name == "topk" and not (0.0 < cfg.topk_fraction <= 1.0):
+        raise ValueError(
+            f"topk_fraction must be in (0, 1], got {cfg.topk_fraction}")
+
+
+def topk_k(cfg: CodecConfig, dim: int) -> int:
+    """Static per-row survivor count for the topk codec."""
+    return max(1, min(dim, int(round(cfg.topk_fraction * dim))))
+
+
+def is_stateful(cfg: CodecConfig) -> bool:
+    """True when the codec carries cross-round state (the EF residual)."""
+    return cfg.name == "topk" and cfg.error_feedback
+
+
+def direction_configs(cfg: CodecConfig) -> Tuple[CodecConfig, CodecConfig]:
+    """Resolve ``cfg`` into per-direction configs ``(downlink, uplink)``.
+
+    Dense codecs (fp32/fp16/int8/int4) compress both directions. ``topk``
+    is a *gradient* codec: per-round updates concentrate mass in few
+    coordinates, so magnitude sparsification + error feedback is sound on
+    the uplink, while model rows are dense and ship fp32 on the downlink.
+    Every byte-accounting call site uses this split so the two directions
+    can never be costed inconsistently.
+    """
+    validate_config(cfg)
+    if cfg.name == "topk":
+        return CodecConfig(name="fp32"), cfg
+    return cfg, cfg
+
+
+def codec_state_init(cfg: CodecConfig, num_rows: int, dim: int) -> CodecState:
+    """Fresh codec state: EF residual table for topk, empty pytree else."""
+    validate_config(cfg)
+    if is_stateful(cfg):
+        return jnp.zeros((num_rows, dim), jnp.float32)
+    return ()
+
+
+# ===================================================================== #
+# quantization math (canonical: kernels/ref.py and the Pallas kernels
+# must reproduce these exact op sequences bit-for-bit)
+# ===================================================================== #
+def quantize_rows(rows: jax.Array, nbits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Uniform symmetric per-row quantization.
+
+    Returns ``(codes int8 (rows, dim), scales float32 (rows, 1))`` with
+    ``codes = round(rows / scale)``, ``scale = rowmax(|rows|) / qmax``.
+    All-zero rows get scale 0 and codes 0 (decode restores exact zeros).
+    """
+    qmax = _QMAX[nbits]
+    rows = rows.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)    # (rows, 1)
+    # multiply by the reciprocal rather than divide: XLA const-folds
+    # x / const into x * (1/const) under jit but not in eager refs, and the
+    # kernel bit-exactness contract needs one canonical op sequence
+    scales = absmax * (1.0 / qmax)
+    inv = jnp.where(scales > 0, 1.0 / scales, 0.0)
+    codes = jnp.clip(jnp.round(rows * inv), -qmax, qmax).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_rows(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows`: ``codes * scale`` as float32."""
+    return codes.astype(jnp.float32) * scales.astype(jnp.float32)
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int8 codes in [-7, 7] into uint8 nibble pairs (dim/2 bytes).
+
+    Column 2i lands in the low nibble, 2i+1 in the high nibble; odd dims
+    are zero-padded (the pad nibble decodes to 0 and is sliced off).
+    """
+    rows, dim = codes.shape
+    if dim % 2:
+        codes = jnp.pad(codes, ((0, 0), (0, 1)))
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)      # two's compl.
+    lo, hi = u[:, 0::2], u[:, 1::2]
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed: jax.Array, dim: int) -> jax.Array:
+    """Inverse of :func:`pack_int4` -> int8 codes (rows, dim) in [-7, 7]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend the 4-bit two's complement nibble
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    return codes[:, :dim]
+
+
+# ===================================================================== #
+# encode / decode
+# ===================================================================== #
+def encode(cfg: CodecConfig, rows: jax.Array) -> Wire:
+    """Dense (rows, dim) float payload -> wire pytree (static shapes)."""
+    validate_config(cfg)
+    rows = rows.astype(jnp.float32)
+    if cfg.name == "fp32":
+        return DenseWire(values=rows)
+    if cfg.name == "fp16":
+        return DenseWire(values=rows.astype(jnp.float16))
+    if cfg.name == "int8":
+        return QuantWire(*quantize_rows(rows, nbits=8))
+    if cfg.name == "int4":
+        codes, scales = quantize_rows(rows, nbits=4)
+        return QuantWire(values=pack_int4(codes), scales=scales)
+    # topk: largest-|value| entries per row, index-sorted for locality
+    k = topk_k(cfg, rows.shape[-1])
+    _, idx = jax.lax.top_k(jnp.abs(rows), k)                   # (rows, k)
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    vals = jnp.take_along_axis(rows, idx, axis=-1)
+    return TopKWire(values=vals, indices=idx)
+
+
+def decode(cfg: CodecConfig, wire: Wire, dim: int) -> jax.Array:
+    """Wire pytree -> dense float32 (rows, dim) as the receiver sees it."""
+    validate_config(cfg)
+    if cfg.name == "fp32":
+        return wire.values
+    if cfg.name == "fp16":
+        return wire.values.astype(jnp.float32)
+    if cfg.name == "int8":
+        return dequantize_rows(wire.values, wire.scales)
+    if cfg.name == "int4":
+        return dequantize_rows(unpack_int4(wire.values, dim), wire.scales)
+    num_rows = wire.values.shape[0]
+    dense = jnp.zeros((num_rows, dim), jnp.float32)
+    return dense.at[jnp.arange(num_rows)[:, None], wire.indices].set(
+        wire.values)
+
+
+def roundtrip(cfg: CodecConfig, rows: jax.Array) -> jax.Array:
+    """decode(encode(rows)) — the receiver's view of a stateless transmit."""
+    return decode(cfg, encode(cfg, rows), rows.shape[-1])
+
+
+def encode_with_residual(
+    cfg: CodecConfig, rows: jax.Array, residual_rows: jax.Array
+) -> Tuple[Wire, jax.Array, jax.Array]:
+    """Error-feedback encode: compress ``rows + residual``, keep the error.
+
+    Returns ``(wire, decoded_rows, new_residual_rows)`` with
+    ``new_residual = (rows + residual) - decoded`` — the classic EF-SGD
+    memory (Karimireddy et al.) specialized to per-row payloads: whatever
+    this round's wire image dropped is re-injected the next time the same
+    row is selected for transmission.
+    """
+    eff = rows.astype(jnp.float32) + residual_rows
+    wire = encode(cfg, eff)
+    decoded = decode(cfg, wire, rows.shape[-1])
+    return wire, decoded, eff - decoded
+
+
+# ===================================================================== #
+# byte accounting — the single source of truth for the whole repo
+# ===================================================================== #
+def dense_bytes(num_rows: int, dim: int, bits: int = 32) -> int:
+    """Dense payload bytes: (#values x bits) / 8 (paper Table 1 formula)."""
+    return (num_rows * dim * bits) // 8
+
+
+def wire_bytes(cfg: CodecConfig, num_rows: int, dim: int) -> int:
+    """Exact bytes on the wire for one (num_rows, dim) payload block.
+
+    Matches ``sum(leaf.nbytes for leaf in encode(cfg, rows))`` exactly —
+    scales are float32, topk indices int32, int4 packs two codes per byte.
+    """
+    validate_config(cfg)
+    if cfg.name == "fp32":
+        return dense_bytes(num_rows, dim, 32)
+    if cfg.name == "fp16":
+        return dense_bytes(num_rows, dim, 16)
+    if cfg.name == "int8":
+        return num_rows * dim + num_rows * 4
+    if cfg.name == "int4":
+        return num_rows * ((dim + 1) // 2) + num_rows * 4
+    k = topk_k(cfg, dim)
+    return num_rows * k * (4 + 4)          # float32 value + int32 index
+
+
+def compression_ratio(cfg: CodecConfig, num_rows: int, dim: int) -> float:
+    """Dense-fp32 bytes over wire bytes (>1 means smaller on the wire)."""
+    return dense_bytes(num_rows, dim, 32) / wire_bytes(cfg, num_rows, dim)

@@ -25,6 +25,8 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
+from repro.compress import CodecConfig, dense_bytes, direction_configs
+from repro.compress import wire_bytes as codec_wire_bytes
 from repro.core.selector import (
     STRATEGIES,
     SelectorConfig,
@@ -46,8 +48,11 @@ def payload_bytes(num_selected: int, dim: int, dtype_bits: int = 64) -> int:
     The paper's Table 1 assumes float64 model payloads (``dtype_bits=64``);
     the simulation transmits float32, so accounting call sites must pass the
     *actual* transmission width (see ``PayloadSelector.dtype_bits``).
+
+    Routed through :func:`repro.compress.dense_bytes` — the whole repo's
+    byte accounting (dense and quantized) lives in one module.
     """
-    return (num_selected * dim * dtype_bits) // 8
+    return dense_bytes(num_selected, dim, dtype_bits)
 
 
 @dataclass
@@ -79,6 +84,10 @@ class PayloadSelector:
     # transmission dtype width in bits: the simulation moves float32 payloads,
     # so byte accounting defaults to 32 (the paper's Table 1 uses 64).
     dtype_bits: int = 32
+    # payload wire format (repro.compress codec name). "fp32" reproduces the
+    # plain dtype_bits accounting; quantized codecs price the actual wire
+    # image (values + per-row scales / indices) via compress.wire_bytes.
+    codec: str = "fp32"
     seed: int = 0
 
     def __post_init__(self):
@@ -139,13 +148,21 @@ class PayloadSelector:
         return rewards
 
     # ------------------------------------------------------------------ #
+    def _row_bytes(self, num_rows: int) -> int:
+        """Downlink wire bytes for ``num_rows`` payload rows of this codec."""
+        if self.codec == "fp32":
+            # honor dtype_bits (e.g. the paper's Table-1 float64 accounting)
+            return payload_bytes(num_rows, self.dim, self.dtype_bits)
+        down_cfg, _ = direction_configs(CodecConfig(name=self.codec))
+        return codec_wire_bytes(down_cfg, num_rows, self.dim)
+
     @property
     def round_payload_bytes(self) -> int:
-        return payload_bytes(self.num_select, self.dim, self.dtype_bits)
+        return self._row_bytes(self.num_select)
 
     @property
     def full_payload_bytes(self) -> int:
-        return payload_bytes(self.num_arms, self.dim, self.dtype_bits)
+        return self._row_bytes(self.num_arms)
 
     @property
     def reduction_pct(self) -> float:

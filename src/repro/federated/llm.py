@@ -28,9 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import (
+    CodecConfig, direction_configs, encode_with_residual, is_stateful,
+    roundtrip, wire_bytes,
+)
 from repro.configs.base import ModelConfig
 from repro.core.payload import PayloadSelector, make_selector
 from repro.data.tokens import TokenDataConfig, synthetic_token_batches
+from repro.kernels import ops
 from repro.models.lm import init_train_state, lm_loss
 from repro.utils.logging import MetricLogger, get_logger
 
@@ -50,6 +55,10 @@ class FedLLMConfig:
     batch_size: int = 4
     seq_len: int = 32
     gamma: float = 0.999
+    # wire format for the vocab-row payload (repro.compress codec name).
+    # Lossy codecs are physically applied: clients train on dequantized
+    # rows and the server aggregates dequantized deltas.
+    codec: str = "fp32"
     seed: int = 0
 
 
@@ -99,7 +108,7 @@ def run_federated_llm(
     selector = make_selector(
         fed_cfg.strategy, num_arms=vocab, dim=d,
         keep_fraction=fed_cfg.keep_fraction, gamma=fed_cfg.gamma,
-        seed=fed_cfg.seed + 1)
+        codec=fed_cfg.codec, seed=fed_cfg.seed + 1)
 
     data_cfg = TokenDataConfig(
         vocab_size=vocab, seq_len=fed_cfg.seq_len,
@@ -123,7 +132,16 @@ def run_federated_llm(
     history = MetricLogger(csv_path)
     bytes_item_dep = 0            # vocab-table traffic (the paper's payload)
     bytes_body = 0
-    itemsize = 4
+    # payload codec: the vocab-row traffic moves in this wire format, in
+    # both directions (topk resolves to fp32 down / sparsified up)
+    codec_cfg = CodecConfig(name=fed_cfg.codec)
+    down_cfg, up_cfg = direction_configs(codec_cfg)
+    # error-feedback residual per vocab table for stateful uplink codecs
+    # (mirrors ServerState.codec in the CF engine)
+    residuals = {}
+    if is_stateful(up_cfg):
+        residuals = {tab: jnp.zeros((vocab, d), jnp.float32)
+                     for tab in _split_vocab_tables(global_params)[0]}
 
     for t in range(1, fed_cfg.rounds + 1):
         selected = selector.select()
@@ -132,15 +150,36 @@ def run_federated_llm(
                             size=fed_cfg.clients_per_round, replace=False)
 
         tables, body = _split_vocab_tables(global_params)
-        # accounting: body down + selected rows down, same back up
+        # accounting: body down + selected rows down, rows back up — all
+        # row traffic priced by compress.wire_bytes (single source of truth)
         n_tables = len(tables)
-        bytes_item_dep += 2 * n_tables * len(sel_np) * d * itemsize \
-            * len(cohort)
+        bytes_item_dep += n_tables * len(cohort) * (
+            wire_bytes(down_cfg, len(sel_np), d)
+            + wire_bytes(up_cfg, len(sel_np), d))
         from repro.utils.tree import tree_size_bytes
         bytes_body += 2 * tree_size_bytes(body) * len(cohort)
 
+        # downlink: with a lossy codec the client's local model is the
+        # server model with the *decoded wire image* of the fresh rows
+        # patched over it — for int8 exactly the fused dequantize+scatter
+        # kernel (one pass per row); other codecs via encode/decode
+        client_params = global_params
+        if down_cfg.name != "fp32":
+            client_params = dict(global_params)
+            for tab in tables:
+                table = global_params[tab]["table"]
+                if down_cfg.name == "int8":
+                    codes, scales = ops.gather_quantize_rows(table, selected)
+                    patched = ops.dequant_scatter_set_rows(
+                        jnp.array(table), selected, codes, scales)
+                else:
+                    rows_hat = roundtrip(
+                        down_cfg, table[selected]).astype(table.dtype)
+                    patched = ops.scatter_set_rows(
+                        jnp.array(table), selected, rows_hat)
+                client_params[tab] = {**global_params[tab], "table": patched}
+
         agg_delta = None
-        emb_row_grads = jnp.zeros((len(sel_np), d), jnp.float32)
         mean_client_loss = 0.0
         for c in cohort:
             batches = [
@@ -150,26 +189,49 @@ def run_federated_llm(
                     num_batches=fed_cfg.local_steps)
             ]
             local_params, closs = _local_sgd(
-                global_params, model_cfg, batches, fed_cfg.local_lr)
+                client_params, model_cfg, batches, fed_cfg.local_lr)
             mean_client_loss += closs / len(cohort)
-            delta = _tree_sub(local_params, global_params)
+            # the client reports movement from the model it actually
+            # received (client_params, i.e. the decoded downlink) — it
+            # never saw the server's exact rows, so a lossy downlink must
+            # not leak its quantization error into the uplink delta
+            delta = _tree_sub(local_params, client_params)
 
-            # payload restriction: zero out unselected vocab rows in the delta
+            # payload restriction: zero out unselected vocab rows
             mask = jnp.zeros((vocab, 1), jnp.float32).at[selected].set(1.0)
             for tab in ("embed", "unembed"):
                 if tab in delta:
                     delta[tab]["table"] = delta[tab]["table"] * mask
-            emb_tab = delta.get("unembed", delta["embed"])["table"]
-            emb_row_grads = emb_row_grads + emb_tab[selected].astype(jnp.float32)
 
             agg_delta = delta if agg_delta is None else jax.tree.map(
                 jnp.add, agg_delta, delta)
 
         agg_delta = jax.tree.map(lambda x: x / len(cohort), agg_delta)
+
+        # uplink codec on the aggregated selected rows (the wire image each
+        # client's update passes through, as in cf.server_round_step) —
+        # with the EF residual re-injecting previously dropped mass
+        if up_cfg.name != "fp32":
+            for tab in ("embed", "unembed"):
+                if tab not in agg_delta:
+                    continue
+                table = agg_delta[tab]["table"]
+                rows = table[selected].astype(jnp.float32)
+                if is_stateful(up_cfg):
+                    _, rows_hat, new_res = encode_with_residual(
+                        up_cfg, rows, residuals[tab][selected])
+                    residuals[tab] = residuals[tab].at[selected].set(new_res)
+                else:
+                    rows_hat = roundtrip(up_cfg, rows)
+                agg_delta[tab]["table"] = jnp.zeros_like(table).at[
+                    selected].set(rows_hat.astype(table.dtype))
+
         global_params = _tree_add_scaled(global_params, agg_delta,
                                          fed_cfg.server_lr)
-        # bandit feedback on the aggregated selected-row deltas (Eq. 13)
-        selector.observe(selected, emb_row_grads / len(cohort))
+        # bandit feedback on the aggregated selected-row deltas (Eq. 13),
+        # as decoded on the server side
+        emb_tab = agg_delta.get("unembed", agg_delta["embed"])["table"]
+        selector.observe(selected, emb_tab[selected].astype(jnp.float32))
 
         ev = eval_loss(global_params)
         history.log(t, eval_loss=ev, client_loss=mean_client_loss,
@@ -177,8 +239,10 @@ def run_federated_llm(
 
     if csv_path:
         history.to_csv()
+    # full-payload fp32 equivalent (the dense no-selection, no-codec wire)
     full_item_bytes = 2 * len(_split_vocab_tables(global_params)[0]) \
-        * vocab * d * itemsize * fed_cfg.clients_per_round * fed_cfg.rounds
+        * wire_bytes(CodecConfig(name="fp32"), vocab, d) \
+        * fed_cfg.clients_per_round * fed_cfg.rounds
     return {
         "final_eval_loss": history.last("eval_loss"),
         "first_eval_loss": history.series("eval_loss")[0],

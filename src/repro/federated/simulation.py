@@ -47,6 +47,9 @@ from repro.cf.model import CFConfig, cf_init
 from repro.cf.server import (
     FCFServerConfig, ServerState, server_init, server_round_step,
 )
+from repro.compress import (
+    CodecConfig, direction_configs, validate_config, wire_bytes,
+)
 from repro.core.selector import (
     STRATEGIES, SelectorConfig, selector_counts,
 )
@@ -76,6 +79,10 @@ class FLSimConfig:
     reward_mode: str = "geometric"
     reward_feedback: str = "data_term"   # "raw" = paper-literal feedback
     reward_norm: bool = True             # per-round reward standardization
+    # payload wire format (repro.compress): fp32 | fp16 | int8 | int4 | topk
+    codec: str = "fp32"
+    codec_topk_fraction: float = 0.25    # topk: fraction of dim kept per row
+    codec_error_feedback: bool = True    # topk: carry the EF residual
     eval_every: int = 25
     eval_users: int = 512
     # evaluate the eval cohort in user-chunks of this size (None = one shot);
@@ -112,6 +119,7 @@ class _SimSetup(NamedTuple):
     cf_cfg: CFConfig
     sel_cfg: SelectorConfig
     srv_cfg: FCFServerConfig
+    codec_cfg: CodecConfig
     state0: ServerState
     cohorts: np.ndarray        # (rounds, B) int32 pre-sampled cohort ids
     eval_train: jax.Array      # (E, M)
@@ -169,10 +177,15 @@ def _build(train_j: jax.Array, test_j: jax.Array,
                         beta2=config.beta2, eps=1e-8),
         reward_feedback=config.reward_feedback, l2=config.l2,
     )
+    codec_cfg = CodecConfig(
+        name=config.codec, topk_fraction=config.codec_topk_fraction,
+        error_feedback=config.codec_error_feedback,
+    )
+    validate_config(codec_cfg)
     model = cf_init(cf_cfg, k_init)
     state0 = server_init(model.item_factors, sel_cfg,
                          key=jax.random.PRNGKey(config.seed + 13),
-                         config=srv_cfg)
+                         config=srv_cfg, codec_cfg=codec_cfg)
 
     cohort_n = min(config.theta, num_users)
     rng = np.random.default_rng(config.seed + 31)
@@ -184,7 +197,8 @@ def _build(train_j: jax.Array, test_j: jax.Array,
     eval_n = min(config.eval_users, num_users)
     eval_ids = jax.random.choice(k_eval, num_users, (eval_n,), replace=False)
     return _SimSetup(
-        cf_cfg=cf_cfg, sel_cfg=sel_cfg, srv_cfg=srv_cfg, state0=state0,
+        cf_cfg=cf_cfg, sel_cfg=sel_cfg, srv_cfg=srv_cfg,
+        codec_cfg=codec_cfg, state0=state0,
         cohorts=cohorts,
         eval_train=train_j[eval_ids], eval_test=test_j[eval_ids],
     )
@@ -200,7 +214,8 @@ def _make_round_fn(train_j: jax.Array, setup: _SimSetup):
         def cohort_x(idx):
             return train_j[cohort[:, None], idx[None, :]]
         return server_round_step(
-            state, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg)
+            state, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
+            codec_cfg=setup.codec_cfg)
 
     return round_fn
 
@@ -244,11 +259,15 @@ def _finalize(setup: _SimSetup, config: FLSimConfig, state: ServerState,
     # totals are rounds x constants. (The traced float32 counters in the
     # state are approximate once totals pass the float32 exact-integer range
     # ~2^24; in-graph consumers needing exact totals at that scale should
-    # derive them from state.t x the per-round constants instead.)
-    itemsize = np.dtype(np.float32).itemsize
-    per_round_down = setup.sel_cfg.num_select * setup.cf_cfg.num_factors \
-        * itemsize
-    per_round_up = per_round_down * setup.cohorts.shape[1]
+    # derive them from state.t x the per-round constants instead.) The
+    # per-round constants come from compress.wire_bytes — the same function
+    # the traced in-state counters use — so the two can never disagree.
+    down_cfg, up_cfg = direction_configs(setup.codec_cfg)
+    per_round_down = wire_bytes(
+        down_cfg, setup.sel_cfg.num_select, setup.cf_cfg.num_factors)
+    per_round_up = wire_bytes(
+        up_cfg, setup.sel_cfg.num_select, setup.cf_cfg.num_factors) \
+        * setup.cohorts.shape[1]
     selections = rewards = None
     if aux_chunks:
         selections = np.concatenate(
@@ -358,6 +377,7 @@ def run_seed_sweep(
         setups.append(_build(train_j, test_j, replace(config, seed=int(s))))
     setup0 = setups[0]
     sel_cfg, srv_cfg, cf_cfg = setup0.sel_cfg, setup0.srv_cfg, setup0.cf_cfg
+    codec_cfg = setup0.codec_cfg
     record = config.record_selections
 
     state = jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -372,7 +392,8 @@ def run_seed_sweep(
             def cohort_x(idx):
                 return train_j[cohort[:, None], idx[None, :]]
             s, aux = server_round_step(
-                s, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg)
+                s, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
+                codec_cfg=codec_cfg)
             return s, (aux if record else None)
         return jax.lax.scan(body, st, ch)
 
@@ -427,14 +448,31 @@ def run_strategy_sweep(
     config: FLSimConfig,
     strategies: Sequence[str] = STRATEGIES,
     seeds: Sequence[int] = (0,),
-) -> Dict[str, List[SimResult]]:
-    """Sweep strategies x seeds: one vmapped scan program per strategy.
+    codecs: Optional[Sequence[str]] = None,
+) -> Dict:
+    """Sweep strategies (x codecs) x seeds: one vmapped program per cell.
 
     Strategies carry differently-shaped selector states (and ``full`` a
     different payload width), so the strategy axis is a Python loop over
-    compiled seed sweeps rather than a vmap axis.
+    compiled seed sweeps rather than a vmap axis; likewise codecs carry
+    differently-shaped wire/residual state.
+
+    With ``codecs=None`` (default) every strategy runs ``config.codec`` and
+    the result is ``{strategy: [SimResult per seed]}`` — the historical
+    shape. With an explicit codec list the result gains the codec axis:
+    ``{strategy: {codec: [SimResult per seed]}}``.
     """
+    if codecs is None:
+        return {
+            s: run_seed_sweep(train_x, test_x, replace(config, strategy=s),
+                              seeds)
+            for s in strategies
+        }
     return {
-        s: run_seed_sweep(train_x, test_x, replace(config, strategy=s), seeds)
+        s: {
+            c: run_seed_sweep(
+                train_x, test_x, replace(config, strategy=s, codec=c), seeds)
+            for c in codecs
+        }
         for s in strategies
     }

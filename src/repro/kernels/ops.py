@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _flash
 from repro.kernels import fcf_grad as _fcf
 from repro.kernels import payload_gather as _pg
+from repro.kernels import payload_quant as _pq
 from repro.kernels import ref as _ref
 
 
@@ -63,6 +64,23 @@ def scatter_set_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.A
     if _use_ref():
         return _ref.scatter_set_rows_ref(table, idx, rows)
     return _pg.scatter_set_rows(table, idx, rows, interpret=_interpret())
+
+
+def gather_quantize_rows(table: jax.Array, idx: jax.Array):
+    """Fused downlink encode: (int8 codes, f32 scales) = quant(Q[idx])."""
+    if _use_ref():
+        return _ref.gather_quantize_rows_ref(table, idx)
+    return _pq.gather_quantize_rows(table, idx, interpret=_interpret())
+
+
+def dequant_scatter_set_rows(
+    table: jax.Array, idx: jax.Array, values: jax.Array, scales: jax.Array
+) -> jax.Array:
+    """Fused wire commit: Q[idx] = dequant(values, scales). Unique ``idx``."""
+    if _use_ref():
+        return _ref.dequant_scatter_set_rows_ref(table, idx, values, scales)
+    return _pq.dequant_scatter_set_rows(table, idx, values, scales,
+                                        interpret=_interpret())
 
 
 def attention(

@@ -41,6 +41,28 @@ def scatter_set_rows_ref(
     return table.at[idx].set(rows.astype(table.dtype))
 
 
+def gather_quantize_rows_ref(table: jax.Array, idx: jax.Array):
+    """(codes, scales) = int8-quantize(table[idx]) — fused downlink encode.
+
+    Delegates to the canonical codec math (:mod:`repro.compress.codecs`)
+    so the Pallas kernel's bit-exactness contract is against the exact
+    arithmetic the pure codec path uses.
+    """
+    from repro.compress.codecs import quantize_rows
+
+    return quantize_rows(table[idx], nbits=8)
+
+
+def dequant_scatter_set_rows_ref(
+    table: jax.Array, idx: jax.Array, values: jax.Array, scales: jax.Array
+) -> jax.Array:
+    """table[idx[i]] = dequantize(values[i], scales[i]) — wire commit."""
+    from repro.compress.codecs import dequantize_rows
+
+    return table.at[idx].set(
+        dequantize_rows(values, scales).astype(table.dtype))
+
+
 def mha_chunked_ref(
     q: jax.Array,                  # (B, H, S, D)
     k: jax.Array,                  # (B, KVH, T, D)

@@ -1,0 +1,42 @@
+"""Benchmarks can't silently rot: every benchmarks/*.py module must expose
+``main(argv)`` with a fast ``--dry-run`` smoke mode, and the smoke must
+actually run. (The orchestrator ``benchmarks.run --dry-run`` chains them;
+here each module is driven directly so a failure names the culprit.)"""
+import importlib
+import pathlib
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+# every CLI benchmark module (common.py is shared plumbing, not a CLI)
+BENCH_MODULES = sorted(
+    p.stem for p in (REPO_ROOT / "benchmarks").glob("*.py")
+    if p.stem not in ("common", "__init__", "run")
+)
+
+
+def test_module_list_is_nonempty_and_current():
+    assert "payload_compression" in BENCH_MODULES
+    assert "round_engine" in BENCH_MODULES
+
+
+@pytest.mark.parametrize("name", BENCH_MODULES)
+def test_benchmark_dry_run(name, capsys):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    assert hasattr(mod, "main"), f"benchmarks/{name}.py must expose main()"
+    out = mod.main(["--dry-run"])
+    # dry-runs return a summary (dict/list) and print a visible marker
+    assert out is not None
+    captured = capsys.readouterr().out
+    assert captured.strip(), f"{name} --dry-run printed nothing"
+
+
+def test_orchestrator_dry_run(capsys):
+    mod = importlib.import_module("benchmarks.run")
+    mod.main(["--dry-run"])
+    captured = capsys.readouterr().out
+    assert "all sections smoke-checked" in captured

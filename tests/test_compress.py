@@ -1,0 +1,208 @@
+"""Payload codec subsystem: round-trip properties, byte accounting, error
+feedback, and scan-safety of every wire format in the registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import compress as C
+from repro.compress import CodecConfig
+
+RNG = np.random.default_rng(7)
+
+ALL = [CodecConfig(name=n) for n in C.CODECS]
+
+
+def _rows(rows=12, dim=25, scale=3.0, rng=RNG):
+    return jnp.asarray(scale * rng.standard_normal((rows, dim)), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# round-trip exactness / error bounds
+# --------------------------------------------------------------------- #
+def test_fp32_roundtrip_is_bitwise_exact():
+    x = _rows()
+    y = C.roundtrip(CodecConfig(name="fp32"), x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_fp16_roundtrip_error_bound():
+    x = _rows()
+    y = C.roundtrip(CodecConfig(name="fp16"), x)
+    # half precision: ~2^-11 relative error
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("name,qmax", [("int8", 127.0), ("int4", 7.0)])
+def test_uniform_quant_error_bounded_by_half_step(name, qmax):
+    """|x - dec(enc(x))| <= scale/2 per element, scale = rowmax|x| / qmax."""
+    x = _rows(rows=20, dim=33)          # odd dim exercises int4 packing
+    y = C.roundtrip(CodecConfig(name=name), x)
+    step = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True) / qmax
+    err = np.abs(np.asarray(x) - np.asarray(y))
+    assert (err <= step / 2 + 1e-6).all()
+
+
+@pytest.mark.parametrize("name", ["int8", "int4"])
+def test_quant_zero_rows_decode_to_exact_zeros(name):
+    z = jnp.zeros((5, 16), jnp.float32)
+    y = C.roundtrip(CodecConfig(name=name), z)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(z))
+
+
+def test_int4_pack_unpack_roundtrip_all_codes():
+    """Every legal nibble code survives packing, including odd dims."""
+    for dim in (8, 9):
+        codes = jnp.asarray(
+            RNG.integers(-7, 8, size=(6, dim)).astype(np.int8))
+        back = C.unpack_int4(C.pack_int4(codes), dim)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_topk_keeps_largest_entries_exactly():
+    cfg = CodecConfig(name="topk", topk_fraction=0.25)
+    x = _rows(rows=10, dim=40)
+    y = np.asarray(C.roundtrip(cfg, x))
+    xn = np.asarray(x)
+    k = C.topk_k(cfg, 40)
+    for r in range(xn.shape[0]):
+        kept = np.argsort(-np.abs(xn[r]))[:k]
+        # surviving entries are bit-exact, everything else decodes to zero
+        np.testing.assert_array_equal(y[r][kept], xn[r][kept])
+        assert np.count_nonzero(y[r]) <= k
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    rows=st.integers(min_value=1, max_value=40),
+    dim=st.integers(min_value=2, max_value=64),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+)
+def test_property_int8_roundtrip_bound_random_shapes(rows, dim, scale):
+    rng = np.random.default_rng(rows * 1000 + dim)
+    x = jnp.asarray(scale * rng.standard_normal((rows, dim)), jnp.float32)
+    y = C.roundtrip(CodecConfig(name="int8"), x)
+    step = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True) / 127.0
+    assert (np.abs(np.asarray(x) - np.asarray(y))
+            <= step / 2 + 1e-5 * scale).all()
+
+
+# --------------------------------------------------------------------- #
+# error feedback
+# --------------------------------------------------------------------- #
+def test_error_feedback_residual_mean_converges():
+    """EF: transmitting a constant gradient through topk, the time-average
+    of the decoded stream converges to the true gradient (the dropped mass
+    is re-injected, never lost)."""
+    cfg = CodecConfig(name="topk", topk_fraction=0.2)
+    g = _rows(rows=6, dim=30, scale=1.0)
+    res = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    errs = []
+    for t in range(1, 201):
+        _, dec, res = C.encode_with_residual(cfg, g, res)
+        total = total + dec
+        if t in (10, 200):
+            errs.append(float(jnp.max(jnp.abs(total / t - g))))
+    assert errs[-1] < 0.05                 # converged
+    assert errs[-1] < errs[0] / 3          # and it is *converging*
+
+
+def test_error_feedback_residual_stays_bounded():
+    cfg = CodecConfig(name="topk", topk_fraction=0.25)
+    rng = np.random.default_rng(3)
+    res = jnp.zeros((4, 24))
+    bound = 0.0
+    for _ in range(100):
+        g = jnp.asarray(rng.standard_normal((4, 24)), jnp.float32)
+        _, _, res = C.encode_with_residual(cfg, g, res)
+        bound = max(bound, float(jnp.max(jnp.abs(res))))
+    # residual magnitude stays O(per-round gradient), does not blow up
+    assert bound < 20.0
+
+
+def test_without_error_feedback_mass_is_lost():
+    """Control for the EF test: plain topk drops the same mass every round."""
+    cfg = CodecConfig(name="topk", topk_fraction=0.2, error_feedback=False)
+    assert not C.is_stateful(cfg)
+    assert C.codec_state_init(cfg, 8, 30) == ()
+    g = _rows(rows=6, dim=30)
+    dec = C.roundtrip(cfg, g)
+    # time-average of a stateless stream never recovers the small entries
+    assert float(jnp.max(jnp.abs(dec - g))) > 0.01
+
+
+# --------------------------------------------------------------------- #
+# byte accounting — wire_bytes is the actual wire size, exactly
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("cfg", ALL, ids=[c.name for c in ALL])
+@pytest.mark.parametrize("rows,dim", [(1, 1), (7, 25), (16, 33), (3, 128)])
+def test_wire_bytes_equals_actual_wire_nbytes(cfg, rows, dim):
+    x = _rows(rows=rows, dim=dim)
+    wire = C.encode(cfg, x)
+    actual = sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(wire))
+    assert C.wire_bytes(cfg, rows, dim) == actual
+
+
+def test_wire_bytes_ordering():
+    """Narrower formats must actually be narrower."""
+    sizes = {n: C.wire_bytes(CodecConfig(name=n), 100, 64)
+             for n in ("fp32", "fp16", "int8", "int4")}
+    assert sizes["fp32"] > sizes["fp16"] > sizes["int8"] > sizes["int4"]
+
+
+def test_payload_bytes_routes_through_dense_bytes():
+    from repro.core.payload import payload_bytes
+    assert payload_bytes(100, 25, dtype_bits=64) == C.dense_bytes(100, 25, 64)
+    assert payload_bytes(100, 25, dtype_bits=32) \
+        == C.wire_bytes(CodecConfig(name="fp32"), 100, 25)
+
+
+def test_payload_selector_codec_accounting():
+    from repro.core.payload import make_selector
+    sel8 = make_selector("random", num_arms=100, dim=25, keep_fraction=0.1,
+                         codec="int8")
+    sel32 = make_selector("random", num_arms=100, dim=25, keep_fraction=0.1)
+    assert sel8.round_payload_bytes \
+        == C.wire_bytes(CodecConfig(name="int8"), 10, 25)
+    assert sel8.round_payload_bytes < sel32.round_payload_bytes
+
+
+def test_direction_configs_topk_is_uplink_only():
+    down, up = C.direction_configs(CodecConfig(name="topk"))
+    assert down.name == "fp32" and up.name == "topk"
+    down, up = C.direction_configs(CodecConfig(name="int8"))
+    assert down.name == up.name == "int8"
+
+
+def test_compression_ratio_sane():
+    assert C.compression_ratio(CodecConfig(name="fp32"), 10, 25) == 1.0
+    assert C.compression_ratio(CodecConfig(name="int8"), 10, 25) > 3.0
+    assert C.compression_ratio(CodecConfig(name="int4"), 10, 25) > 5.0
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError):
+        C.validate_config(CodecConfig(name="zstd"))
+    with pytest.raises(ValueError):
+        C.wire_bytes(CodecConfig(name="zstd"), 1, 1)
+
+
+# --------------------------------------------------------------------- #
+# scan/jit-safety: codecs must trace with static shapes
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("cfg", ALL, ids=[c.name for c in ALL])
+def test_codec_traces_inside_jit_and_scan(cfg):
+    dim = 16
+
+    def body(carry, x):
+        y = C.roundtrip(cfg, x)
+        return carry + jnp.sum(y), y
+
+    xs = jnp.asarray(RNG.standard_normal((4, 5, dim)), jnp.float32)
+    total, ys = jax.jit(
+        lambda xs: jax.lax.scan(body, jnp.zeros(()), xs))(xs)
+    assert ys.shape == xs.shape
+    assert np.isfinite(float(total))

@@ -116,6 +116,83 @@ def test_scatter_set_rows_sweep(m, k, ms):
                                   np.asarray(table)[mask])
 
 
+# --------------------------------------------------------------------- #
+# fused payload compression kernels (bit-exactness contract vs the codec)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,ms", [(100, 16, 10), (500, 25, 50),
+                                    (64, 8, 64), (200, 128, 32)])
+def test_gather_quantize_rows_bit_exact(m, k, ms):
+    from repro.kernels import payload_quant as pq_mod
+
+    table = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    idx = jnp.asarray(RNG.choice(m, ms, replace=False).astype(np.int32))
+    codes, scales = pq_mod.gather_quantize_rows(table, idx, interpret=True)
+    want_codes, want_scales = ref.gather_quantize_rows_ref(table, idx)
+    assert codes.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(want_scales))
+
+
+def test_gather_quantize_matches_pure_codec_path():
+    """Fused kernel == gather_rows then codecs.quantize_rows, bit for bit —
+    the contract that lets the server route int8 downlinks through the
+    kernel while the python-backend reference uses the pure codec."""
+    from repro.compress.codecs import quantize_rows
+    from repro.kernels import payload_quant as pq_mod
+
+    table = jnp.asarray(RNG.standard_normal((300, 25)), jnp.float32)
+    idx = jnp.asarray(RNG.choice(300, 40, replace=False).astype(np.int32))
+    codes, scales = pq_mod.gather_quantize_rows(table, idx, interpret=True)
+    want_codes, want_scales = quantize_rows(table[idx], nbits=8)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(want_scales))
+
+
+def test_gather_quantize_zero_rows():
+    from repro.kernels import payload_quant as pq_mod
+
+    table = jnp.zeros((16, 8), jnp.float32)
+    idx = jnp.arange(8, dtype=jnp.int32)
+    codes, scales = pq_mod.gather_quantize_rows(table, idx, interpret=True)
+    assert (np.asarray(codes) == 0).all()
+    assert (np.asarray(scales) == 0).all()
+
+
+@pytest.mark.parametrize("m,k,ms", [(100, 16, 10), (500, 25, 50), (64, 8, 64)])
+def test_dequant_scatter_set_rows_bit_exact(m, k, ms):
+    from repro.kernels import payload_quant as pq_mod
+
+    table = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    idx = jnp.asarray(RNG.choice(m, ms, replace=False).astype(np.int32))
+    codes = jnp.asarray(RNG.integers(-127, 128, (ms, k)).astype(np.int8))
+    scales = jnp.asarray(
+        np.abs(RNG.standard_normal((ms, 1))).astype(np.float32))
+    got = pq_mod.dequant_scatter_set_rows(table.copy(), idx, codes, scales,
+                                          interpret=True)
+    want = ref.dequant_scatter_set_rows_ref(table, idx, codes, scales)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # untouched rows bit-identical
+    mask = np.ones(m, bool)
+    mask[np.asarray(idx)] = False
+    np.testing.assert_array_equal(np.asarray(got)[mask],
+                                  np.asarray(table)[mask])
+
+
+def test_quantize_wire_roundtrip_through_kernels():
+    """gather+quantize then dequant+scatter restores the table rows to
+    within the int8 half-step bound — the full downlink wire trip."""
+    from repro.kernels import payload_quant as pq_mod
+
+    table = jnp.asarray(RNG.standard_normal((120, 32)), jnp.float32)
+    idx = jnp.asarray(RNG.choice(120, 24, replace=False).astype(np.int32))
+    codes, scales = pq_mod.gather_quantize_rows(table, idx, interpret=True)
+    out = pq_mod.dequant_scatter_set_rows(table.copy(), idx, codes, scales,
+                                          interpret=True)
+    sel = np.asarray(idx)
+    err = np.abs(np.asarray(out)[sel] - np.asarray(table)[sel])
+    assert (err <= np.asarray(scales) / 2 + 1e-6).all()
+
+
 def test_gather_then_scatter_roundtrip():
     """Property: scatter(-gathered rows) restores zeros at selected rows'
     deltas — the payload round-trip used every FL iteration."""

@@ -83,6 +83,98 @@ def test_scan_engine_q_actually_changes(data):
 
 
 # --------------------------------------------------------------------- #
+# lossy-codec parity: the compressed engine must match its reference too
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_scan_matches_python_loop_bitwise_int8_codec(data, strategy):
+    """Same bit-for-bit scan==python contract with the int8 wire format in
+    the loop: quantized downlink Q*, quantized uplink gradients, codec-
+    routed byte counters."""
+    train, test = data
+    cfg = _cfg(strategy, codec="int8")
+    scan = run_fcf_simulation(train, test, replace(cfg, backend="scan"))
+    py = run_fcf_simulation(train, test, replace(cfg, backend="python"))
+
+    np.testing.assert_array_equal(scan.selections, py.selections)
+    np.testing.assert_array_equal(scan.rewards, py.rewards)
+    np.testing.assert_array_equal(np.asarray(scan.server_state.q),
+                                  np.asarray(py.server_state.q))
+    assert float(scan.server_state.bytes_down) == \
+        float(py.server_state.bytes_down)
+    assert float(scan.server_state.bytes_up) == \
+        float(py.server_state.bytes_up)
+    assert (scan.bytes_down, scan.bytes_up) == (py.bytes_down, py.bytes_up)
+    assert scan.history.series("f1") == py.history.series("f1")
+
+
+def test_topk_codec_threads_residual_through_scan(data):
+    """The EF residual must live in the scan carry: after a run it is
+    non-zero exactly on rows that were ever selected, and the scan and
+    python backends carry it identically."""
+    train, test = data
+    cfg = _cfg("bts", codec="topk")
+    scan = run_fcf_simulation(train, test, replace(cfg, backend="scan"))
+    py = run_fcf_simulation(train, test, replace(cfg, backend="python"))
+    res_scan = np.asarray(scan.server_state.codec)
+    res_py = np.asarray(py.server_state.codec)
+    np.testing.assert_array_equal(res_scan, res_py)
+    assert res_scan.shape == (train.shape[1], cfg.num_factors)
+    selected_ever = np.unique(scan.selections)
+    assert np.abs(res_scan[selected_ever]).max() > 0
+    untouched = np.setdiff1d(np.arange(train.shape[1]), selected_ever)
+    if untouched.size:
+        assert np.abs(res_scan[untouched]).max() == 0
+
+
+def test_codec_byte_counters_route_through_wire_bytes(data):
+    from repro.compress import CodecConfig, wire_bytes
+
+    train, test = data
+    cfg = _cfg("random", codec="int8")
+    res = run_fcf_simulation(train, test, cfg)
+    num_select = max(1, int(round(cfg.keep_fraction * train.shape[1])))
+    per_round = wire_bytes(CodecConfig(name="int8"), num_select,
+                           cfg.num_factors)
+    assert res.bytes_down == cfg.rounds * per_round
+    assert res.bytes_up == cfg.rounds * per_round * cfg.theta
+    assert float(res.server_state.bytes_down) == res.bytes_down
+    assert float(res.server_state.bytes_up) == res.bytes_up
+
+
+def test_lossy_codec_changes_trajectory_but_stays_close(data):
+    """int8 must actually bite (different Q than fp32) without wrecking
+    the learned model at this scale."""
+    train, test = data
+    cfg = _cfg("bts", rounds=8)
+    r32 = run_fcf_simulation(train, test, cfg)
+    r8 = run_fcf_simulation(train, test, replace(cfg, codec="int8"))
+    q32 = np.asarray(r32.server_state.q)
+    q8 = np.asarray(r8.server_state.q)
+    assert not np.array_equal(q32, q8)
+    # same selections up to the first reward divergence is not guaranteed,
+    # but the models should remain in the same ballpark
+    assert np.abs(q8 - q32).max() < 1.0
+    assert np.isfinite(q8).all()
+
+
+def test_strategy_sweep_codec_axis(data):
+    train, test = data
+    out = run_strategy_sweep(train, test, _cfg("bts", rounds=6, eval_every=3),
+                             strategies=("bts",), seeds=(0,),
+                             codecs=("fp32", "int8"))
+    assert set(out["bts"]) == {"fp32", "int8"}
+    fp32 = out["bts"]["fp32"][0]
+    int8 = out["bts"]["int8"][0]
+    assert int8.bytes_down < fp32.bytes_down
+    # codec sweep must match a direct run of the same config
+    single = run_fcf_simulation(
+        train, test, _cfg("bts", rounds=6, eval_every=3, codec="int8"))
+    np.testing.assert_array_equal(int8.selections, single.selections)
+    np.testing.assert_array_equal(np.asarray(int8.server_state.q),
+                                  np.asarray(single.server_state.q))
+
+
+# --------------------------------------------------------------------- #
 # byte accounting regression (float32 payload, not the Table-1 float64)
 # --------------------------------------------------------------------- #
 def test_byte_counters_match_float32_payload(data):
