@@ -46,6 +46,27 @@ def markdown_table(headers: Sequence[str], rows: Sequence[Sequence[Any]]) -> str
     return "\n".join(lines)
 
 
+def per_round_payload_bytes(num_select: int, k: int, codec: str = "fp32",
+                            theta: int = 1) -> Dict[str, int]:
+    """One FL round's payload bytes — the schema shared by the perf benches.
+
+    ``{"down": <server->cohort bytes>, "up": <cohort->server bytes>}`` with
+    both directions priced by ``repro.compress.wire_bytes`` (the same
+    function the traced in-state counters use), the uplink multiplied by the
+    ``theta`` users whose updates trigger a commit. ``BENCH_round_engine.json``
+    and ``BENCH_sharded_rounds.json`` both embed this dict per measured
+    configuration so the perf trajectory can be read as (rounds/sec,
+    bytes/round) pairs across files.
+    """
+    from repro.compress import CodecConfig, direction_configs, wire_bytes
+
+    down_cfg, up_cfg = direction_configs(CodecConfig(name=codec))
+    return {
+        "down": wire_bytes(down_cfg, num_select, k),
+        "up": wire_bytes(up_cfg, num_select, k) * theta,
+    }
+
+
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall-time per call in microseconds (blocks on jax arrays)."""
     import jax

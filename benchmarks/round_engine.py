@@ -40,7 +40,7 @@ from repro.cf.server import FCFServer, FCFServerConfig
 from repro.core.payload import make_selector
 from repro.federated.simulation import FLSimConfig, _build, _make_round_fn
 
-from benchmarks.common import markdown_table
+from benchmarks.common import markdown_table, per_round_payload_bytes
 
 OUT_PATH = "BENCH_round_engine.json"
 REPEATS = 3   # best-of repeats per engine (CPU benchmarks are noisy)
@@ -172,12 +172,20 @@ def run(quick: bool = False) -> Dict:
         rps_py = time_python(train, test, cfg, loop_rounds)
         rps_scan = time_scan(train, test, cfg, scan_rounds)
         speedup = rps_scan / rps_legacy
+        num_select = items if strategy == "full" \
+            else int(round(cfg.keep_fraction * items))
         out["strategies"][strategy] = {
             "legacy_rounds_per_sec": rps_legacy,
             "python_rounds_per_sec": rps_py,
             "scan_rounds_per_sec": rps_scan,
             "speedup_scan_vs_legacy": speedup,
             "speedup_scan_vs_python": rps_scan / rps_py,
+            # shared perf-trajectory schema with BENCH_sharded_rounds.json:
+            # every rounds/sec figure pairs with the payload bytes one round
+            # moves at this configuration (codec=fp32, theta uplink users)
+            "bytes_per_round": per_round_payload_bytes(
+                num_select, cfg.num_factors, codec=cfg.codec,
+                theta=min(cfg.theta, users)),
         }
         rows.append((strategy, f"{rps_legacy:.1f}", f"{rps_py:.1f}",
                      f"{rps_scan:.1f}", f"{speedup:.1f}x"))

@@ -23,7 +23,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     from benchmarks import (convergence, fcf_experiments, kernel_bench,
                             payload_compression, payload_table,
-                            reduction_sweep, roofline, table4)
+                            reduction_sweep, roofline, sharded_rounds, table4)
 
     t0 = time.time()
     print("=" * 72)
@@ -38,6 +38,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         table4.main(["--dry-run"])
         convergence.main(["--dry-run"])
         payload_compression.main(["--dry-run"])
+        sharded_rounds.main(["--dry-run"])
         roofline.main(["--dry-run"])
         print(f"\n[dry-run] all sections smoke-checked in "
               f"{time.time() - t0:.1f}s")
@@ -60,6 +61,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
             # default CPU scale: smaller grid, don't clobber the artifact
             payload_compression.run(rounds=60, theta=30, keeps=(0.10,),
                                     time_rounds=20, out_path=None)
+
+    # sharded engine scaling (spawns fake-device workers; CPU-sized grid)
+    sharded_rounds.run(quick=not args.full)
 
     roofline.run(mesh="pod16x16")
     roofline.run(mesh="pod2x16x16")

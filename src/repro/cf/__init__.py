@@ -1,8 +1,8 @@
 from repro.cf.model import CFConfig, CFModel, cf_init
 from repro.cf.local import solve_user_factors, item_gradients, local_update
 from repro.cf.server import (
-    FCFServer, FCFServerConfig, RoundAux, ServerState, server_init,
-    server_round_step,
+    FCFServer, FCFServerConfig, RoundAux, ServerState, ShardContext,
+    server_init, server_round_step, shard_row_ops,
 )
 from repro.cf.metrics import RecMetrics, evaluate_users, theoretical_best
 from repro.cf.toplist import toplist_ranking
@@ -11,6 +11,7 @@ __all__ = [
     "CFConfig", "CFModel", "cf_init",
     "solve_user_factors", "item_gradients", "local_update",
     "FCFServer", "FCFServerConfig",
-    "ServerState", "RoundAux", "server_init", "server_round_step",
+    "ServerState", "RoundAux", "ShardContext", "server_init",
+    "server_round_step", "shard_row_ops",
     "RecMetrics", "evaluate_users", "theoretical_best", "toplist_ranking",
 ]

@@ -12,7 +12,7 @@ Implicit-feedback algebra used throughout (binary x, c = 1 + alpha*x):
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Tuple
 
 import jax
@@ -20,6 +20,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cf.model import CFConfig
+
+
+@lru_cache(maxsize=None)
+def _tri_maps(k: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Upper-triangle index maps for the symmetric K x K mirror trick.
+
+    Returns ``(iu, il, tri_of_flat)``: the upper-triangle coordinates and the
+    flattened (K*K,) gather map that mirrors a packed K(K+1)/2 triangle back
+    to the full symmetric matrix. Cached per K so repeated retraces of the
+    round step and the eval path (both route through
+    :func:`solve_user_factors`) stop rebuilding the O(K^2) numpy maps on
+    every trace.
+    """
+    iu, il = np.triu_indices(k)
+    tri_of = np.zeros((k, k), np.int32)
+    tri_of[iu, il] = np.arange(iu.size)
+    tri_of[il, iu] = tri_of[iu, il]
+    return iu, il, tri_of.reshape(-1)
 
 
 @partial(jax.jit, static_argnames=("l2", "alpha"))
@@ -43,14 +61,11 @@ def solve_user_factors(
     k = q.shape[-1]
     gram = q.T @ q                                     # (K, K), shared term
     # upper-triangle outer products: (M_s, K(K+1)/2)
-    iu, il = np.triu_indices(k)
+    iu, il, tri_of_flat = _tri_maps(k)
     qq_tri = q[:, iu] * q[:, il]
     corr_tri = x @ qq_tri                              # (B, K(K+1)/2)
-    # mirror to the full symmetric (B, K, K) via a trace-time gather map
-    tri_of = np.zeros((k, k), np.int32)
-    tri_of[iu, il] = np.arange(iu.size)
-    tri_of[il, iu] = tri_of[iu, il]
-    corr = corr_tri[:, tri_of.reshape(-1)].reshape(x.shape[0], k, k)
+    # mirror to the full symmetric (B, K, K) via the cached gather map
+    corr = corr_tri[:, tri_of_flat].reshape(x.shape[0], k, k)
     lhs = gram[None] + alpha * corr + l2 * jnp.eye(k, dtype=q.dtype)[None]
     rhs = (1.0 + alpha) * (x @ q)                      # (B, K)
     # lhs = Q^T Q + alpha*sum x q q^T + l2 I is SPD by construction, so a

@@ -38,6 +38,7 @@ from repro.core.selector import (
     selector_select,
 )
 from repro.kernels import ops
+from repro.utils.compat import optimization_barrier
 from repro.optim.adam import (
     AdamConfig, AdamState, adam_init, adam_update_rows,
     adam_update_rows_scattered,
@@ -88,6 +89,68 @@ class RoundAux(NamedTuple):
     rewards: jax.Array      # (M_s,) bandit rewards (zeros for non-learners)
 
 
+class ShardContext(NamedTuple):
+    """Static description of one FL round's data-parallel execution.
+
+    Inside ``shard_map`` over a 1-D ``(axis,)`` device mesh, every (M, K)
+    table (global model Q, Adam moments, BTS reward buffers, codec residual)
+    is row-sharded into ``rows_per_shard = M // num_shards`` blocks, the
+    cohort is split into ``num_shards`` user blocks (one per device), and all
+    small control state (selector posteriors, PRNG key, byte counters) is
+    replicated. See :func:`server_round_step` for the collective schedule.
+    """
+
+    axis: str               # mesh axis name the tables/cohort shard over
+    num_shards: int         # D — devices on the axis
+    rows_per_shard: int     # M // D rows of each (M, K) table per device
+
+
+def shard_row_ops(shard: ShardContext) -> ops.RowOps:
+    """Collective-aware row ops over row-sharded (M, K) tables.
+
+    gather: each shard block-gathers a full (M_s, K) candidate (clamped
+    local indices, one kernel pass over its own rows), the candidates are
+    all-gathered, and the owner-select keeps each row from the one shard
+    that holds it — pure data movement, so the assembled rows are bit-equal
+    to a single-device gather. scatter_set: shard-local drop-scatter of the
+    rows this shard owns (no collective; every shard already holds the full
+    (M_s, K) update replicated).
+    """
+    def gather(table: jax.Array, idx: jax.Array) -> jax.Array:
+        cand = ops.gather_rows_block(table, _local_idx(shard, idx))
+        # barrier per the RowOps contract: consumers must see the same
+        # materialized producer graph as the single-device gather
+        return optimization_barrier(assemble_rows(shard, idx, cand))
+
+    def scatter_set(table: jax.Array, idx: jax.Array,
+                    rows: jax.Array) -> jax.Array:
+        return ops.scatter_set_rows_block(table, _local_idx(shard, idx), rows)
+
+    return ops.RowOps(gather=gather, scatter_set=scatter_set)
+
+
+def _local_idx(shard: ShardContext, idx: jax.Array) -> jax.Array:
+    """Global payload indices -> this shard's local row coordinates."""
+    d = jax.lax.axis_index(shard.axis)
+    return idx.astype(jnp.int32) - d * shard.rows_per_shard
+
+
+def assemble_rows(shard: ShardContext, idx: jax.Array,
+                  candidate: jax.Array) -> jax.Array:
+    """All-gather per-shard candidate blocks and keep each row's owner copy.
+
+    ``candidate`` is this shard's (M_s, ...) block-gather result (rows it
+    does not own are clamp artifacts). The all-gather moves the candidate in
+    whatever format it is in — for the int8 downlink that is the quantized
+    wire image, 4x fewer bytes on the interconnect than fp32 rows — and the
+    owner-select is exact (selection, not summation), so the assembled block
+    is bit-identical to the single-device gather.
+    """
+    gathered = jax.lax.all_gather(candidate, shard.axis, axis=0)  # (D, M_s, .)
+    owner = (idx.astype(jnp.int32) // shard.rows_per_shard)[None, :, None]
+    return jnp.take_along_axis(gathered, owner, axis=0)[0]
+
+
 def server_init(
     item_factors: jax.Array,
     sel_cfg: SelectorConfig,
@@ -110,14 +173,43 @@ def server_init(
     )
 
 
+def _downlink_wire(state_q: jax.Array, idx: jax.Array, down_cfg: CodecConfig,
+                   shard: Optional[ShardContext]):
+    """Gather + encode the payload rows Q* into their wire image.
+
+    Single device: one kernel pass over the resident table (fused
+    gather+quantize for int8). Sharded: each device encodes the candidate
+    rows of its own block *first* and only then all-gathers, so the
+    collective moves the wire image (int8 codes + per-row scales for int8,
+    fp16 halves for fp16) instead of fp32 rows — the "all-gather the
+    selected-and-compressed rows, not the table" schedule. Encoding is
+    per-row, so owner-selected rows are bit-identical to a single-device
+    encode.
+    """
+    if shard is None:
+        if down_cfg.name == "int8":
+            # hot path: fused gather+quantize kernel (one HBM trip per row)
+            return QuantWire(*ops.gather_quantize_rows(state_q, idx))
+        return encode(down_cfg, ops.gather_rows(state_q, idx))
+    local = _local_idx(shard, idx)
+    if down_cfg.name == "int8":
+        wire_local = QuantWire(*ops.gather_quantize_rows_block(state_q, local))
+    else:
+        wire_local = encode(down_cfg, ops.gather_rows_block(state_q, local))
+    return jax.tree.map(lambda leaf: assemble_rows(shard, idx, leaf),
+                        wire_local)
+
+
 def server_round_step(
     state: ServerState,
-    cohort_x,                      # (B, M) cohort rows, or idx -> (B, M_s)
+    cohort_x,                      # (B, M) cohort rows, or idx -> cohort blocks
     *,
     sel_cfg: SelectorConfig,
     config: FCFServerConfig,
     cf_cfg: CFConfig,
     codec_cfg: CodecConfig = CodecConfig(),
+    num_users: Optional[int] = None,
+    shard: Optional[ShardContext] = None,
 ) -> Tuple[ServerState, RoundAux]:
     """One fused FL round (Alg. 1 lines 8-19) as a pure function.
 
@@ -126,10 +218,41 @@ def server_round_step(
     ever sees the aggregated gradient (the paper's privacy model).
 
     ``cohort_x`` is either the dense (B, M) cohort slice of the interaction
-    matrix, or a callable mapping the selected indices (M_s,) to the (B, M_s)
+    matrix, or a callable mapping the selected indices (M_s,) to the cohort's
     column subset directly — the lazy form lets the driver fuse the
     user-row/item-column gather into one indexed read instead of
-    materializing (B, M) per round (a real cost at web-scale M).
+    materializing (B, M) per round (a real cost at web-scale M). The callable
+    may return either a flat (B, M_s) block or pre-blocked (C, b, M_s) user
+    blocks; padded user rows (all-zero x) contribute exactly zero to every
+    aggregate, so drivers pad the cohort to equal blocks and pass the true
+    cohort size as ``num_users``.
+
+    CLIENT PHASE BLOCKING. The cohort solve + item gradients are computed
+    per user block, and the per-block partial gradients are reduced in fixed
+    block order behind a ``lax.optimization_barrier`` (the barrier pins the
+    reduction boundary so XLA cannot refuse the blocks' materialization and
+    re-fuse the sum into a differently-ordered accumulation). This makes the
+    round's float semantics a function of the *block structure only*: a
+    single device scanning C blocks and a ``shard_map`` mesh solving one
+    block per device over C devices produce bit-identical trajectories —
+    the all-gather of partials followed by the same ordered sum is exactly
+    an order-fixed psum.
+
+    Bit-parity caveat: the contract is enforced (by tier-1 test) for the
+    fp32/fp16/int8 codecs across every strategy. The int4/topk *programs*
+    fuse their unpack/sparsify chains into the moment-update loops, and
+    XLA:CPU's FMA-contraction choice inside those fusions can differ
+    between the sharded and single-device programs — trajectories then
+    agree to float32 contraction ulps (~1e-7 relative) rather than
+    bit-for-bit. Selections and wire bytes remain identical.
+
+    SHARDED EXECUTION (``shard`` set, inside ``shard_map``): the (M, K)
+    tables in ``state`` (Q, Adam moments, BTS reward buffers, codec
+    residual) are row-sharded over ``shard.axis``; selection and all small
+    state are replicated. Per round only payload-sized tensors cross the
+    interconnect: the encoded Q* candidates (all-gather), the (M_s, K)
+    partial gradients (all-gather == ordered psum), and the row gathers of
+    the Adam/reward/residual tables; every scatter commit is shard-local.
 
     ``codec_cfg`` names the wire format for the item-dependent payload
     (:mod:`repro.compress`). Every transmitted tensor physically goes
@@ -148,50 +271,70 @@ def server_round_step(
     m_s = sel_cfg.num_select
     kdim = state.q.shape[1]
     key, k_sel = jax.random.split(state.key)
+    row_ops = ops.default_row_ops() if shard is None else shard_row_ops(shard)
 
     # lines 8-10: select the payload subset, gather + encode + "transmit" Q*;
     # clients decode the wire image, so q_star below is what they compute on
     idx, sel = selector_select(sel_cfg, state.sel, k_sel)
-    if down_cfg.name == "int8":
-        # hot path: fused gather+quantize kernel (one HBM trip per row)
-        down_wire = QuantWire(*ops.gather_quantize_rows(state.q, idx))
-    else:
-        down_wire = encode(down_cfg, ops.gather_rows(state.q, idx))
-    q_star = decode(down_cfg, down_wire, kdim)               # (M_s, K)
+    q_star = decode(down_cfg, _downlink_wire(state.q, idx, down_cfg, shard),
+                    kdim)                                    # (M_s, K)
+    q_star = optimization_barrier(q_star)
     bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
 
     # line 11: every cohort user solves p_i on-device and uplinks gradients;
-    # the server receives the cohort aggregate
+    # the server receives the cohort aggregate, assembled block-by-block
     if callable(cohort_x):
-        x_sub = cohort_x(idx)                                # (B, M_s)
+        x_blocks = cohort_x(idx)                 # (C, b, M_s) or (B, M_s)
     else:
-        x_sub = jnp.take(cohort_x, idx, axis=1)              # (B, M_s)
-    p = solve_user_factors(q_star, x_sub, l2=cf_cfg.l2, alpha=cf_cfg.alpha)
-    grads = ops.fcf_item_gradients(
-        q_star, p, x_sub, alpha=cf_cfg.alpha, l2=cf_cfg.l2)  # (M_s, K)
-    num_users = x_sub.shape[0]
+        x_blocks = jnp.take(cohort_x, idx, axis=1)           # (B, M_s)
+    if x_blocks.ndim == 2:
+        x_blocks = x_blocks[None]                            # one block
+    if num_users is None:
+        num_users = x_blocks.shape[0] * x_blocks.shape[1]
+    parts = []
+    for i in range(x_blocks.shape[0]):
+        p_i = solve_user_factors(q_star, x_blocks[i],
+                                 l2=cf_cfg.l2, alpha=cf_cfg.alpha)
+        # data term only (l2=0): the ridge term is applied once, below, with
+        # the true cohort size — padded all-zero user rows solve to p=0 and
+        # contribute exactly zero here
+        parts.append(ops.fcf_item_gradients(
+            q_star, p_i, x_blocks[i], alpha=cf_cfg.alpha, l2=0.0))
+    parts = jnp.stack(parts)                                 # (C, M_s, K)
+    if shard is not None:
+        # ordered psum: all-gather the per-device partials and reduce in
+        # fixed block order — bit-stable against the single-device scan
+        # over the same blocks (a raw lax.psum orders by topology)
+        parts = jax.lax.all_gather(parts, shard.axis, axis=0, tiled=True)
+    parts = optimization_barrier(parts)
+    grads = (jnp.sum(parts, axis=0)
+             + 2.0 * cf_cfg.l2 * num_users * q_star)         # (M_s, K)
 
     # uplink encode (+ error feedback for stateful codecs): the server only
     # ever sees the decoded wire image of the aggregated gradient
     codec_state = state.codec
     if is_stateful(up_cfg):
-        res_rows = ops.gather_rows(codec_state, idx)         # (M_s, K)
+        res_rows = row_ops.gather(codec_state, idx)          # (M_s, K)
         _, grads_hat, new_res = encode_with_residual(up_cfg, grads, res_rows)
-        codec_state = ops.scatter_set_rows(codec_state, idx, new_res)
+        codec_state = row_ops.scatter_set(codec_state, idx, new_res)
     else:
         grads_hat = decode(up_cfg, encode(up_cfg, grads), kdim)
+    grads_hat = optimization_barrier(grads_hat)
     bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
 
-    # line 13: sparse Adam commit on the selected rows (scatter kernels)
+    # line 13: sparse Adam commit on the selected rows (scatter kernels;
+    # shard-local scatters against the row-sharded tables when sharded)
     q_new, opt = adam_update_rows_scattered(
-        grads_hat, idx, state.opt, state.q, config.adam)
+        grads_hat, idx, state.opt, state.q, config.adam, row_ops=row_ops)
 
     # lines 14-18: reward feedback + posterior update — on the decoded
     # gradients (the only thing a codec-running server would have)
     feedback = grads_hat
     if config.reward_feedback == "data_term":
-        feedback = grads_hat - 2.0 * config.l2 * num_users * q_star
-    sel, rewards = selector_observe(sel_cfg, sel, idx, feedback)
+        feedback = optimization_barrier(
+            grads_hat - 2.0 * config.l2 * num_users * q_star)
+    sel, rewards = selector_observe(sel_cfg, sel, idx, feedback,
+                                    row_ops=row_ops)
 
     new_state = ServerState(
         q=q_new, opt=opt, sel=sel, key=key, t=state.t + 1,

@@ -79,18 +79,35 @@ def compute_rewards(
     gamma: float = 0.999,
     beta2: float = 0.99,
     mode: str = "geometric",
+    row_ops=None,         # optional kernels.ops.RowOps for sharded buffers
 ) -> Tuple[jax.Array, RewardState]:
     """Rewards for the selected arms + updated buffers (Alg. 1 lines 14-18).
 
     Order of operations follows Algorithm 1: v is updated with the *current*
     gradient (line 14) before the reward is computed (line 16), and prev_grad
     is replaced after (line 18).
+
+    The (M, K) buffers are touched only through row gather/scatter of the
+    selected arms, so passing a ``row_ops`` pair (``repro.kernels.ops.RowOps``)
+    lets the same math run against row-sharded buffers inside ``shard_map``
+    (the sharded round engine row-shards v/prev_grad exactly like the global
+    model). ``None`` keeps the resident-table fast path.
     """
     t = jnp.asarray(t, jnp.float32)
-    v_sel = state.v[indices]
-    prev_sel = state.prev_grad[indices]
+    if row_ops is None:
+        v_sel = state.v[indices]
+        prev_sel = state.prev_grad[indices]
+    else:
+        v_sel = row_ops.gather(state.v, indices)
+        prev_sel = row_ops.gather(state.prev_grad, indices)
 
     v_new = update_v(v_sel, grads, beta2)
+    if row_ops is not None:
+        # pin the EMA's fusion boundary (see kernels.ops.RowOps): the same
+        # expression must compile identically whether a resident or a
+        # shard-local scatter consumes it
+        from repro.utils.compat import optimization_barrier
+        v_new = optimization_barrier(v_new)
 
     if mode == "geometric":
         w_cos = 1.0 - jnp.power(gamma, t)
@@ -106,8 +123,14 @@ def compute_rewards(
     delta_term = (gamma / t) * jnp.sum(jnp.abs(prev_sel - grads), axis=-1)
     rewards = cos_term + delta_term
 
-    new_state = RewardState(
-        v=state.v.at[indices].set(v_new),
-        prev_grad=state.prev_grad.at[indices].set(grads),
-    )
+    if row_ops is None:
+        new_state = RewardState(
+            v=state.v.at[indices].set(v_new),
+            prev_grad=state.prev_grad.at[indices].set(grads),
+        )
+    else:
+        new_state = RewardState(
+            v=row_ops.scatter_set(state.v, indices, v_new),
+            prev_grad=row_ops.scatter_set(state.prev_grad, indices, grads),
+        )
     return rewards, new_state

@@ -159,17 +159,25 @@ def selector_observe(
     state: SelectorState,
     indices: jax.Array,    # (num_select,) arms selected this round
     feedback: jax.Array,   # (num_select, dim) aggregated gradient feedback
+    row_ops=None,          # optional kernels.ops.RowOps for sharded buffers
 ) -> Tuple[SelectorState, jax.Array]:
     """Feed back the round's aggregated gradients (Alg. 1 lines 14-18).
 
     Returns ``(new_state, per-arm rewards)``; rewards are zeros for the
     strategies that do not learn from feedback (uniform logging shape).
+
+    ``row_ops`` (``repro.kernels.ops.RowOps``) routes the BTS reward
+    buffers' row traffic — the only O(M*K) state a selector carries — so the
+    sharded round engine can keep those buffers row-sharded next to the
+    global model. The (M,) posterior/count vectors always stay resident
+    (selection is a full-table top_k).
     """
     if cfg.strategy == "bts":
         rewards, reward_state = compute_rewards(
             state.reward, indices, feedback,
             t=state.t.astype(jnp.float32),
             gamma=cfg.gamma, beta2=cfg.beta2, mode=cfg.reward_mode,
+            row_ops=row_ops,
         )
         if cfg.reward_norm:
             mu = jnp.mean(rewards)

@@ -1,6 +1,7 @@
 from repro.federated.simulation import (
     FLSimConfig,
     SimResult,
+    make_sharded_round_runner,
     run_fcf_simulation,
     run_seed_sweep,
     run_strategy_sweep,
@@ -8,5 +9,5 @@ from repro.federated.simulation import (
 
 __all__ = [
     "FLSimConfig", "run_fcf_simulation", "SimResult",
-    "run_seed_sweep", "run_strategy_sweep",
+    "make_sharded_round_runner", "run_seed_sweep", "run_strategy_sweep",
 ]

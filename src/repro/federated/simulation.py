@@ -45,7 +45,8 @@ import numpy as np
 from repro.cf.metrics import RecMetrics, evaluate_users
 from repro.cf.model import CFConfig, cf_init
 from repro.cf.server import (
-    FCFServerConfig, ServerState, server_init, server_round_step,
+    FCFServerConfig, RoundAux, ServerState, ShardContext, server_init,
+    server_round_step,
 )
 from repro.compress import (
     CodecConfig, direction_configs, validate_config, wire_bytes,
@@ -58,7 +59,7 @@ from repro.utils.logging import MetricLogger, get_logger
 
 log = get_logger("repro.fl")
 
-BACKENDS = ("scan", "python")
+BACKENDS = ("scan", "python", "shard")
 
 
 @dataclass
@@ -88,7 +89,18 @@ class FLSimConfig:
     # evaluate the eval cohort in user-chunks of this size (None = one shot);
     # bounds the (B, M) score matrix at web-scale M
     eval_user_chunk: Optional[int] = None
-    backend: str = "scan"                # "scan" | "python" (reference)
+    # "scan" (default engine) | "python" (reference) | "shard" (shard_map
+    # data-parallel rounds over a ("data",) device mesh)
+    backend: str = "scan"
+    # client-phase block count: the cohort solve runs in this many equal user
+    # blocks whose partial gradients are reduced in fixed order (see
+    # server_round_step). The round's float semantics depend on this number
+    # ONLY — backend="shard" over D devices is bit-identical to
+    # backend="scan" with cohort_shards=D.
+    cohort_shards: int = 1
+    # backend="shard": devices on the "data" mesh axis (None = all local
+    # devices). Overrides cohort_shards (one cohort block per device).
+    mesh_shards: Optional[int] = None
     record_selections: bool = False      # surface per-round indices/rewards
     seed: int = 0
 
@@ -204,20 +216,129 @@ def _build(train_j: jax.Array, test_j: jax.Array,
     )
 
 
-def _make_round_fn(train_j: jax.Array, setup: _SimSetup):
+def _blocked_cohort_x(train_j: jax.Array, ids: jax.Array, shards: int,
+                      num_users: int):
+    """Lazy blocked cohort slice for the round step.
+
+    ``ids`` is the flat (possibly padded) cohort id vector this caller owns
+    (the full padded cohort on a single device, one block of it per device
+    under ``shard_map``). Returns ``idx -> (C_local, b, M_s)`` where padded
+    user rows are zeroed — an all-zero x row solves to p=0 and contributes
+    exactly zero to every aggregate, so padding never changes the math.
+    """
+    total = ids.shape[0]
+    c_local = shards
+    b = total // shards
+
+    def cohort_x(idx):
+        # one fused (user-row x item-column) gather once the payload subset
+        # is known, instead of a (B, M) copy per round
+        x = train_j[ids[:, None], idx[None, :]]              # (total, M_s)
+        if num_users < total:
+            mask = (jnp.arange(total) < num_users).astype(x.dtype)
+            x = x * mask[:, None]
+        return x.reshape(c_local, b, idx.shape[0])
+
+    return cohort_x
+
+
+def _pad_cohort(cohort: jax.Array, shards: int) -> jax.Array:
+    """Pad a flat (B,) cohort id vector to a multiple of ``shards``.
+
+    Pad entries reuse user id 0; their interaction rows are masked to zero
+    by :func:`_blocked_cohort_x` so they are exact no-ops.
+    """
+    b_total = cohort.shape[0]
+    b = -(-b_total // shards)
+    return jnp.pad(cohort, (0, shards * b - b_total))
+
+
+def _make_round_fn(train_j: jax.Array, setup: _SimSetup,
+                   cohort_shards: int = 1):
     """(state, cohort_ids (B,)) -> (state, RoundAux): one fused FL round."""
     sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
 
     def round_fn(state: ServerState, cohort: jax.Array):
-        # lazy cohort slice: one fused (user-row x item-column) gather once
-        # the payload subset is known, instead of a (B, M) copy per round
-        def cohort_x(idx):
-            return train_j[cohort[:, None], idx[None, :]]
+        num_users = cohort.shape[0]
+        ids = _pad_cohort(cohort, cohort_shards)
+        cohort_x = _blocked_cohort_x(train_j, ids, cohort_shards, num_users)
         return server_round_step(
             state, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
-            codec_cfg=setup.codec_cfg)
+            codec_cfg=setup.codec_cfg, num_users=num_users)
 
     return round_fn
+
+
+def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
+                              config: FLSimConfig, record: bool = False):
+    """Compile the FL round scan as a ``shard_map`` program over a device mesh.
+
+    Returns ``(run_chunk, state0)``: ``run_chunk(state, cohorts (R, B) np)``
+    scans R data-parallel rounds, ``state0`` is the initial server state with
+    its (M, K) tables row-sharded over the ("data",) mesh (everything else
+    replicated). Each device holds M/D rows of Q / Adam moments / BTS reward
+    buffers / codec residual and solves one cohort block of ceil(B/D) users
+    per round; per round only payload-sized tensors cross the interconnect
+    (encoded Q* candidates, partial gradients, selected-row gathers).
+    Trajectories are bit-identical to ``backend="scan"`` with
+    ``cohort_shards=D`` (see :func:`repro.cf.server.server_round_step`).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_data_mesh
+    from repro.launch.sharding import fcf_state_pspecs, to_shardings
+    from repro.utils.compat import shard_map
+
+    d = config.mesh_shards or len(jax.devices())
+    m = setup.cf_cfg.num_items
+    if m % d:
+        raise ValueError(
+            f"backend='shard' row-shards the (M, K) tables: num_items={m} "
+            f"must divide evenly over {d} devices")
+    mesh = make_data_mesh(d)
+    b_total = setup.cohorts.shape[1]
+    b = -(-b_total // d)                  # users per device block
+    shard_ctx = ShardContext(axis="data", num_shards=d, rows_per_shard=m // d)
+    sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
+    padded = d * b != b_total
+
+    state_specs = fcf_state_pspecs(setup.state0)
+    state0 = jax.device_put(setup.state0, to_shardings(mesh, state_specs))
+
+    def chunk(state, cohorts_blk, train_rep):
+        # local views: cohorts_blk (R, 1, b); train_rep replicated (N, M)
+        def body(st, cohort_l):
+            ids = cohort_l.reshape(-1)                       # (b,)
+            didx = jax.lax.axis_index("data")
+
+            def cohort_x(idx):
+                x = train_rep[ids[:, None], idx[None, :]]    # (b, M_s)
+                if padded:
+                    pos = didx * b + jnp.arange(b)
+                    x = x * (pos < b_total).astype(x.dtype)[:, None]
+                return x[None]                               # (1, b, M_s)
+
+            st, aux = server_round_step(
+                st, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
+                codec_cfg=setup.codec_cfg, num_users=b_total, shard=shard_ctx)
+            return st, (aux if record else None)
+
+        return jax.lax.scan(body, state, cohorts_blk)
+
+    aux_specs = RoundAux(indices=P(), rewards=P()) if record else None
+    run = jax.jit(shard_map(
+        chunk, mesh=mesh,
+        in_specs=(state_specs, P(None, "data", None), P()),
+        out_specs=(state_specs, aux_specs), check_vma=False))
+
+    def run_chunk(state, cohorts):
+        cohorts = np.asarray(cohorts)
+        r = cohorts.shape[0]
+        ids = np.pad(cohorts, ((0, 0), (0, d * b - b_total)))
+        blocked = jnp.asarray(ids.reshape(r, d, b).astype(np.int32))
+        return run(state, blocked, train_j)
+
+    return run_chunk, state0
 
 
 def _evaluate(q: jax.Array, eval_train: jax.Array, eval_test: jax.Array,
@@ -297,29 +418,38 @@ def run_fcf_simulation(
     train_j = jnp.asarray(train_x, jnp.float32)
     test_j = jnp.asarray(test_x, jnp.float32)
     setup = _build(train_j, test_j, config)
-    round_fn = _make_round_fn(train_j, setup)
     record = config.record_selections
-
-    def scan_chunk(state, cohorts):
-        def body(st, cohort):
-            st, aux = round_fn(st, cohort)
-            return st, (aux if record else None)
-        return jax.lax.scan(body, state, cohorts)
 
     history = MetricLogger(csv_path)
     state = setup.state0
     aux_chunks: List = []
 
-    if config.backend == "scan":
-        run_chunk = jax.jit(scan_chunk)
+    if config.backend in ("scan", "shard"):
+        if config.backend == "shard":
+            run_chunk, state = make_sharded_round_runner(
+                train_j, setup, config, record=record)
+        else:
+            round_fn = _make_round_fn(train_j, setup, config.cohort_shards)
+
+            def scan_chunk(st, cohorts):
+                def body(s, cohort):
+                    s, aux = round_fn(s, cohort)
+                    return s, (aux if record else None)
+                return jax.lax.scan(body, st, cohorts)
+
+            compiled = jax.jit(scan_chunk)
+
+            def run_chunk(st, cohorts):
+                return compiled(st, jnp.asarray(cohorts))
+
         for start, end in _chunk_bounds(config.rounds, config.eval_every):
-            state, aux = run_chunk(
-                state, jnp.asarray(setup.cohorts[start:end]))
+            state, aux = run_chunk(state, setup.cohorts[start:end])
             if record:
                 aux_chunks.append(aux)
             m = _evaluate(state.q, setup.eval_train, setup.eval_test, config)
             history.log(end, **m.as_dict())
     else:  # "python": the per-round-dispatch reference loop
+        round_fn = _make_round_fn(train_j, setup, config.cohort_shards)
         step = jax.jit(round_fn)
         for t in range(1, config.rounds + 1):
             state, aux = step(state, jnp.asarray(setup.cohorts[t - 1]))

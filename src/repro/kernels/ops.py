@@ -11,7 +11,7 @@ Backend dispatch:
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,73 @@ def gather_quantize_rows(table: jax.Array, idx: jax.Array):
     if _use_ref():
         return _ref.gather_quantize_rows_ref(table, idx)
     return _pq.gather_quantize_rows(table, idx, interpret=_interpret())
+
+
+# ------------------------------------------------------------------ #
+# shard-local (row-block) variants — the per-device halves of the
+# collective row ops used by the sharded round engine. ``local_idx``
+# is ``global_idx - shard_offset``; out-of-range entries are rows the
+# shard does not own (gathers clamp and let the owner-select drop them,
+# scatters drop the write).
+# ------------------------------------------------------------------ #
+def gather_rows_block(table: jax.Array, local_idx: jax.Array) -> jax.Array:
+    """Shard-local payload gather over one row block of a sharded table."""
+    if _use_ref():
+        return _ref.gather_rows_block_ref(table, local_idx)
+    return _pg.gather_rows_block(table, local_idx, interpret=_interpret())
+
+
+def scatter_set_rows_block(
+    table: jax.Array, local_idx: jax.Array, rows: jax.Array
+) -> jax.Array:
+    """Shard-local row commit: in-range rows written, out-of-range dropped."""
+    if _use_ref():
+        return _ref.scatter_set_rows_block_ref(table, local_idx, rows)
+    return _pg.scatter_set_rows_block(table, local_idx, rows,
+                                      interpret=_interpret())
+
+
+def gather_quantize_rows_block(table: jax.Array, local_idx: jax.Array):
+    """Shard-local fused gather+int8-quantize over one row block."""
+    if _use_ref():
+        return _ref.gather_quantize_rows_block_ref(table, local_idx)
+    return _pq.gather_quantize_rows_block(table, local_idx,
+                                          interpret=_interpret())
+
+
+class RowOps(NamedTuple):
+    """Row-granular access to a (possibly row-sharded) (M, K) table.
+
+    The FL round step, the sparse Adam commit and the BTS reward update all
+    touch full tables only through gather/scatter of the selected payload
+    rows. Abstracting that pair lets the same code run on a resident table
+    (``default_row_ops`` — the Pallas/jnp kernels above) or on a row shard
+    inside ``shard_map`` (collective-aware ops built by
+    :func:`repro.cf.server.shard_row_ops`: local gather -> all-gather ->
+    owner-select, and shard-local drop-scatter).
+
+    CONTRACT: ``gather`` returns its rows behind a
+    ``lax.optimization_barrier``. The sharded round engine's bit-parity with
+    the single-device scan relies on update expressions (Adam moments,
+    reward EMAs) compiling against *identical producer graphs* in both
+    programs — without the barrier, XLA/LLVM may contract an
+    ``a*x + b*y*y`` into an FMA in one fusion context and not the other,
+    and the trajectories drift by an ulp per round. Materializing gathered
+    rows costs one (M_s, K) buffer and pins the fusion boundary.
+    """
+
+    gather: Callable[[jax.Array, jax.Array], jax.Array]
+    scatter_set: Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+def default_row_ops() -> RowOps:
+    """Row ops over a fully-resident table (the single-device hot path)."""
+    from repro.utils.compat import optimization_barrier
+
+    def gather(table: jax.Array, idx: jax.Array) -> jax.Array:
+        return optimization_barrier(gather_rows(table, idx))
+
+    return RowOps(gather=gather, scatter_set=scatter_set_rows)
 
 
 def dequant_scatter_set_rows(

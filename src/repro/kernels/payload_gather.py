@@ -94,6 +94,65 @@ def scatter_set_rows(
     )(idx.astype(jnp.int32), rows, table)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_block(
+    table: jax.Array,      # (m, K) — one shard's row block of a larger table
+    local_idx: jax.Array,  # (M_s,) shard-local row ids; may be out of range
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Shard-local payload gather: ``out[i] = table[clip(local_idx[i])]``.
+
+    The per-device half of a row-sharded table gather: the caller translates
+    global payload indices to ``idx - shard_offset`` and every shard gathers
+    a full (M_s, K) candidate block — rows it does not own come from the
+    clamp and are discarded by the owner-select after the all-gather
+    (:func:`repro.kernels.ops.assemble_rows`). Clamping instead of masking
+    keeps the kernel identical to :func:`gather_rows` (one indexed row DMA
+    per grid step) with no divergent control flow.
+    """
+    m = table.shape[0]
+    safe = jnp.clip(local_idx.astype(jnp.int32), 0, m - 1)
+    return gather_rows(table, safe, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_set_rows_block(
+    table: jax.Array,      # (m, K) — one shard's row block, donated
+    local_idx: jax.Array,  # (M_s,) shard-local row ids; out-of-range dropped
+    rows: jax.Array,       # (M_s, K)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Shard-local row commit: ``table[local_idx[i]] = rows[i]`` where
+    ``0 <= local_idx[i] < m``; out-of-range entries (rows owned by another
+    shard) are dropped.
+
+    Built over the :func:`scatter_set_rows` kernel by stably compacting the
+    in-range entries to the front and pointing every masked grid step at the
+    last in-range entry *with its own row value* — duplicate writes of
+    identical data are idempotent under the sequential TPU grid, so no grid
+    step ever touches a row this shard does not own and no step can clobber
+    an earlier write with stale data. An all-out-of-range call (possible
+    when M_s < num_shards) returns the shard unchanged.
+    """
+    m_s = local_idx.shape[0]
+    m = table.shape[0]
+    local_idx = local_idx.astype(jnp.int32)
+    valid = (local_idx >= 0) & (local_idx < m)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    # stable partition: in-range entries first, original order preserved
+    perm = jnp.argsort(jnp.where(valid, 0, 1).astype(jnp.int32))
+    safe = perm[jnp.minimum(jnp.arange(m_s), n_valid - 1)]
+    idx_safe = jnp.clip(local_idx[safe], 0, m - 1)
+    rows_safe = rows[safe]
+
+    def commit(tab):
+        return scatter_set_rows(tab, idx_safe, rows_safe, interpret=interpret)
+
+    return jax.lax.cond(n_valid > 0, commit, lambda tab: tab, table)
+
+
 def _scatter_add_kernel(idx_ref, rows_ref, table_in_ref, out_ref):
     # aliased in/out: accumulate the payload gradient row into the table row.
     out_ref[...] = table_in_ref[...] + rows_ref[...].astype(out_ref.dtype)

@@ -85,6 +85,29 @@ def gather_quantize_rows(
     )(idx.astype(jnp.int32), table)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_quantize_rows_block(
+    table: jax.Array,      # (m, K) — one shard's row block of a larger table
+    local_idx: jax.Array,  # (M_s,) shard-local row ids; may be out of range
+    *,
+    interpret: bool = False,
+):
+    """Shard-local fused downlink encode over a row-sharded table.
+
+    Identical to :func:`gather_quantize_rows` on ``clip(local_idx)``: every
+    shard produces a full (M_s,) wire candidate block (int8 codes + scales)
+    whose rows it does not own are clamp artifacts, discarded by the
+    owner-select after the all-gather. Because quantization is per-row, the
+    rows a shard *does* own carry exactly the codes/scales a single-device
+    encode of the full table would produce — so the collective moves the
+    already-quantized wire image (4x fewer bytes than fp32 rows) without
+    giving up bit-parity with the unsharded path.
+    """
+    m = table.shape[0]
+    safe = jnp.clip(local_idx.astype(jnp.int32), 0, m - 1)
+    return gather_quantize_rows(table, safe, interpret=interpret)
+
+
 def _dequant_scatter_kernel(idx_ref, values_ref, scales_ref, table_in_ref,
                             out_ref):
     # aliased in/out: overwrite the table row with the dequantized payload.

@@ -63,6 +63,30 @@ def dequant_scatter_set_rows_ref(
         dequantize_rows(values, scales).astype(table.dtype))
 
 
+def gather_rows_block_ref(table: jax.Array, local_idx: jax.Array) -> jax.Array:
+    """Shard-local gather: ``out[i] = table[clip(local_idx[i], 0, m-1)]``.
+
+    Out-of-range entries (rows owned by another shard) come from the clamp
+    and are discarded by the owner-select after the all-gather.
+    """
+    return table[jnp.clip(local_idx, 0, table.shape[0] - 1)]
+
+
+def scatter_set_rows_block_ref(
+    table: jax.Array, local_idx: jax.Array, rows: jax.Array
+) -> jax.Array:
+    """Shard-local row commit: in-range rows written, out-of-range dropped."""
+    m = table.shape[0]
+    safe = jnp.where((local_idx >= 0) & (local_idx < m), local_idx, m)
+    return table.at[safe].set(rows.astype(table.dtype), mode="drop")
+
+
+def gather_quantize_rows_block_ref(table: jax.Array, local_idx: jax.Array):
+    """Shard-local fused downlink encode (clamped gather + per-row int8)."""
+    return gather_quantize_rows_ref(
+        table, jnp.clip(local_idx, 0, table.shape[0] - 1))
+
+
 def mha_chunked_ref(
     q: jax.Array,                  # (B, H, S, D)
     k: jax.Array,                  # (B, KVH, T, D)

@@ -161,6 +161,35 @@ def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def fcf_state_pspecs(state: Any, axis: str = "data",
+                     num_rows: Optional[int] = None) -> Any:
+    """PartitionSpec tree for an FCF server-state pytree (sharded rounds).
+
+    Rule: every rank-2 leaf whose leading dim is the item count M — the
+    global model Q, the per-row Adam moments, the BTS reward buffers
+    (v / prev_grad) and the topk codec's error-feedback residual — is
+    row-sharded ``P(axis, None)``; everything else (the (M,) posterior /
+    count / timestep vectors, PRNG key, scalar counters) is replicated.
+    The (M,) vectors stay replicated on purpose: selection is a full-table
+    top_k over them every round, and at 4 bytes/row they are ~K*4 times
+    cheaper than the tables that do get sharded.
+
+    ``num_rows`` defaults to ``state.q.shape[0]`` (a
+    :class:`repro.cf.server.ServerState`); pass it explicitly for other
+    state pytrees.
+    """
+    if num_rows is None:
+        num_rows = state.q.shape[0]
+
+    def spec(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) == 2 and shape[0] == num_rows:
+            return P(axis, None)
+        return P()
+
+    return jax.tree.map(spec, state)
+
+
 def zero_shard_moments(cfg: ModelConfig, pspec_tree: Any,
                        shape_tree: Any, axis: str = "data") -> Any:
     """ZeRO-1-style optimizer-state sharding (beyond-paper §Perf lever):

@@ -103,6 +103,7 @@ def adam_update_rows_scattered(
     state: AdamState,       # per-row state over the full (M, K) table
     table: jax.Array,       # (M, K) full parameter table
     config: AdamConfig = AdamConfig(),
+    row_ops=None,           # optional kernels.ops.RowOps override
 ) -> Tuple[jax.Array, AdamState]:
     """:func:`adam_update_rows` with all row traffic routed through the
     payload gather / scatter kernels (:mod:`repro.kernels.ops`).
@@ -112,26 +113,41 @@ def adam_update_rows_scattered(
     selected (M_s, K) tiles move through VMEM, which is what makes the fused
     scan round step cheap at LLM-vocab scale. On CPU the ops layer dispatches
     to the jnp oracles, so the math is bit-identical across backends.
+
+    ``row_ops`` swaps the row gather/scatter pair, letting the sharded round
+    engine run this exact update against row-sharded params/moments inside
+    ``shard_map`` (collective gathers, shard-local scatters). The (M,)
+    per-row timestep vector is cheap and always stays resident/replicated.
     """
     from repro.kernels import ops  # deferred: keep optim importable standalone
 
+    if row_ops is None:
+        row_ops = ops.default_row_ops()
     b1, b2 = config.beta1, config.beta2
     t_rows = state.t[indices] + 1            # (M_s,) 1-D: plain jnp indexing
     tf = t_rows.astype(jnp.float32)[:, None]
 
-    m_rows = b1 * ops.gather_rows(state.m, indices) + (1 - b1) * grad_rows
-    v_rows = (b2 * ops.gather_rows(state.v, indices)
+    m_rows = b1 * row_ops.gather(state.m, indices) + (1 - b1) * grad_rows
+    v_rows = (b2 * row_ops.gather(state.v, indices)
               + (1 - b2) * jnp.square(grad_rows))
     mhat = m_rows / (1.0 - jnp.power(b1, tf))
     vhat = v_rows / (1.0 - jnp.power(b2, tf))
-    new_rows = (ops.gather_rows(table, indices)
+    new_rows = (row_ops.gather(table, indices)
                 - config.lr * mhat / (jnp.sqrt(vhat) + config.eps))
+    # pin the update expressions' fusion boundary on the consumer side too:
+    # sandwiched between the gather barriers (RowOps contract) and this one,
+    # the moment/param math compiles identically no matter which scatter
+    # flavor (resident vs shard-local) consumes it — the bit-parity contract
+    # between the sharded and single-device round engines
+    from repro.utils.compat import optimization_barrier
+    m_rows, v_rows, new_rows = optimization_barrier(
+        (m_rows, v_rows, new_rows))
 
     return (
-        ops.scatter_set_rows(table, indices, new_rows),
+        row_ops.scatter_set(table, indices, new_rows),
         AdamState(
-            m=ops.scatter_set_rows(state.m, indices, m_rows),
-            v=ops.scatter_set_rows(state.v, indices, v_rows),
+            m=row_ops.scatter_set(state.m, indices, m_rows),
+            v=row_ops.scatter_set(state.v, indices, v_rows),
             t=state.t.at[indices].set(t_rows),
         ),
     )

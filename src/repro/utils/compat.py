@@ -4,10 +4,39 @@ The repo targets the modern top-level ``jax.shard_map`` API; older jax
 releases (< 0.5) only ship ``jax.experimental.shard_map.shard_map`` with the
 ``check_rep`` keyword where the new API has ``check_vma``. All internal code
 imports :func:`shard_map` from here so both generations work unchanged.
+
+:func:`optimization_barrier` wraps ``jax.lax.optimization_barrier`` and, on
+jax releases whose primitive has no vmap batching rule yet (< 0.5), registers
+the trivial one (barrier the batched operands, pass the batch dims through) —
+the sharded round engine uses barriers to pin its ordered gradient reduction
+and the seed sweeps vmap over it.
 """
 from __future__ import annotations
 
 import jax
+
+
+def _ensure_barrier_batching_rule() -> None:
+    try:
+        from jax._src.lax import lax as _lax_internal
+        from jax.interpreters import batching
+
+        prim = _lax_internal.optimization_barrier_p
+        if prim in batching.primitive_batchers:
+            return
+
+        def _batcher(args, dims):
+            return prim.bind(*args), list(dims)
+
+        batching.primitive_batchers[prim] = _batcher
+    except Exception:          # pragma: no cover — newer jax ships the rule
+        pass
+
+
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` usable under ``jax.vmap``."""
+    _ensure_barrier_batching_rule()
+    return jax.lax.optimization_barrier(x)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

@@ -117,6 +117,90 @@ def test_scatter_set_rows_sweep(m, k, ms):
 
 
 # --------------------------------------------------------------------- #
+# shard-local (row-block) variants — the per-device halves of the
+# collective row ops used by the sharded round engine
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,ms,offset", [
+    (32, 16, 20, 0), (32, 16, 20, 32), (32, 16, 20, 64),   # 3 shards of 32
+    (10, 8, 16, 10),                                       # heavy OOB
+])
+def test_gather_rows_block_matches_ref(m, k, ms, offset):
+    """Clamped local gather: in-range rows exact; OOB rows are clamp
+    artifacts with well-defined values (discarded by the owner-select)."""
+    table = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    gidx = jnp.asarray(np.sort(RNG.choice(3 * m, ms, replace=False))
+                       .astype(np.int32))
+    local = gidx - offset
+    got = pg_mod.gather_rows_block(table, local, interpret=True)
+    want = ref.gather_rows_block_ref(table, local)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    in_range = (np.asarray(local) >= 0) & (np.asarray(local) < m)
+    np.testing.assert_array_equal(
+        np.asarray(got)[in_range],
+        np.asarray(table)[np.asarray(local)[in_range]])
+
+
+@pytest.mark.parametrize("m,k,ms,offset", [
+    (32, 16, 20, 0), (32, 16, 20, 32), (32, 16, 20, 64),
+    (10, 8, 16, 10),
+])
+def test_scatter_set_rows_block_matches_ref(m, k, ms, offset):
+    table = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    gidx = jnp.asarray(np.sort(RNG.choice(3 * m, ms, replace=False))
+                       .astype(np.int32))
+    rows = jnp.asarray(RNG.standard_normal((ms, k)), jnp.float32)
+    local = gidx - offset
+    got = pg_mod.scatter_set_rows_block(table.copy(), local, rows,
+                                        interpret=True)
+    want = ref.scatter_set_rows_block_ref(table, local, rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # in-range rows replaced, every other row untouched bit-for-bit
+    lnp = np.asarray(local)
+    in_range = (lnp >= 0) & (lnp < m)
+    np.testing.assert_array_equal(np.asarray(got)[lnp[in_range]],
+                                  np.asarray(rows)[in_range])
+    mask = np.ones(m, bool)
+    mask[lnp[in_range]] = False
+    np.testing.assert_array_equal(np.asarray(got)[mask],
+                                  np.asarray(table)[mask])
+
+
+def test_scatter_set_rows_block_all_out_of_range_is_identity():
+    """M_s < num_shards leaves some shards with nothing to write."""
+    table = jnp.asarray(RNG.standard_normal((16, 8)), jnp.float32)
+    local = jnp.asarray([-16, -9, 20, 31], jnp.int32)
+    rows = jnp.asarray(RNG.standard_normal((4, 8)), jnp.float32)
+    got = pg_mod.scatter_set_rows_block(table.copy(), local, rows,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(table))
+    got_ref = ref.scatter_set_rows_block_ref(table, local, rows)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(table))
+
+
+def test_gather_quantize_rows_block_bit_exact_vs_full_table():
+    """Owner-shard candidates carry exactly the codes/scales a single-device
+    encode of the full table would produce — the collective-aware int8
+    downlink's bit-parity contract."""
+    from repro.kernels import payload_quant as pq_mod
+
+    full = jnp.asarray(RNG.standard_normal((64, 16)), jnp.float32)
+    idx = jnp.asarray(np.sort(RNG.choice(64, 24, replace=False))
+                      .astype(np.int32))
+    want_codes, want_scales = ref.gather_quantize_rows_ref(full, idx)
+    shards, m = 4, 16
+    for d in range(shards):
+        block = full[d * m:(d + 1) * m]
+        local = idx - d * m
+        codes, scales = pq_mod.gather_quantize_rows_block(block, local,
+                                                          interpret=True)
+        owned = (np.asarray(local) >= 0) & (np.asarray(local) < m)
+        np.testing.assert_array_equal(np.asarray(codes)[owned],
+                                      np.asarray(want_codes)[owned])
+        np.testing.assert_array_equal(np.asarray(scales)[owned],
+                                      np.asarray(want_scales)[owned])
+
+
+# --------------------------------------------------------------------- #
 # fused payload compression kernels (bit-exactness contract vs the codec)
 # --------------------------------------------------------------------- #
 @pytest.mark.parametrize("m,k,ms", [(100, 16, 10), (500, 25, 50),
