@@ -67,6 +67,82 @@ def per_round_payload_bytes(num_select: int, k: int, codec: str = "fp32",
     }
 
 
+# ------------------------------------------------------------------ #
+# committed-artifact schema (the BENCH_*.json CI guard)
+# ------------------------------------------------------------------ #
+# every committed artifact must name its experimental context at top level
+BENCH_CONTEXT_KEYS = ("scale", "dataset")
+# throughput figures: any key ending with this suffix is a rate and must be
+# a finite positive number (rounds_per_sec, modeled_commits_per_sec, ...)
+BENCH_RATE_SUFFIX = "per_sec"
+# bytes_per_round dicts must price both wire directions (extras allowed)
+BENCH_BYTES_KEYS = ("down", "up")
+
+
+def validate_bench_artifact(obj: Any, name: str = "artifact") -> List[str]:
+    """Schema errors for one committed ``BENCH_*.json`` payload ([] = valid).
+
+    The committed artifacts have heterogeneous shapes (Pareto cells, mesh
+    grids, staleness curves), so the contract is structural, matching what
+    every perf bench emits through this module:
+
+      * top level is a dict naming its context (``scale`` or ``dataset``),
+      * every ``*per_sec`` rate anywhere in the tree is a finite positive
+        number (a zero/NaN rate means a benchmark silently broke),
+      * every ``bytes_per_round`` is a dict pricing both wire directions
+        with positive integers (:func:`per_round_payload_bytes`'s shape),
+      * at least one rate figure exists (an artifact with no measurements
+        is not a benchmark result).
+
+    ``tests/test_bench_schema.py`` runs this over every committed artifact
+    so stale or hand-edited files fail CI.
+    """
+    import math
+
+    errors: List[str] = []
+    if not isinstance(obj, dict):
+        return [f"{name}: top level must be a dict, got {type(obj).__name__}"]
+    if not any(k in obj for k in BENCH_CONTEXT_KEYS):
+        errors.append(f"{name}: top level must name its context via one of "
+                      f"{BENCH_CONTEXT_KEYS}")
+    rates = 0
+
+    def walk(node: Any, path: str) -> None:
+        nonlocal rates
+        if isinstance(node, dict):
+            for key, val in node.items():
+                here = f"{path}.{key}"
+                if isinstance(key, str) and key.endswith(BENCH_RATE_SUFFIX):
+                    rates += 1
+                    if not isinstance(val, (int, float)) \
+                            or isinstance(val, bool) \
+                            or not math.isfinite(val) or val <= 0:
+                        errors.append(f"{name}: {here} must be a finite "
+                                      f"positive rate, got {val!r}")
+                elif key == "bytes_per_round":
+                    if not isinstance(val, dict):
+                        errors.append(f"{name}: {here} must be a dict")
+                        continue
+                    for d in BENCH_BYTES_KEYS:
+                        b = val.get(d)
+                        if not isinstance(b, int) or isinstance(b, bool) \
+                                or b <= 0:
+                            errors.append(
+                                f"{name}: {here}[{d!r}] must be a positive "
+                                f"int byte count, got {b!r}")
+                else:
+                    walk(val, here)
+        elif isinstance(node, list):
+            for i, val in enumerate(node):
+                walk(val, f"{path}[{i}]")
+
+    walk(obj, name)
+    if rates == 0:
+        errors.append(f"{name}: no '*{BENCH_RATE_SUFFIX}' rate found — an "
+                      "artifact with no measurements is not a bench result")
+    return errors
+
+
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall-time per call in microseconds (blocks on jax arrays)."""
     import jax

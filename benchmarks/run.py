@@ -21,8 +21,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="run every section's dry-run smoke, execute nothing")
     args = ap.parse_args(argv)
 
-    from benchmarks import (convergence, fcf_experiments, kernel_bench,
-                            payload_compression, payload_table,
+    from benchmarks import (async_cohorts, convergence, fcf_experiments,
+                            kernel_bench, payload_compression, payload_table,
                             reduction_sweep, roofline, sharded_rounds, table4)
 
     t0 = time.time()
@@ -39,6 +39,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         convergence.main(["--dry-run"])
         payload_compression.main(["--dry-run"])
         sharded_rounds.main(["--dry-run"])
+        async_cohorts.main(["--dry-run"])
         roofline.main(["--dry-run"])
         print(f"\n[dry-run] all sections smoke-checked in "
               f"{time.time() - t0:.1f}s")
@@ -64,6 +65,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     # sharded engine scaling (spawns fake-device workers; CPU-sized grid)
     sharded_rounds.run(quick=not args.full)
+
+    if args.full:
+        # full scale regenerates the committed staleness-curve artifact
+        async_cohorts.run()
+    else:
+        async_cohorts.run_quick()
 
     roofline.run(mesh="pod16x16")
     roofline.run(mesh="pod2x16x16")

@@ -12,6 +12,15 @@ Primary API (jit/scan/vmap-safe):
     BTS posterior update. Pure ``(state, cohort_x) -> (state, aux)``, so the
     simulation can drive thousands of rounds through ``jax.lax.scan`` and
     vectorize whole sweeps with ``jax.vmap``.
+  * :func:`server_round_step_async` — the staleness-bounded async round:
+    every round PUBLISHES a fresh encoded snapshot Q* into a bounded ring
+    buffer (``ServerState.snapshots``, wire images so depth-S bounding costs
+    S payload-sized buffers, not S full tables) and COMMITS a cohort that
+    solved against the snapshot of ``staleness`` rounds ago — via a
+    staleness-discounted Adam step and a delay-corrected bandit reward
+    attributed to the stale pull (the paper's deployment model, where users
+    report back asynchronously). ``staleness=0`` reduces bit-for-bit to the
+    synchronous step.
 
 :class:`FCFServer` is the original mutable, Python-driven server kept as a
 backwards-compatible shim (incremental ``begin_round``/``receive`` protocol
@@ -34,7 +43,8 @@ from repro.compress import (
 )
 from repro.core.payload import PayloadSelector
 from repro.core.selector import (
-    SelectorConfig, SelectorState, selector_init, selector_observe,
+    AsyncSelectorState, SelectorConfig, SelectorState, async_selector_init,
+    pending_lookup, pending_record, selector_init, selector_observe,
     selector_select,
 )
 from repro.kernels import ops
@@ -60,6 +70,14 @@ class FCFServerConfig(NamedTuple):
     # no extra client information is used.  "raw" reproduces the paper.
     reward_feedback: str = "data_term"          # "data_term" | "raw"
     l2: float = 1.0
+    # async engine: a commit against a snapshot s rounds stale scales its
+    # Adam step by discount**s (FedAsync-style exponential damping; 1.0
+    # disables damping, 0.0 makes stale commits step-free). s=0 commits are
+    # always undamped (discount**0 == 1.0 exactly). 0.8 measured best on the
+    # movielens-mini staleness curves (benchmarks/async_cohorts.py): heavy
+    # damping (0.5) costs more P@10 than the staleness it guards against on
+    # a smooth simulated cohort stream.
+    staleness_discount: float = 0.8
 
 
 class ServerState(NamedTuple):
@@ -80,6 +98,11 @@ class ServerState(NamedTuple):
     # codecs (topk uplink sparsification), the empty pytree () otherwise —
     # either way a fixed-shape scan carry / vmap axis
     codec: Any = ()
+    # async engine only: bounded ring of the last max_staleness+1 ENCODED
+    # downlink snapshots (wire pytree leaves with a leading (slots,) axis —
+    # S int8 snapshots cost S payload-sized wire images, not S full (M, K)
+    # tables). The empty pytree () for the synchronous backends.
+    snapshots: Any = ()
 
 
 class RoundAux(NamedTuple):
@@ -151,25 +174,71 @@ def assemble_rows(shard: ShardContext, idx: jax.Array,
     return jnp.take_along_axis(gathered, owner, axis=0)[0]
 
 
+def snapshot_ring_init(
+    codec_cfg: CodecConfig, slots: int, num_rows: int, dim: int
+) -> Any:
+    """All-zero ring of ``slots`` encoded downlink snapshots.
+
+    Leaves mirror the downlink wire format with a leading (slots,) axis, so
+    the ring is a fixed-shape scan carry whose size is ``slots`` payload
+    wire images (codes + scales for int8, halves for fp16, ...). Zero slots
+    are never decoded: the async staleness schedule clamps s <= t-1, so
+    every slot is published before it is first committed against.
+    """
+    down_cfg, _ = direction_configs(codec_cfg)
+    proto = encode(down_cfg, jnp.zeros((num_rows, dim), jnp.float32))
+    return jax.tree.map(
+        lambda leaf: jnp.zeros((slots,) + leaf.shape, leaf.dtype), proto)
+
+
+def _ring_put(ring: Any, slot: jax.Array, wire: Any) -> Any:
+    """Overwrite ring ``slot`` (traced index) with a fresh wire image."""
+    return jax.tree.map(
+        lambda r, w: jax.lax.dynamic_update_index_in_dim(r, w, slot, 0),
+        ring, wire)
+
+
+def _ring_get(ring: Any, slot: jax.Array) -> Any:
+    """The wire image stored in ring ``slot`` (traced index)."""
+    return jax.tree.map(
+        lambda r: jax.lax.dynamic_index_in_dim(r, slot, 0, keepdims=False),
+        ring)
+
+
 def server_init(
     item_factors: jax.Array,
     sel_cfg: SelectorConfig,
     key: jax.Array,
     config: FCFServerConfig = FCFServerConfig(),
     codec_cfg: CodecConfig = CodecConfig(),
+    async_slots: Optional[int] = None,
 ) -> ServerState:
-    """Fresh server state around an initialized global model."""
+    """Fresh server state around an initialized global model.
+
+    ``async_slots`` (= ``max_staleness + 1``) equips the state for the
+    async engine: the selector is wrapped with a pending-attribution buffer
+    and the encoded-snapshot ring is allocated. ``None`` (synchronous)
+    leaves both as empty pytrees.
+    """
     del config  # static hyper-parameters live outside the pytree
+    sel: Any = selector_init(sel_cfg)
+    snapshots: Any = ()
+    if async_slots is not None:
+        sel = async_selector_init(sel_cfg, async_slots)
+        snapshots = snapshot_ring_init(
+            codec_cfg, async_slots, sel_cfg.num_select,
+            item_factors.shape[1])
     return ServerState(
         q=item_factors,
         opt=adam_init(item_factors, per_row=True),
-        sel=selector_init(sel_cfg),
+        sel=sel,
         key=key,
         t=jnp.zeros((), jnp.int32),
         bytes_down=jnp.zeros((), jnp.float32),
         bytes_up=jnp.zeros((), jnp.float32),
         codec=codec_state_init(
             codec_cfg, item_factors.shape[0], item_factors.shape[1]),
+        snapshots=snapshots,
     )
 
 
@@ -271,7 +340,6 @@ def server_round_step(
     m_s = sel_cfg.num_select
     kdim = state.q.shape[1]
     key, k_sel = jax.random.split(state.key)
-    row_ops = ops.default_row_ops() if shard is None else shard_row_ops(shard)
 
     # lines 8-10: select the payload subset, gather + encode + "transmit" Q*;
     # clients decode the wire image, so q_star below is what they compute on
@@ -280,6 +348,47 @@ def server_round_step(
                     kdim)                                    # (M_s, K)
     q_star = optimization_barrier(q_star)
     bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
+
+    # lines 11-18: cohort solve, uplink, Adam commit, reward feedback
+    q_new, opt, sel, codec_state, rewards, num_users = _commit_against(
+        state, sel, idx, q_star, cohort_x, sel_cfg=sel_cfg, config=config,
+        cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users, shard=shard)
+    bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
+
+    new_state = ServerState(
+        q=q_new, opt=opt, sel=sel, key=key, t=state.t + 1,
+        bytes_down=bytes_down, bytes_up=bytes_up, codec=codec_state,
+        snapshots=state.snapshots,
+    )
+    return new_state, RoundAux(indices=idx, rewards=rewards)
+
+
+def _commit_against(
+    state: ServerState,
+    sel: SelectorState,
+    idx: jax.Array,                # (M_s,) payload rows the cohort solved on
+    q_star: jax.Array,             # (M_s, K) decoded snapshot they solved with
+    cohort_x,                      # (B, M) rows, or idx -> cohort blocks
+    *,
+    sel_cfg: SelectorConfig,
+    config: FCFServerConfig,
+    cf_cfg: CFConfig,
+    up_cfg: CodecConfig,
+    num_users: Optional[int],
+    shard: Optional[ShardContext],
+    t_obs: Optional[jax.Array] = None,
+    step_weight: Optional[jax.Array] = None,
+):
+    """Alg. 1 lines 11-18 against a given (idx, Q*) pair — the commit core.
+
+    Shared verbatim by the synchronous and async round steps: the sync step
+    passes the snapshot it just published (``t_obs=None``, no step weight);
+    the async step passes a *stale* snapshot popped from the ring plus its
+    pull round (delay-corrected reward) and the staleness discount for the
+    Adam step. Returns ``(q, opt, sel, codec_state, rewards, num_users)``.
+    """
+    row_ops = ops.default_row_ops() if shard is None else shard_row_ops(shard)
+    kdim = state.q.shape[1]
 
     # line 11: every cohort user solves p_i on-device and uplinks gradients;
     # the server receives the cohort aggregate, assembled block-by-block
@@ -320,27 +429,126 @@ def server_round_step(
     else:
         grads_hat = decode(up_cfg, encode(up_cfg, grads), kdim)
     grads_hat = optimization_barrier(grads_hat)
-    bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
 
     # line 13: sparse Adam commit on the selected rows (scatter kernels;
-    # shard-local scatters against the row-sharded tables when sharded)
+    # shard-local scatters against the row-sharded tables when sharded),
+    # step-discounted by staleness under the async engine
     q_new, opt = adam_update_rows_scattered(
-        grads_hat, idx, state.opt, state.q, config.adam, row_ops=row_ops)
+        grads_hat, idx, state.opt, state.q, config.adam, row_ops=row_ops,
+        row_weights=step_weight)
 
     # lines 14-18: reward feedback + posterior update — on the decoded
-    # gradients (the only thing a codec-running server would have)
+    # gradients (the only thing a codec-running server would have), delay-
+    # corrected to the pull round when the feedback arrived stale
     feedback = grads_hat
     if config.reward_feedback == "data_term":
         feedback = optimization_barrier(
             grads_hat - 2.0 * config.l2 * num_users * q_star)
     sel, rewards = selector_observe(sel_cfg, sel, idx, feedback,
-                                    row_ops=row_ops)
+                                    row_ops=row_ops, t_obs=t_obs)
+    return q_new, opt, sel, codec_state, rewards, num_users
 
-    new_state = ServerState(
-        q=q_new, opt=opt, sel=sel, key=key, t=state.t + 1,
-        bytes_down=bytes_down, bytes_up=bytes_up, codec=codec_state,
+
+def server_round_step_async(
+    state: ServerState,
+    cohort_x,                      # (B, M) cohort rows, or idx -> cohort blocks
+    staleness: jax.Array,          # () int32 — this commit's snapshot age
+    *,
+    sel_cfg: SelectorConfig,
+    config: FCFServerConfig,
+    cf_cfg: CFConfig,
+    codec_cfg: CodecConfig = CodecConfig(),
+    num_users: Optional[int] = None,
+    shard: Optional[ShardContext] = None,
+) -> Tuple[ServerState, RoundAux]:
+    """One staleness-bounded ASYNC round: publish fresh, commit stale.
+
+    The paper's deployment model has users reporting back asynchronously;
+    this step simulates it with the cohort block as the async unit. Each
+    round the server
+
+      1. PUBLISHES: pulls a fresh payload subset, encodes Q* into its wire
+         image and pushes it into the bounded snapshot ring
+         (``state.snapshots``, ``slots = max_staleness + 1``), recording the
+         pull in the selector's pending-attribution buffer;
+      2. COMMITS: pops the snapshot published ``staleness`` rounds ago —
+         the cohort that reports back this round solved against THAT
+         (possibly stale) Q* — and runs the exact synchronous commit core
+         against it, with two async corrections: the Adam step is scaled by
+         ``staleness_discount ** s`` (:func:`adam_update_rows_scattered`'s
+         per-row weights) and the bandit reward is attributed to the arm
+         pulls of the snapshot round (``selector_observe(t_obs=...)``).
+
+    ``staleness`` must satisfy ``0 <= s <= min(max_staleness, t-1)`` — the
+    driver's schedule guarantees it, so every popped slot was pushed first.
+    Clients decode the ring's wire image, so a stale int8 snapshot is the
+    same lossy tensor a real stale client would hold.
+
+    With ``staleness == 0`` every round, the popped snapshot is the one
+    just pushed, the discount is exactly 1.0 and ``t_obs`` equals the
+    current round: the trajectory is bit-identical to
+    :func:`server_round_step` at equal cohort blocking (tier-1 contract,
+    ``tests/test_async_cohorts.py``). Under ``shard_map`` the ring and
+    pending buffer are replicated (payload-sized) while the tables stay
+    row-sharded — a stale block is just a block solved against an older Q*,
+    so the sharded collective schedule is unchanged.
+
+    Sharded-async parity caveat (same class as the sync engine's int4/topk
+    note in :func:`server_round_step`): at ``staleness=0`` the sharded async
+    program is bit-identical to the single-device async scan for every
+    strategy and codec, and stays bit-identical at s > 0 for int8. For the
+    raw-fp32 downlink at s > 0, XLA:CPU's contraction choices around the
+    ring slice differ between the two programs and trajectories agree to
+    float32 ulps (~1e-9 absolute on Q) rather than bit-for-bit; selections
+    and wire bytes remain identical. Enforced by
+    ``tests/test_async_cohorts.py``'s fake-device subprocess matrix.
+    """
+    down_cfg, up_cfg = direction_configs(codec_cfg)
+    m_s = sel_cfg.num_select
+    kdim = state.q.shape[1]
+    sel_async = state.sel
+    assert isinstance(sel_async, AsyncSelectorState), (
+        "server_round_step_async needs a state built with "
+        "server_init(async_slots=...)")
+    slots = sel_async.pending.t.shape[0]
+    key, k_sel = jax.random.split(state.key)
+
+    # publish: fresh pull, encode, push wire + pending attribution. The
+    # barrier pins the wire image's producer graph at the push — the popped
+    # snapshot must decode from the same materialized bits no matter which
+    # round (or which shard program) consumes it.
+    idx, inner = selector_select(sel_cfg, sel_async.inner, k_sel)
+    t_now = state.t + 1
+    slot_now = jax.lax.rem(t_now - 1, slots)
+    wire_now = optimization_barrier(
+        _downlink_wire(state.q, idx, down_cfg, shard))
+    ring = _ring_put(state.snapshots, slot_now, wire_now)
+    pending = pending_record(sel_async.pending, slot_now, idx, t_now)
+    bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
+
+    # commit: pop the snapshot `staleness` rounds back and solve against it
+    s = jnp.asarray(staleness, jnp.int32)
+    slot_old = jax.lax.rem(t_now - 1 - s, slots)
+    idx_s, t_s = pending_lookup(pending, slot_old)
+    q_star = decode(down_cfg, _ring_get(ring, slot_old), kdim)
+    q_star = optimization_barrier(q_star)
+    step_weight = jnp.full(
+        (m_s,),
+        jnp.power(jnp.float32(config.staleness_discount),
+                  s.astype(jnp.float32)))
+    q_new, opt, inner, codec_state, rewards, num_users = _commit_against(
+        state, inner, idx_s, q_star, cohort_x, sel_cfg=sel_cfg,
+        config=config, cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users,
+        shard=shard, t_obs=t_s, step_weight=step_weight)
+    bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
+
+    new_state = state._replace(
+        q=q_new, opt=opt,
+        sel=AsyncSelectorState(inner=inner, pending=pending),
+        key=key, t=t_now, bytes_down=bytes_down, bytes_up=bytes_up,
+        codec=codec_state, snapshots=ring,
     )
-    return new_state, RoundAux(indices=idx, rewards=rewards)
+    return new_state, RoundAux(indices=idx_s, rewards=rewards)
 
 
 # ===================================================================== #

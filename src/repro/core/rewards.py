@@ -87,6 +87,16 @@ def compute_rewards(
     gradient (line 14) before the reward is computed (line 16), and prev_grad
     is replaced after (line 18).
 
+    ``t`` is the ATTRIBUTION round of the feedback, not necessarily the
+    server's wall-clock round: under the async cohort engine a gradient
+    observed at round t was computed against the snapshot (and arm pull) of
+    round t-s, and the caller passes that snapshot round here. Both
+    time-dependent coefficients — the ``1 - gamma^t`` cosine weight and the
+    ``gamma/t`` delta weight — are then evaluated at the pull round, so a
+    stale observation is scored exactly as it would have been had it arrived
+    synchronously (the delayed-feedback correction; the v/prev_grad buffers
+    still advance in arrival order, matching Alg. 1's per-arm recursion).
+
     The (M, K) buffers are touched only through row gather/scatter of the
     selected arms, so passing a ``row_ops`` pair (``repro.kernels.ops.RowOps``)
     lets the same math run against row-sharded buffers inside ``shard_map``

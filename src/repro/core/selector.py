@@ -22,10 +22,23 @@ Strategies (Sec. 3 of the paper + beyond-paper baselines):
 
 The legacy stateful :class:`repro.core.payload.PayloadSelector` is now a thin
 mutable shim over these functions.
+
+ASYNC SELECTION. The staleness-bounded async cohort engine
+(``FLSimConfig(backend="async")``) commits cohorts that solved against a
+snapshot published up to ``max_staleness`` rounds earlier, so the bandit's
+feedback for a pull arrives *delayed*: the reward observed at round t
+belongs to the arms pulled at round t-s. :class:`AsyncSelectorState` wraps
+any strategy state with a :class:`PendingAttribution` ring buffer recording
+the in-flight pulls ``(indices, round)``; at commit time the engine looks
+the stale pull up and feeds :func:`selector_observe` with ``t_obs`` set to
+the *snapshot* round, so the time-dependent reward coefficients (Eq. 13's
+``1 - gamma^t`` and ``gamma/t``) are evaluated at the round the arms were
+actually pulled — the delay correction that keeps the bandit's reward scale
+consistent under staleness (cf. the delayed-feedback MAB line in PAPERS.md).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple, Union
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +99,68 @@ class MagnitudeState(NamedTuple):
 
 
 SelectorState = Union[BTSSelectorState, RandomState, FullState, MagnitudeState]
+
+
+class PendingAttribution(NamedTuple):
+    """Ring buffer of arm pulls awaiting delayed feedback (async engine).
+
+    Slot ``(t - 1) % slots`` holds the pull of round t; with ``slots =
+    max_staleness + 1`` a pull is overwritten exactly when it can no longer
+    be committed (bounded staleness), so the buffer is a fixed-shape scan
+    carry costing one (slots, num_select) index block — not a history.
+    """
+
+    indices: jax.Array    # (slots, num_select) int32 — arms pulled per slot
+    t: jax.Array          # (slots,) int32 — round number of each pull
+
+
+class AsyncSelectorState(NamedTuple):
+    """Any strategy state + the pending-attribution buffer (async engine)."""
+
+    inner: SelectorState
+    pending: PendingAttribution
+
+
+def pending_init(cfg: SelectorConfig, slots: int) -> PendingAttribution:
+    """All-zero pending buffer with ``slots`` in-flight pull slots.
+
+    Zero rounds are never looked up: the async engine's staleness schedule
+    clamps s <= t-1, so every popped slot has been pushed first.
+    """
+    return PendingAttribution(
+        indices=jnp.zeros((slots, cfg.num_select), jnp.int32),
+        t=jnp.zeros((slots,), jnp.int32),
+    )
+
+
+def pending_record(
+    pending: PendingAttribution, slot: jax.Array, indices: jax.Array,
+    t: jax.Array,
+) -> PendingAttribution:
+    """Record round ``t``'s pull into ``slot`` (traced index)."""
+    return PendingAttribution(
+        indices=jax.lax.dynamic_update_index_in_dim(
+            pending.indices, indices, slot, 0),
+        t=jax.lax.dynamic_update_index_in_dim(
+            pending.t, t.astype(jnp.int32), slot, 0),
+    )
+
+
+def pending_lookup(
+    pending: PendingAttribution, slot: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """The in-flight pull stored in ``slot``: ``(indices, pull round)``."""
+    return (
+        jax.lax.dynamic_index_in_dim(pending.indices, slot, 0,
+                                     keepdims=False),
+        jax.lax.dynamic_index_in_dim(pending.t, slot, 0, keepdims=False),
+    )
+
+
+def async_selector_init(cfg: SelectorConfig, slots: int) -> AsyncSelectorState:
+    """Fresh strategy state wrapped with a ``slots``-deep pending buffer."""
+    return AsyncSelectorState(
+        inner=selector_init(cfg), pending=pending_init(cfg, slots))
 
 
 def validate_config(cfg: SelectorConfig) -> None:
@@ -160,6 +235,7 @@ def selector_observe(
     indices: jax.Array,    # (num_select,) arms selected this round
     feedback: jax.Array,   # (num_select, dim) aggregated gradient feedback
     row_ops=None,          # optional kernels.ops.RowOps for sharded buffers
+    t_obs: Optional[jax.Array] = None,   # attribution round (async delay fix)
 ) -> Tuple[SelectorState, jax.Array]:
     """Feed back the round's aggregated gradients (Alg. 1 lines 14-18).
 
@@ -171,11 +247,17 @@ def selector_observe(
     sharded round engine can keep those buffers row-sharded next to the
     global model. The (M,) posterior/count vectors always stay resident
     (selection is a full-table top_k).
+
+    ``t_obs`` is the round the reward should be attributed to. ``None``
+    (synchronous) uses the selector's own round counter; the async engine
+    passes the *snapshot* round of the stale pull so the reward's
+    time-dependent coefficients are delay-corrected (module docstring).
     """
     if cfg.strategy == "bts":
+        t_attr = state.t if t_obs is None else t_obs
         rewards, reward_state = compute_rewards(
             state.reward, indices, feedback,
-            t=state.t.astype(jnp.float32),
+            t=t_attr.astype(jnp.float32),
             gamma=cfg.gamma, beta2=cfg.beta2, mode=cfg.reward_mode,
             row_ops=row_ops,
         )
@@ -202,6 +284,8 @@ def selector_counts(cfg: SelectorConfig, state: SelectorState) -> jax.Array:
     bts: posterior observation counts n^j (updated at observe time);
     random/magnitude: counts accumulated at select time; full: t per arm.
     """
+    if isinstance(state, AsyncSelectorState):
+        state = state.inner
     if cfg.strategy == "bts":
         return state.bts.counts
     if cfg.strategy in ("random", "magnitude"):

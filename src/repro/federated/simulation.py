@@ -22,6 +22,18 @@ and the training loop is compiled end-to-end:
     (same PRNG seed => bit-identical selections, Q trajectory and byte
     counters) and as the dispatch-overhead baseline for
     ``benchmarks/round_engine.py``.
+  * ``backend="async"``: the staleness-bounded async cohort engine
+    (:func:`repro.cf.server.server_round_step_async`) — every round
+    publishes a fresh encoded snapshot into a bounded ring and commits a
+    cohort that solved against a snapshot up to ``max_staleness`` rounds
+    old (the paper's deployment model, where exactly-Theta updates arrive
+    asynchronously and may lag the global model). The staleness schedule is
+    pre-sampled like the cohorts, so the whole async trajectory is one
+    ``lax.scan``; ``max_staleness=0`` is bit-identical to ``backend="scan"``
+    at equal cohort blocking. Composes with the sharded engine: set
+    ``mesh_shards`` to run the async rounds under ``shard_map`` (the ring
+    and pending buffers replicate — payload-sized — while the (M, K)
+    tables row-shard exactly as in ``backend="shard"``).
 
 Sweep entry points (:func:`run_seed_sweep`, :func:`run_strategy_sweep`)
 vectorize the scan engine with ``jax.vmap`` over per-seed server states, so a
@@ -46,7 +58,7 @@ from repro.cf.metrics import RecMetrics, evaluate_users
 from repro.cf.model import CFConfig, cf_init
 from repro.cf.server import (
     FCFServerConfig, RoundAux, ServerState, ShardContext, server_init,
-    server_round_step,
+    server_round_step, server_round_step_async,
 )
 from repro.compress import (
     CodecConfig, direction_configs, validate_config, wire_bytes,
@@ -59,7 +71,8 @@ from repro.utils.logging import MetricLogger, get_logger
 
 log = get_logger("repro.fl")
 
-BACKENDS = ("scan", "python", "shard")
+BACKENDS = ("scan", "python", "shard", "async")
+STALENESS_MODES = ("uniform", "max")
 
 
 @dataclass
@@ -90,8 +103,25 @@ class FLSimConfig:
     # bounds the (B, M) score matrix at web-scale M
     eval_user_chunk: Optional[int] = None
     # "scan" (default engine) | "python" (reference) | "shard" (shard_map
-    # data-parallel rounds over a ("data",) device mesh)
+    # data-parallel rounds over a ("data",) device mesh) | "async"
+    # (staleness-bounded async cohort queue; composes with mesh_shards)
     backend: str = "scan"
+    # backend="async": a commit may land on a snapshot up to this many
+    # rounds stale (ring depth = max_staleness + 1); 0 = synchronous
+    max_staleness: int = 0
+    # backend="async": client-phase block count per commit (the async
+    # engine's cohort blocking — max_staleness=0 with blocks_per_commit=B is
+    # bit-identical to backend="scan" with cohort_shards=B). Under
+    # mesh_shards=D the mesh dictates one block per device: any other
+    # explicit value is rejected at build time.
+    blocks_per_commit: int = 1
+    # backend="async": per-round staleness draw. "uniform" samples
+    # s ~ U{0..max_staleness} (independent reporting lags); "max" pins
+    # s = max_staleness — the saturation regime where the queue is always
+    # full and every commit is maximally stale. Both clamp s <= t-1.
+    staleness_mode: str = "uniform"
+    # backend="async": Adam step discount**s for an s-stale commit
+    staleness_discount: float = 0.8
     # client-phase block count: the cohort solve runs in this many equal user
     # blocks whose partial gradients are reduced in fixed order (see
     # server_round_step). The round's float semantics depend on this number
@@ -134,6 +164,7 @@ class _SimSetup(NamedTuple):
     codec_cfg: CodecConfig
     state0: ServerState
     cohorts: np.ndarray        # (rounds, B) int32 pre-sampled cohort ids
+    staleness: np.ndarray      # (rounds,) int32 pre-sampled snapshot ages
     eval_train: jax.Array      # (E, M)
     eval_test: jax.Array       # (E, M)
 
@@ -161,13 +192,36 @@ def _build(train_j: jax.Array, test_j: jax.Array,
 
     PRNG discipline matches the legacy stateful path: PRNGKey(seed) splits
     into (init, users, eval); the selection stream is PRNGKey(seed+13) split
-    once per round; cohorts come from numpy default_rng(seed+31).
+    once per round; cohorts come from numpy default_rng(seed+31); the async
+    staleness schedule from default_rng(seed+47).
     """
     if config.strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {config.strategy!r}")
     if config.backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, "
                          f"got {config.backend!r}")
+    is_async = config.backend == "async"
+    if config.max_staleness < 0:
+        raise ValueError(
+            f"max_staleness must be >= 0, got {config.max_staleness}")
+    if config.max_staleness > 0 and not is_async:
+        raise ValueError(
+            "max_staleness > 0 requires backend='async' (the synchronous "
+            "backends commit the snapshot they just published)")
+    if is_async and config.staleness_mode not in STALENESS_MODES:
+        raise ValueError(
+            f"staleness_mode must be one of {STALENESS_MODES}, "
+            f"got {config.staleness_mode!r}")
+    if is_async and config.blocks_per_commit < 1:
+        raise ValueError(
+            f"blocks_per_commit must be >= 1, got {config.blocks_per_commit}")
+    if is_async and config.mesh_shards is not None \
+            and config.blocks_per_commit not in (1, config.mesh_shards):
+        raise ValueError(
+            f"backend='async' with mesh_shards={config.mesh_shards} runs "
+            f"one cohort block per device; blocks_per_commit="
+            f"{config.blocks_per_commit} conflicts (leave it at 1 or set "
+            f"it equal to mesh_shards)")
     num_users, num_items = train_j.shape
     key = jax.random.PRNGKey(config.seed)
     k_init, _k_users, k_eval = jax.random.split(key, 3)
@@ -188,6 +242,7 @@ def _build(train_j: jax.Array, test_j: jax.Array,
         adam=AdamConfig(lr=config.lr, beta1=config.beta1,
                         beta2=config.beta2, eps=1e-8),
         reward_feedback=config.reward_feedback, l2=config.l2,
+        staleness_discount=config.staleness_discount,
     )
     codec_cfg = CodecConfig(
         name=config.codec, topk_fraction=config.codec_topk_fraction,
@@ -195,9 +250,11 @@ def _build(train_j: jax.Array, test_j: jax.Array,
     )
     validate_config(codec_cfg)
     model = cf_init(cf_cfg, k_init)
-    state0 = server_init(model.item_factors, sel_cfg,
-                         key=jax.random.PRNGKey(config.seed + 13),
-                         config=srv_cfg, codec_cfg=codec_cfg)
+    state0 = server_init(
+        model.item_factors, sel_cfg,
+        key=jax.random.PRNGKey(config.seed + 13),
+        config=srv_cfg, codec_cfg=codec_cfg,
+        async_slots=(config.max_staleness + 1) if is_async else None)
 
     cohort_n = min(config.theta, num_users)
     rng = np.random.default_rng(config.seed + 31)
@@ -205,15 +262,38 @@ def _build(train_j: jax.Array, test_j: jax.Array,
         rng.choice(num_users, size=cohort_n, replace=False)
         for _ in range(config.rounds)
     ]).astype(np.int32)
+    staleness = _staleness_schedule(config)
 
     eval_n = min(config.eval_users, num_users)
     eval_ids = jax.random.choice(k_eval, num_users, (eval_n,), replace=False)
     return _SimSetup(
         cf_cfg=cf_cfg, sel_cfg=sel_cfg, srv_cfg=srv_cfg,
         codec_cfg=codec_cfg, state0=state0,
-        cohorts=cohorts,
+        cohorts=cohorts, staleness=staleness,
         eval_train=train_j[eval_ids], eval_test=test_j[eval_ids],
     )
+
+
+def _staleness_schedule(config: FLSimConfig) -> np.ndarray:
+    """Pre-sampled per-round snapshot ages for the async engine.
+
+    Round t's commit lands on the snapshot published at round t - s_t. The
+    schedule is data, exactly like the cohort schedule: "uniform" draws
+    independent reporting lags s ~ U{0..S}, "max" pins every commit at the
+    staleness bound (queue saturated). Either way s_t <= t-1, so the first
+    rounds never reference snapshots that do not exist yet. All-zero for the
+    synchronous backends (and for max_staleness=0, where the async engine
+    reduces to the scan engine bit-for-bit).
+    """
+    rounds, s_max = config.rounds, config.max_staleness
+    if config.backend != "async" or s_max == 0:
+        return np.zeros((rounds,), np.int32)
+    if config.staleness_mode == "max":
+        s = np.full((rounds,), s_max, np.int64)
+    else:
+        rng = np.random.default_rng(config.seed + 47)
+        s = rng.integers(0, s_max + 1, size=rounds)
+    return np.minimum(s, np.arange(rounds)).astype(np.int32)
 
 
 def _blocked_cohort_x(train_j: jax.Array, ids: jax.Array, shards: int,
@@ -269,6 +349,22 @@ def _make_round_fn(train_j: jax.Array, setup: _SimSetup,
     return round_fn
 
 
+def _make_async_round_fn(train_j: jax.Array, setup: _SimSetup, blocks: int):
+    """(state, cohort (B,), staleness ()) -> (state, aux): one async round."""
+    sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
+
+    def round_fn(state: ServerState, cohort: jax.Array,
+                 staleness: jax.Array):
+        num_users = cohort.shape[0]
+        ids = _pad_cohort(cohort, blocks)
+        cohort_x = _blocked_cohort_x(train_j, ids, blocks, num_users)
+        return server_round_step_async(
+            state, cohort_x, staleness, sel_cfg=sel_cfg, config=srv_cfg,
+            cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg, num_users=num_users)
+
+    return round_fn
+
+
 def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
                               config: FLSimConfig, record: bool = False):
     """Compile the FL round scan as a ``shard_map`` program over a device mesh.
@@ -282,6 +378,14 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
     (encoded Q* candidates, partial gradients, selected-row gathers).
     Trajectories are bit-identical to ``backend="scan"`` with
     ``cohort_shards=D`` (see :func:`repro.cf.server.server_round_step`).
+
+    With ``config.backend == "async"`` the same mesh runs the async engine:
+    the scan additionally consumes the (R,) staleness schedule (replicated),
+    the snapshot ring and pending-attribution buffers replicate alongside
+    the selector posteriors (they are payload-sized), and the returned
+    ``run_chunk(state, cohorts, staleness)`` takes the schedule slice —
+    a stale block is just a block solved against an older Q*, so the
+    collective schedule is exactly the synchronous one.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -304,38 +408,66 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
 
     state_specs = fcf_state_pspecs(setup.state0)
     state0 = jax.device_put(setup.state0, to_shardings(mesh, state_specs))
-
-    def chunk(state, cohorts_blk, train_rep):
-        # local views: cohorts_blk (R, 1, b); train_rep replicated (N, M)
-        def body(st, cohort_l):
-            ids = cohort_l.reshape(-1)                       # (b,)
-            didx = jax.lax.axis_index("data")
-
-            def cohort_x(idx):
-                x = train_rep[ids[:, None], idx[None, :]]    # (b, M_s)
-                if padded:
-                    pos = didx * b + jnp.arange(b)
-                    x = x * (pos < b_total).astype(x.dtype)[:, None]
-                return x[None]                               # (1, b, M_s)
-
-            st, aux = server_round_step(
-                st, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
-                codec_cfg=setup.codec_cfg, num_users=b_total, shard=shard_ctx)
-            return st, (aux if record else None)
-
-        return jax.lax.scan(body, state, cohorts_blk)
-
+    is_async = config.backend == "async"
     aux_specs = RoundAux(indices=P(), rewards=P()) if record else None
-    run = jax.jit(shard_map(
-        chunk, mesh=mesh,
-        in_specs=(state_specs, P(None, "data", None), P()),
-        out_specs=(state_specs, aux_specs), check_vma=False))
 
-    def run_chunk(state, cohorts):
+    def _local_cohort_x(ids, didx, train_rep):
+        def cohort_x(idx):
+            x = train_rep[ids[:, None], idx[None, :]]        # (b, M_s)
+            if padded:
+                pos = didx * b + jnp.arange(b)
+                x = x * (pos < b_total).astype(x.dtype)[:, None]
+            return x[None]                                   # (1, b, M_s)
+        return cohort_x
+
+    if is_async:
+        def chunk(state, cohorts_blk, stale, train_rep):
+            # cohorts_blk (R, 1, b) local; stale (R,) + train_rep replicated
+            def body(st, xs):
+                cohort_l, s_t = xs
+                cohort_x = _local_cohort_x(
+                    cohort_l.reshape(-1), jax.lax.axis_index("data"),
+                    train_rep)
+                st, aux = server_round_step_async(
+                    st, cohort_x, s_t, sel_cfg=sel_cfg, config=srv_cfg,
+                    cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg,
+                    num_users=b_total, shard=shard_ctx)
+                return st, (aux if record else None)
+
+            return jax.lax.scan(body, state, (cohorts_blk, stale))
+
+        run = jax.jit(shard_map(
+            chunk, mesh=mesh,
+            in_specs=(state_specs, P(None, "data", None), P(), P()),
+            out_specs=(state_specs, aux_specs), check_vma=False))
+    else:
+        def chunk(state, cohorts_blk, train_rep):
+            # local views: cohorts_blk (R, 1, b); train_rep replicated (N, M)
+            def body(st, cohort_l):
+                cohort_x = _local_cohort_x(
+                    cohort_l.reshape(-1), jax.lax.axis_index("data"),
+                    train_rep)
+                st, aux = server_round_step(
+                    st, cohort_x, sel_cfg=sel_cfg, config=srv_cfg,
+                    cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg,
+                    num_users=b_total, shard=shard_ctx)
+                return st, (aux if record else None)
+
+            return jax.lax.scan(body, state, cohorts_blk)
+
+        run = jax.jit(shard_map(
+            chunk, mesh=mesh,
+            in_specs=(state_specs, P(None, "data", None), P()),
+            out_specs=(state_specs, aux_specs), check_vma=False))
+
+    def run_chunk(state, cohorts, staleness=None):
         cohorts = np.asarray(cohorts)
         r = cohorts.shape[0]
         ids = np.pad(cohorts, ((0, 0), (0, d * b - b_total)))
         blocked = jnp.asarray(ids.reshape(r, d, b).astype(np.int32))
+        if is_async:
+            stale = jnp.asarray(np.asarray(staleness), jnp.int32)
+            return run(state, blocked, stale, train_j)
         return run(state, blocked, train_j)
 
     return run_chunk, state0
@@ -424,10 +556,32 @@ def run_fcf_simulation(
     state = setup.state0
     aux_chunks: List = []
 
-    if config.backend in ("scan", "shard"):
-        if config.backend == "shard":
+    if config.backend in ("scan", "shard", "async"):
+        is_async = config.backend == "async"
+        # async shards the same way the sync engine does — but only when a
+        # mesh is asked for (mesh_shards); plain async is single-device
+        use_mesh = config.backend == "shard" or (
+            is_async and config.mesh_shards is not None)
+        if use_mesh:
             run_chunk, state = make_sharded_round_runner(
                 train_j, setup, config, record=record)
+        elif is_async:
+            round_fn = _make_async_round_fn(
+                train_j, setup, config.blocks_per_commit)
+
+            def scan_chunk(st, cohorts, stale):
+                def body(s, xs):
+                    cohort, s_t = xs
+                    s, aux = round_fn(s, cohort, s_t)
+                    return s, (aux if record else None)
+                return jax.lax.scan(body, st, (cohorts, stale))
+
+            compiled_async = jax.jit(scan_chunk)
+
+            def run_chunk(st, cohorts, staleness=None):
+                return compiled_async(
+                    st, jnp.asarray(cohorts),
+                    jnp.asarray(np.asarray(staleness), jnp.int32))
         else:
             round_fn = _make_round_fn(train_j, setup, config.cohort_shards)
 
@@ -439,11 +593,15 @@ def run_fcf_simulation(
 
             compiled = jax.jit(scan_chunk)
 
-            def run_chunk(st, cohorts):
+            def run_chunk(st, cohorts, staleness=None):
                 return compiled(st, jnp.asarray(cohorts))
 
         for start, end in _chunk_bounds(config.rounds, config.eval_every):
-            state, aux = run_chunk(state, setup.cohorts[start:end])
+            if is_async:
+                state, aux = run_chunk(state, setup.cohorts[start:end],
+                                       setup.staleness[start:end])
+            else:
+                state, aux = run_chunk(state, setup.cohorts[start:end])
             if record:
                 aux_chunks.append(aux)
             m = _evaluate(state.q, setup.eval_train, setup.eval_test, config)

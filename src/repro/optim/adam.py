@@ -16,7 +16,7 @@ eps=1e-8.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,7 @@ def adam_update_rows_scattered(
     table: jax.Array,       # (M, K) full parameter table
     config: AdamConfig = AdamConfig(),
     row_ops=None,           # optional kernels.ops.RowOps override
+    row_weights: Optional[jax.Array] = None,   # (M_s,) staleness discounts
 ) -> Tuple[jax.Array, AdamState]:
     """:func:`adam_update_rows` with all row traffic routed through the
     payload gather / scatter kernels (:mod:`repro.kernels.ops`).
@@ -118,6 +119,17 @@ def adam_update_rows_scattered(
     engine run this exact update against row-sharded params/moments inside
     ``shard_map`` (collective gathers, shard-local scatters). The (M,)
     per-row timestep vector is cheap and always stays resident/replicated.
+
+    ``row_weights`` is the async engine's per-row staleness discount: each
+    committed row's *step* is scaled by its weight (FedAsync-style
+    ``q <- q - w(s) * eta * step``). The discount deliberately lands on the
+    step, not the gradient: Adam's update is near-invariant to gradient
+    scaling (m and v scale together), so damping the gradient would damp
+    nothing. Moments and per-row timesteps advance undamped — they are
+    statistics of the arriving gradients, and a stale gradient is still an
+    observation. A weight of exactly 1.0 is a bitwise no-op (IEEE multiply
+    by one), which is what makes the async engine's ``max_staleness=0``
+    trajectory bit-identical to the synchronous scan.
     """
     from repro.kernels import ops  # deferred: keep optim importable standalone
 
@@ -132,8 +144,10 @@ def adam_update_rows_scattered(
               + (1 - b2) * jnp.square(grad_rows))
     mhat = m_rows / (1.0 - jnp.power(b1, tf))
     vhat = v_rows / (1.0 - jnp.power(b2, tf))
-    new_rows = (row_ops.gather(table, indices)
-                - config.lr * mhat / (jnp.sqrt(vhat) + config.eps))
+    step = config.lr * mhat / (jnp.sqrt(vhat) + config.eps)
+    if row_weights is not None:
+        step = step * row_weights.astype(jnp.float32)[:, None]
+    new_rows = row_ops.gather(table, indices) - step
     # pin the update expressions' fusion boundary on the consumer side too:
     # sandwiched between the gather barriers (RowOps contract) and this one,
     # the moment/param math compiles identically no matter which scatter

@@ -1,0 +1,319 @@
+"""Async cohort engine: staleness-bounded queue vs the synchronous scan.
+
+The tentpole contract: ``backend="async"`` with ``max_staleness=0`` must
+reproduce the ``backend="scan"`` trajectory BIT-FOR-BIT at equal cohort
+blocking (``blocks_per_commit=B`` == ``cohort_shards=B``) — the async
+machinery (snapshot ring, pending-attribution buffer, staleness discount,
+delayed reward attribution) must compile to a float-exact no-op when every
+commit is fresh. On top of that: queue saturation (``staleness_mode="max"``)
+commits maximally stale snapshots every round, the staleness discount
+really gates the Adam step, the ring really stores payload-sized wire
+images, and the sharded composition (``mesh_shards``) reproduces the
+single-device async trajectory (fake-device subprocess, like
+``tests/test_sharded_rounds.py``).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = str(REPO_ROOT / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.federated.simulation import (  # noqa: E402
+    FLSimConfig, _staleness_schedule, run_fcf_simulation,
+)
+
+STRATEGIES = ("bts", "random", "full", "magnitude")
+
+
+def _mini_data(seed=0, users=60, items=80):
+    rng = np.random.default_rng(seed)
+    train = (rng.random((users, items)) < 0.15).astype(np.float32)
+    test = (rng.random((users, items)) < 0.05).astype(np.float32)
+    return train, test
+
+
+def _cfg(strategy, **kw):
+    base = dict(strategy=strategy, keep_fraction=0.25, rounds=6, theta=10,
+                eval_every=3, eval_users=40, seed=0, record_selections=True)
+    base.update(kw)
+    return FLSimConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _mini_data()
+
+
+def assert_bitwise(tag, ref, res):
+    np.testing.assert_array_equal(ref.selections, res.selections,
+                                  err_msg=f"{tag}: selections")
+    np.testing.assert_array_equal(ref.rewards, res.rewards,
+                                  err_msg=f"{tag}: rewards")
+    np.testing.assert_array_equal(np.asarray(ref.server_state.q),
+                                  np.asarray(res.server_state.q),
+                                  err_msg=f"{tag}: Q")
+    np.testing.assert_array_equal(np.asarray(ref.server_state.opt.m),
+                                  np.asarray(res.server_state.opt.m),
+                                  err_msg=f"{tag}: adam m")
+    assert float(ref.server_state.bytes_down) == \
+        float(res.server_state.bytes_down), f"{tag}: bytes_down"
+    assert float(ref.server_state.bytes_up) == \
+        float(res.server_state.bytes_up), f"{tag}: bytes_up"
+    assert ref.history.series("f1") == res.history.series("f1"), \
+        f"{tag}: f1 trajectory"
+
+
+# --------------------------------------------------------------------- #
+# max_staleness=0 == the synchronous scan, bit for bit
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_async_s0_matches_scan_bitwise(data, strategy):
+    train, test = data
+    cfg = _cfg(strategy)
+    scan = run_fcf_simulation(train, test, cfg)
+    asy = run_fcf_simulation(
+        train, test, replace(cfg, backend="async", max_staleness=0))
+    assert_bitwise(f"{strategy}/fp32", scan, asy)
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_async_s0_matches_scan_bitwise_codecs(data, codec):
+    """The codec path (incl. the stateful topk EF residual) stays exact."""
+    train, test = data
+    cfg = _cfg("bts", codec=codec)
+    scan = run_fcf_simulation(train, test, cfg)
+    asy = run_fcf_simulation(
+        train, test, replace(cfg, backend="async", max_staleness=0))
+    assert_bitwise(f"bts/{codec}", scan, asy)
+
+
+def test_async_s0_blocking_matches_cohort_shards(data):
+    """blocks_per_commit=B == backend="scan" with cohort_shards=B (padded
+    blocks included: theta=10 over 3 blocks -> blocks of 4 with 2 pads)."""
+    train, test = data
+    cfg = _cfg("bts")
+    scan = run_fcf_simulation(train, test, replace(cfg, cohort_shards=3))
+    asy = run_fcf_simulation(
+        train, test,
+        replace(cfg, backend="async", max_staleness=0, blocks_per_commit=3))
+    assert_bitwise("bts/blocked", scan, asy)
+
+
+# --------------------------------------------------------------------- #
+# staleness actually happens (and stays bounded)
+# --------------------------------------------------------------------- #
+def test_saturated_queue_commits_the_max_stale_snapshot(data):
+    """staleness_mode="max": round t commits the pull of round t - min(S, t-1).
+
+    The random strategy's pulls depend only on the PRNG stream (never on Q),
+    so the synchronous scan's per-round selections ARE the async engine's
+    per-round pulls — the committed indices must be exactly those pulls
+    shifted by the staleness schedule. This pins both saturation (every
+    commit maximally stale) and the bounded-queue arithmetic.
+    """
+    train, test = data
+    s_max = 2
+    cfg = _cfg("random", rounds=8)
+    scan = run_fcf_simulation(train, test, cfg)
+    asy = run_fcf_simulation(
+        train, test, replace(cfg, backend="async", max_staleness=s_max,
+                             staleness_mode="max"))
+    for i in range(8):
+        s_i = min(s_max, i)
+        np.testing.assert_array_equal(
+            asy.selections[i], scan.selections[i - s_i],
+            err_msg=f"round {i + 1} should commit the round-{i + 1 - s_i} "
+                    f"pull (s={s_i})")
+    # stale trajectories are genuinely different from sync
+    assert not np.array_equal(np.asarray(asy.server_state.q),
+                              np.asarray(scan.server_state.q))
+
+
+def test_staleness_schedule_is_clamped_and_modal():
+    sched = _staleness_schedule(FLSimConfig(
+        backend="async", max_staleness=3, rounds=50, staleness_mode="max"))
+    assert sched.tolist()[:4] == [0, 1, 2, 3]
+    assert (sched[3:] == 3).all()
+    uni = _staleness_schedule(FLSimConfig(
+        backend="async", max_staleness=3, rounds=200,
+        staleness_mode="uniform", seed=1))
+    assert uni.min() == 0 and uni.max() == 3
+    assert (uni <= np.arange(200)).all()          # never older than history
+    # sync backends and S=0 get the all-zero schedule
+    assert (_staleness_schedule(FLSimConfig(rounds=10)) == 0).all()
+
+
+def test_zero_discount_freezes_stale_commits(data):
+    """staleness_discount=0: an s>0 commit scales its Adam step by 0**s = 0,
+    so under mode="max" (every commit after round 1 stale) Q never moves
+    past round 1 — the discount gates the step, not just the accounting."""
+    train, test = data
+    base = _cfg("bts", backend="async", max_staleness=1,
+                staleness_mode="max", staleness_discount=0.0)
+    one = run_fcf_simulation(train, test, replace(base, rounds=1))
+    five = run_fcf_simulation(train, test, replace(base, rounds=5))
+    np.testing.assert_array_equal(np.asarray(one.server_state.q),
+                                  np.asarray(five.server_state.q))
+    # the undamped run does keep moving
+    moving = run_fcf_simulation(
+        train, test, replace(base, rounds=5, staleness_discount=1.0))
+    assert not np.array_equal(np.asarray(one.server_state.q),
+                              np.asarray(moving.server_state.q))
+
+
+def test_stale_runs_change_quality_not_accounting(data):
+    """Staleness may move the metrics, never the wire-byte totals."""
+    train, test = data
+    cfg = _cfg("bts", codec="int8")
+    sync = run_fcf_simulation(train, test, cfg)
+    stale = run_fcf_simulation(
+        train, test, replace(cfg, backend="async", max_staleness=4))
+    assert (stale.bytes_down, stale.bytes_up) == \
+        (sync.bytes_down, sync.bytes_up)
+    assert stale.rounds == sync.rounds
+
+
+# --------------------------------------------------------------------- #
+# state plumbing
+# --------------------------------------------------------------------- #
+def test_snapshot_ring_is_payload_sized_wire():
+    """Depth-S bounding costs S+1 wire images of the M_s-row payload —
+    int8 codes + per-row scales — not S+1 full (M, K) fp32 tables."""
+    import jax.numpy as jnp
+
+    from repro.federated.simulation import _build
+
+    train, test = _mini_data()
+    cfg = FLSimConfig(strategy="bts", keep_fraction=0.1, rounds=4, theta=10,
+                      codec="int8", backend="async", max_staleness=3)
+    setup = _build(jnp.asarray(train), jnp.asarray(test), cfg)
+    ring = setup.state0.snapshots
+    m_s = setup.sel_cfg.num_select
+    assert m_s == 8                                 # 10% of 80 items
+    assert ring.values.shape == (4, m_s, cfg.num_factors)
+    assert ring.values.dtype == jnp.int8
+    assert ring.scales.shape == (4, m_s, 1)
+    # pending-attribution buffer rides in the selector state
+    pend = setup.state0.sel.pending
+    assert pend.indices.shape == (4, m_s)
+    assert pend.t.shape == (4,)
+
+
+def test_selector_observe_delay_correction_matches_shifted_round():
+    """observe(t_obs=s) must equal observing from a selector whose round
+    counter IS s — the reward coefficients see the pull round, nothing
+    else changes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.selector import (
+        SelectorConfig, selector_init, selector_observe, selector_select,
+    )
+
+    cfg = SelectorConfig(strategy="bts", num_arms=40, num_select=10, dim=8)
+    state = selector_init(cfg)
+    key = jax.random.PRNGKey(3)
+    # advance to round 9 with a few observes so the buffers are non-trivial
+    for r in range(9):
+        k = jax.random.fold_in(key, r)
+        idx, state = selector_select(cfg, state, k)
+        fb = jax.random.normal(jax.random.fold_in(key, 100 + r), (10, 8))
+        state, _ = selector_observe(cfg, state, idx, fb)
+    idx, state = selector_select(cfg, state, jax.random.fold_in(key, 99))
+    fb = jax.random.normal(jax.random.fold_in(key, 999), (10, 8))
+
+    delayed, r_delayed = selector_observe(
+        cfg, state, idx, fb, t_obs=jnp.asarray(5, jnp.int32))
+    shifted, r_shifted = selector_observe(
+        cfg, state._replace(t=jnp.asarray(5, jnp.int32)), idx, fb)
+    np.testing.assert_array_equal(np.asarray(r_delayed),
+                                  np.asarray(r_shifted))
+    np.testing.assert_array_equal(np.asarray(delayed.bts.reward_sum),
+                                  np.asarray(shifted.bts.reward_sum))
+
+
+def test_async_validates_config(data):
+    train, test = data
+    with pytest.raises(ValueError, match="async"):
+        run_fcf_simulation(train, test, _cfg("bts", max_staleness=2))
+    with pytest.raises(ValueError, match="staleness_mode"):
+        run_fcf_simulation(train, test, _cfg(
+            "bts", backend="async", max_staleness=1, staleness_mode="bogus"))
+    with pytest.raises(ValueError, match="max_staleness"):
+        run_fcf_simulation(train, test, _cfg(
+            "bts", backend="async", max_staleness=-1))
+    with pytest.raises(ValueError, match="blocks_per_commit"):
+        run_fcf_simulation(train, test, _cfg(
+            "bts", backend="async", blocks_per_commit=0))
+    # a mesh dictates one block per device — conflicting blocking is loud
+    with pytest.raises(ValueError, match="mesh_shards"):
+        run_fcf_simulation(train, test, _cfg(
+            "bts", backend="async", mesh_shards=1, blocks_per_commit=2))
+
+
+# --------------------------------------------------------------------- #
+# sharded composition (fake-device subprocess)
+# --------------------------------------------------------------------- #
+_SHARD_SCRIPT = r"""
+from dataclasses import replace
+import numpy as np
+from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+rng = np.random.default_rng(0)
+train = (rng.random((60, 80)) < 0.15).astype(np.float32)
+test = (rng.random((60, 80)) < 0.05).astype(np.float32)
+
+checked = 0
+for codec in ("fp32", "int8"):
+    for s_max in (0, 2):
+        cfg = FLSimConfig(strategy="bts", keep_fraction=0.25, rounds=6,
+                          theta=10, eval_every=3, eval_users=40, seed=0,
+                          codec=codec, record_selections=True,
+                          backend="async", max_staleness=s_max,
+                          staleness_mode="max")
+        ref = run_fcf_simulation(train, test,
+                                 replace(cfg, blocks_per_commit=4))
+        shard = run_fcf_simulation(train, test, replace(cfg, mesh_shards=4))
+        np.testing.assert_array_equal(ref.selections, shard.selections)
+        q_ref = np.asarray(ref.server_state.q)
+        q_shard = np.asarray(shard.server_state.q)
+        if codec == "fp32" and s_max > 0:
+            # raw-fp32 stale pops: XLA:CPU contraction ulps (see
+            # server_round_step_async docstring), never bit drift
+            np.testing.assert_allclose(q_ref, q_shard, rtol=1e-5, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(q_ref, q_shard)
+            np.testing.assert_array_equal(ref.rewards, shard.rewards)
+        assert float(ref.server_state.bytes_down) == \
+            float(shard.server_state.bytes_down)
+        checked += 1
+
+print(f"ASYNC_SHARD_PARITY_OK checked={checked}")
+"""
+
+
+@pytest.mark.subprocess
+def test_async_composes_with_shard_mesh():
+    """backend="async" + mesh_shards=4 == the single-device async engine at
+    blocks_per_commit=4, in a fake-CPU-device subprocess (one jax init)."""
+    from repro.launch.mesh import fake_cpu_devices_env
+
+    env = fake_cpu_devices_env(4)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=str(REPO_ROOT),
+        timeout=1200,
+    )
+    assert proc.returncode == 0, (
+        f"async shard parity subprocess failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+    assert "ASYNC_SHARD_PARITY_OK checked=4" in proc.stdout

@@ -106,6 +106,7 @@ print(f"SHARDED_PARITY_OK checked={checked}")
 """
 
 
+@pytest.mark.subprocess
 @pytest.mark.parametrize("devices", [8])
 def test_sharded_matches_scan_bitwise_all_strategies(devices):
     """All four strategies x {fp32, int8} at D=8 + the D=1 identity, in a
