@@ -45,6 +45,32 @@ OUT_PATH = "BENCH_payload_compression.json"
 
 STRATEGIES = ("bts", "random")
 KEEPS = (0.10, 0.25)
+# the third payload axis (ROADMAP follow-up): how much of each row the topk
+# uplink keeps. 0.25 is the codec's default; the sweep charts the frontier.
+TOPK_FRACTIONS = (0.125, 0.25, 0.5)
+
+
+def _variants(codecs: Sequence[str],
+              topk_fractions: Sequence[float]) -> List[Dict]:
+    """Expand the codec list into sweep cells.
+
+    ``topk`` fans out over ``topk_fractions`` (labelled ``topk@f``) and
+    ``int4`` gains an error-feedback twin (``int4+ef`` — the uplink carries
+    the quantization residual forward, same mechanism as topk's EF).
+    """
+    out: List[Dict] = []
+    for codec in codecs:
+        if codec == "topk":
+            for f in topk_fractions:
+                out.append({"codec": codec, "label": f"topk@{f:g}",
+                            "kwargs": {"codec_topk_fraction": f}})
+        elif codec == "int4":
+            out.append({"codec": codec, "label": "int4", "kwargs": {}})
+            out.append({"codec": codec, "label": "int4+ef",
+                        "kwargs": {"codec_int4_error_feedback": True}})
+        else:
+            out.append({"codec": codec, "label": codec, "kwargs": {}})
+    return out
 
 
 def _per_round_bytes(cfg: FLSimConfig, num_items: int) -> Dict[str, int]:
@@ -53,7 +79,8 @@ def _per_round_bytes(cfg: FLSimConfig, num_items: int) -> Dict[str, int]:
     simulation's traced counters."""
     codec_cfg = CodecConfig(name=cfg.codec,
                             topk_fraction=cfg.codec_topk_fraction,
-                            error_feedback=cfg.codec_error_feedback)
+                            error_feedback=cfg.codec_error_feedback,
+                            int4_error_feedback=cfg.codec_int4_error_feedback)
     down_cfg, up_cfg = direction_configs(codec_cfg)
     m_s = _num_select(cfg, num_items)
     down = wire_bytes(down_cfg, m_s, cfg.num_factors)
@@ -91,6 +118,7 @@ def run(dataset: str = "movielens-mini", rounds: int = 200, theta: int = 50,
         strategies: Sequence[str] = STRATEGIES,
         codecs: Sequence[str] = CODECS,
         keeps: Sequence[float] = KEEPS,
+        topk_fractions: Sequence[float] = TOPK_FRACTIONS,
         time_rounds: int = 60, seed: int = 0,
         out_path: Optional[str] = OUT_PATH) -> Dict:
     spec, train, test = load_dataset(dataset, seed=seed)
@@ -108,9 +136,9 @@ def run(dataset: str = "movielens-mini", rounds: int = 200, theta: int = 50,
     cells: List[Dict] = []
     for strategy in strategies:
         for keep in keeps:
-            for codec in codecs:
+            for var in _variants(codecs, topk_fractions):
                 cfg = replace(base, strategy=strategy, keep_fraction=keep,
-                              codec=codec)
+                              codec=var["codec"], **var["kwargs"])
                 t0 = time.time()
                 res = run_fcf_simulation(train, test, cfg)
                 secs = time.time() - t0
@@ -119,7 +147,11 @@ def run(dataset: str = "movielens-mini", rounds: int = 200, theta: int = 50,
                 fp32_same = _per_round_bytes(
                     replace(cfg, codec="fp32"), num_items)["total"]
                 cells.append({
-                    "strategy": strategy, "codec": codec, "keep": keep,
+                    "strategy": strategy, "codec": var["label"],
+                    "codec_base": var["codec"], "keep": keep,
+                    "topk_fraction": cfg.codec_topk_fraction
+                    if var["codec"] == "topk" else None,
+                    "int4_error_feedback": cfg.codec_int4_error_feedback,
                     "precision_at_10": res.final["precision"],
                     "f1": res.final["f1"], "map": res.final["map"],
                     "bytes_per_round": per_round,
@@ -211,15 +243,17 @@ def dry_run() -> Dict:
     base = FLSimConfig(rounds=1, theta=50)
     num_items = 300
     rows = []
-    for codec in CODECS:
-        cfg = replace(base, strategy="bts", keep_fraction=0.1, codec=codec)
+    variants = _variants(CODECS, TOPK_FRACTIONS)
+    for var in variants:
+        cfg = replace(base, strategy="bts", keep_fraction=0.1,
+                      codec=var["codec"], **var["kwargs"])
         b = _per_round_bytes(cfg, num_items)
-        rows.append((codec, b["down"], b["up"], b["total"]))
+        rows.append((var["label"], b["down"], b["up"], b["total"]))
     print("\n[dry-run] payload_compression — bytes/round at M=300, "
           "K=25, Theta=50, keep=0.10\n")
     print(markdown_table(("codec", "down B", "up B", "total B"), rows))
     return {"dry_run": True, "cells_planned":
-            len(STRATEGIES) * len(CODECS) * len(KEEPS) + 1}
+            len(STRATEGIES) * len(variants) * len(KEEPS) + 1}
 
 
 def main(argv: Optional[Sequence[str]] = None) -> Dict:

@@ -23,7 +23,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     from benchmarks import (async_cohorts, convergence, fcf_experiments,
                             kernel_bench, payload_compression, payload_table,
-                            reduction_sweep, roofline, sharded_rounds, table4)
+                            reduction_sweep, roofline, serving,
+                            sharded_rounds, table4)
 
     t0 = time.time()
     print("=" * 72)
@@ -40,6 +41,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         payload_compression.main(["--dry-run"])
         sharded_rounds.main(["--dry-run"])
         async_cohorts.main(["--dry-run"])
+        serving.main(["--dry-run"])
         roofline.main(["--dry-run"])
         print(f"\n[dry-run] all sections smoke-checked in "
               f"{time.time() - t0:.1f}s")
@@ -71,6 +73,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         async_cohorts.run()
     else:
         async_cohorts.run_quick()
+
+    # serving read path: fused compressed scoring vs the dense baseline
+    if args.full:
+        serving.run()                     # regenerates BENCH_serving.json
+    else:
+        serving.run(item_scales=(8192,), batches=(8, 64), iters=5,
+                    out_path=None)
 
     roofline.run(mesh="pod16x16")
     roofline.run(mesh="pod2x16x16")

@@ -1,26 +1,38 @@
-"""Batched serving example: prefill a prompt batch, decode greedily against
-the KV cache (the serve_step the decode dry-run shapes lower), for any
-assigned architecture including the recurrent/hybrid ones.
+"""Batched LLM serving example: prefill a prompt batch, decode greedily
+against the KV cache (the serve_step the decode dry-run shapes lower), for
+any assigned architecture including the recurrent/hybrid ones.
 
   PYTHONPATH=src python examples/serve_batch.py --arch recurrentgemma-2b
+
+The federated-recommender counterpart — serving top-N recommendations
+straight off the COMPRESSED item-factor model via the fused
+dequant->score->top-N kernel — lives in examples/serve_recs.py.
 """
 import argparse
+import sys
+from typing import List, Optional
 
 from repro.launch import serve as serve_mod
 
 
-def main() -> None:
+def main(argv: Optional[List[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny smoke config (seconds, CI-sized)")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        args.batch, args.gen = 2, 4
 
     ns = argparse.Namespace(arch=args.arch, reduced=True, batch=args.batch,
-                            prompt_len=32, gen=args.gen, seed=0)
+                            prompt_len=8 if args.dry_run else 32,
+                            gen=args.gen, seed=0)
     out = serve_mod.serve(ns)
     print(f"generated token matrix shape: {out['generated'].shape}")
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -1,0 +1,26 @@
+"""Recommendation serving example: train-and-serve off the compressed model.
+
+Runs the paper's full deployment loop — the async round engine trains
+FCF-BTS while publishing its ENCODED Q* snapshots into a live serving
+engine (no fp32 round-trip), then a batched request stream scores users
+through the fused dequant->score->top-N kernel against the int8 wire
+image. Prints users/sec, p50/p99 latency, and resident model bytes.
+
+  PYTHONPATH=src python examples/serve_recs.py
+  PYTHONPATH=src python examples/serve_recs.py --codec int4 --batch 64
+
+The LLM decode counterpart (KV-cache serving of the model zoo) lives in
+examples/serve_batch.py.
+"""
+import sys
+from typing import List, Optional
+
+from repro.launch import serve_recs as serve_recs_mod
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    return serve_recs_mod.main(argv)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,17 +1,22 @@
 from repro.cf.model import CFConfig, CFModel, cf_init
 from repro.cf.local import solve_user_factors, item_gradients, local_update
 from repro.cf.server import (
-    FCFServer, FCFServerConfig, RoundAux, ServerState, ShardContext,
-    server_init, server_round_step, shard_row_ops,
+    EncodedSnapshot, FCFServer, FCFServerConfig, RoundAux, ServerState,
+    ShardContext, latest_snapshot, server_init, server_round_step,
+    shard_row_ops,
 )
-from repro.cf.metrics import RecMetrics, evaluate_users, theoretical_best
+from repro.cf.metrics import (
+    RecMetrics, evaluate_users, ranked_metrics, ranked_metrics_from_indices,
+    theoretical_best,
+)
 from repro.cf.toplist import toplist_ranking
 
 __all__ = [
     "CFConfig", "CFModel", "cf_init",
     "solve_user_factors", "item_gradients", "local_update",
     "FCFServer", "FCFServerConfig",
-    "ServerState", "RoundAux", "ShardContext", "server_init",
-    "server_round_step", "shard_row_ops",
-    "RecMetrics", "evaluate_users", "theoretical_best", "toplist_ranking",
+    "EncodedSnapshot", "ServerState", "RoundAux", "ShardContext",
+    "latest_snapshot", "server_init", "server_round_step", "shard_row_ops",
+    "RecMetrics", "evaluate_users", "ranked_metrics",
+    "ranked_metrics_from_indices", "theoretical_best", "toplist_ranking",
 ]

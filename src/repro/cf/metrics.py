@@ -63,15 +63,19 @@ def _metrics_at_k(rel: jax.Array, test_counts: jax.Array, top_k: int) -> RecMetr
 
 
 @partial(jax.jit, static_argnames=("top_k",))
-def ranked_metrics(
-    scores: jax.Array,        # (B, M) recommendation scores
-    train_x: jax.Array,       # (B, M) binary train interactions (masked out)
+def ranked_metrics_from_indices(
+    idx: jax.Array,           # (B, top_k) ranked item ids (train already masked)
     test_x: jax.Array,        # (B, M) binary test interactions (ground truth)
     top_k: int = 10,
 ) -> RecMetrics:
-    """Normalized metrics, averaged over users with non-empty test sets."""
-    masked = jnp.where(train_x > 0, NEG_INF, scores)
-    _, idx = jax.lax.top_k(masked, top_k)                  # (B, top_k)
+    """Normalized metrics from an already-ranked top-k id list.
+
+    The scores themselves never enter the metrics — only the ranked ids do —
+    so any scorer that reproduces ``ranked_metrics``'s ranking (e.g. the
+    fused chunked scorer in :mod:`repro.kernels.payload_score`, which shares
+    the ``NEG_INF`` mask sentinel and ``lax.top_k`` tie order) yields
+    bit-identical metrics without materializing the (B, M) score matrix.
+    """
     rel = jnp.take_along_axis(test_x, idx, axis=-1)        # (B, top_k)
     test_counts = jnp.sum(test_x, axis=-1)
 
@@ -93,6 +97,19 @@ def ranked_metrics(
     )
 
 
+@partial(jax.jit, static_argnames=("top_k",))
+def ranked_metrics(
+    scores: jax.Array,        # (B, M) recommendation scores
+    train_x: jax.Array,       # (B, M) binary train interactions (masked out)
+    test_x: jax.Array,        # (B, M) binary test interactions (ground truth)
+    top_k: int = 10,
+) -> RecMetrics:
+    """Normalized metrics, averaged over users with non-empty test sets."""
+    masked = jnp.where(train_x > 0, NEG_INF, scores)
+    _, idx = jax.lax.top_k(masked, top_k)                  # (B, top_k)
+    return ranked_metrics_from_indices(idx, test_x, top_k=top_k)
+
+
 def evaluate_users(
     item_factors: jax.Array,  # (M, K) full global model (inference download)
     train_x: jax.Array,       # (B, M)
@@ -100,12 +117,31 @@ def evaluate_users(
     l2: float = 1.0,
     alpha: float = 4.0,
     top_k: int = 10,
+    item_chunk: int | None = None,
 ) -> RecMetrics:
     """End-to-end on-device evaluation: solve p_i from train data against the
     downloaded global model, score all items, rank, compute normalized metrics
-    on the held-out 20% (Sec. 6.2)."""
+    on the held-out 20% (Sec. 6.2).
+
+    ``item_chunk`` routes scoring through the fused chunked top-k path
+    (:func:`repro.kernels.wire_topn` over an fp32 wire view of the table),
+    which never materializes the dense (B, M) fp32 score matrix — the fix for
+    large-M eval. Chunking cannot change a score (each dot reduces over K
+    only) and the chunk merge preserves ``lax.top_k``'s tie order, so the
+    result is bit-identical to the dense path (tested in test_serving.py).
+    """
     from repro.cf.local import solve_user_factors
 
     p = solve_user_factors(item_factors, train_x, l2=l2, alpha=alpha)
-    scores = p @ item_factors.T
-    return ranked_metrics(scores, train_x, test_x, top_k=top_k)
+    if item_chunk is None:
+        scores = p @ item_factors.T
+        return ranked_metrics(scores, train_x, test_x, top_k=top_k)
+
+    from repro.compress import CodecConfig, DenseWire
+    from repro.kernels import wire_topn
+
+    wire = DenseWire(values=item_factors.astype(jnp.float32))
+    _, idx = wire_topn(CodecConfig(name="fp32"), wire, p,
+                       item_factors.shape[1], top_k, train_mask=train_x,
+                       block_m=item_chunk)
+    return ranked_metrics_from_indices(idx, test_x, top_k=top_k)

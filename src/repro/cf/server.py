@@ -205,6 +205,43 @@ def _ring_get(ring: Any, slot: jax.Array) -> Any:
         ring)
 
 
+class EncodedSnapshot(NamedTuple):
+    """One published downlink snapshot, still in its wire format.
+
+    The serving publish artifact: ``wire`` holds the encoded payload rows
+    exactly as the async engine pushed them into the ring (int8 codes +
+    per-row scales, fp16 halves, ...), ``indices`` names the global item
+    rows they cover, ``t`` is the publish round. Consumers that keep their
+    model in wire format (:class:`repro.serve.ServingModel`) install these
+    rows without ever decoding to fp32 — per-row encoding makes the row
+    patch bit-identical to re-encoding the patched dense table.
+    """
+
+    t: jax.Array            # () int32 — publish round
+    indices: jax.Array      # (M_s,) int32 — global rows the wire covers
+    wire: Any               # downlink wire pytree for those rows
+
+
+def latest_snapshot(state: ServerState) -> EncodedSnapshot:
+    """The freshest ring entry of an async-engine state (no decode).
+
+    After round ``t`` commits, the newest published snapshot lives in ring
+    slot ``rem(t-1, slots)`` and its pull is recorded in the selector's
+    pending-attribution buffer — both are popped here as-is. Requires a
+    state built with ``server_init(async_slots=...)`` that has run at least
+    one round (slot 0 is all-zero before the first publish).
+    """
+    sel_async = state.sel
+    assert isinstance(sel_async, AsyncSelectorState), (
+        "latest_snapshot needs a state built with "
+        "server_init(async_slots=...)")
+    slots = sel_async.pending.t.shape[0]
+    slot = jax.lax.rem(state.t - 1, slots)
+    idx, t_pub = pending_lookup(sel_async.pending, slot)
+    return EncodedSnapshot(
+        t=t_pub, indices=idx, wire=_ring_get(state.snapshots, slot))
+
+
 def server_init(
     item_factors: jax.Array,
     sel_cfg: SelectorConfig,

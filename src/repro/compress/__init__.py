@@ -14,6 +14,7 @@ from repro.compress.codecs import (
     codec_state_init,
     compression_ratio,
     decode,
+    decode_row_block,
     dense_bytes,
     dequantize_rows,
     direction_configs,
@@ -23,17 +24,20 @@ from repro.compress.codecs import (
     pack_int4,
     quantize_rows,
     roundtrip,
+    slice_rows,
     topk_k,
     unpack_int4,
     validate_config,
     wire_bytes,
+    wire_resident_bytes,
 )
 
 __all__ = [
     "CODECS", "CodecConfig", "CodecState", "DenseWire", "QuantWire",
     "TopKWire", "Wire", "codec_state_init", "compression_ratio", "decode",
-    "dense_bytes", "dequantize_rows", "direction_configs", "encode",
-    "encode_with_residual",
-    "is_stateful", "pack_int4", "quantize_rows", "roundtrip", "topk_k",
-    "unpack_int4", "validate_config", "wire_bytes",
+    "decode_row_block", "dense_bytes", "dequantize_rows",
+    "direction_configs", "encode", "encode_with_residual",
+    "is_stateful", "pack_int4", "quantize_rows", "roundtrip", "slice_rows",
+    "topk_k", "unpack_int4", "validate_config", "wire_bytes",
+    "wire_resident_bytes",
 ]

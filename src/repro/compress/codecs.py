@@ -58,6 +58,10 @@ class CodecConfig(NamedTuple):
     name: str = "fp32"
     topk_fraction: float = 0.25   # fraction of dim kept per row (topk only)
     error_feedback: bool = True   # topk: carry dropped mass as a residual
+    # int4: carry the quantization error as an uplink EF residual too. Opt-in
+    # (unlike topk's default-on flag) so existing int4 trajectories and the
+    # ServerState.codec pytree shape stay unchanged unless asked for.
+    int4_error_feedback: bool = False
 
 
 class DenseWire(NamedTuple):
@@ -101,8 +105,16 @@ def topk_k(cfg: CodecConfig, dim: int) -> int:
 
 
 def is_stateful(cfg: CodecConfig) -> bool:
-    """True when the codec carries cross-round state (the EF residual)."""
-    return cfg.name == "topk" and cfg.error_feedback
+    """True when the codec carries cross-round state (the EF residual).
+
+    topk carries it by default (sparsification drops whole coordinates,
+    so EF is what makes the cumulative update converge); int4 carries it
+    only when ``int4_error_feedback`` is set (the 15-level grid's rounding
+    error is small but systematic — EF turns it into unbiased dither).
+    """
+    if cfg.name == "topk":
+        return cfg.error_feedback
+    return cfg.name == "int4" and cfg.int4_error_feedback
 
 
 def direction_configs(cfg: CodecConfig) -> Tuple[CodecConfig, CodecConfig]:
@@ -226,6 +238,46 @@ def decode(cfg: CodecConfig, wire: Wire, dim: int) -> jax.Array:
 def roundtrip(cfg: CodecConfig, rows: jax.Array) -> jax.Array:
     """decode(encode(rows)) — the receiver's view of a stateless transmit."""
     return decode(cfg, encode(cfg, rows), rows.shape[-1])
+
+
+# ===================================================================== #
+# block access — the decode-free scoring contract
+# ===================================================================== #
+# Every wire format keeps the row axis leading on every leaf (codes,
+# scales, topk values/indices all carry one entry per row), so a consumer
+# can slice a row block straight out of the wire pytree and decode ONLY
+# that block — the serving engine's fused dequant->score->top-N path and
+# the chunked evaluator never materialize the dense fp32 table. Encoding
+# is strictly per-row (per-row scales, per-row topk), which makes block
+# decode exact: decode_row_block(w, s, n) == decode(w)[s:s+n] bit-for-bit.
+def slice_rows(wire: Wire, start, size: int) -> Wire:
+    """Rows ``[start, start+size)`` of a wire pytree (``start`` may be
+    traced; out-of-range slices clamp like ``lax.dynamic_slice``)."""
+    return jax.tree.map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, start, size, axis=0),
+        wire)
+
+
+def decode_row_block(
+    cfg: CodecConfig, wire: Wire, dim: int, start, size: int
+) -> jax.Array:
+    """Dense float32 (size, dim) view of one row block of the wire image.
+
+    The per-row encoding guarantee makes this bit-identical to slicing the
+    full decode — property-tested in ``tests/test_serving.py``.
+    """
+    return decode(cfg, slice_rows(wire, start, size), dim)
+
+
+def wire_resident_bytes(wire: Wire) -> int:
+    """Actual bytes a wire pytree keeps resident (sum of leaf nbytes).
+
+    For a full-table wire image this is the serving model's memory
+    footprint; equals :func:`wire_bytes` for freshly encoded blocks
+    (property-tested) but works on any concrete wire, e.g. a snapshot ring
+    slot or a padded serving table.
+    """
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(wire)))
 
 
 def encode_with_residual(

@@ -48,7 +48,7 @@ smoothing at read-out time.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -97,11 +97,17 @@ class FLSimConfig:
     codec: str = "fp32"
     codec_topk_fraction: float = 0.25    # topk: fraction of dim kept per row
     codec_error_feedback: bool = True    # topk: carry the EF residual
+    codec_int4_error_feedback: bool = False  # int4: carry the EF residual
     eval_every: int = 25
     eval_users: int = 512
     # evaluate the eval cohort in user-chunks of this size (None = one shot);
     # bounds the (B, M) score matrix at web-scale M
     eval_user_chunk: Optional[int] = None
+    # item-block size for the fused chunked scorer during periodic eval
+    # (kernels.wire_topn — no (B, M) score matrix). None = auto: engage at
+    # block 4096 whenever eval_user_chunk is set, else keep the one-shot
+    # dense path. Bit-identical either way (tested in test_serving.py).
+    eval_item_chunk: Optional[int] = None
     # "scan" (default engine) | "python" (reference) | "shard" (shard_map
     # data-parallel rounds over a ("data",) device mesh) | "async"
     # (staleness-bounded async cohort queue; composes with mesh_shards)
@@ -132,6 +138,12 @@ class FLSimConfig:
     # devices). Overrides cohort_shards (one cohort block per device).
     mesh_shards: Optional[int] = None
     record_selections: bool = False      # surface per-round indices/rewards
+    # serving publish hook, called at every eval boundary with
+    # (round, server_state). repro.serve.ServingEngine.publisher() returns
+    # one that installs the state's freshest encoded ring snapshot
+    # (backend="async") — or an encoded full table otherwise — as the live
+    # serving model without ever round-tripping through a dense fp32 Q.
+    snapshot_hook: Optional[Callable[[int, ServerState], None]] = None
     seed: int = 0
 
 
@@ -247,6 +259,7 @@ def _build(train_j: jax.Array, test_j: jax.Array,
     codec_cfg = CodecConfig(
         name=config.codec, topk_fraction=config.codec_topk_fraction,
         error_feedback=config.codec_error_feedback,
+        int4_error_feedback=config.codec_int4_error_feedback,
     )
     validate_config(codec_cfg)
     model = cf_init(cf_cfg, k_init)
@@ -473,23 +486,35 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
     return run_chunk, state0
 
 
+_EVAL_ITEM_CHUNK = 4096     # auto item-block when eval_user_chunk is set
+
+
 def _evaluate(q: jax.Array, eval_train: jax.Array, eval_test: jax.Array,
               config: FLSimConfig) -> RecMetrics:
     """Full-model eval, optionally chunked over users (bounded memory).
 
     Chunk results combine exactly: each chunk mean is re-weighted by its
-    count of valid (non-empty-test) users before averaging.
+    count of valid (non-empty-test) users before averaging. When user
+    chunking is on, scoring also reroutes through the fused chunked top-k
+    scorer (``evaluate_users(item_chunk=...)``) so neither axis of the
+    (B, M) score matrix is materialized — bit-identical to the dense path
+    (same mask sentinel, same top_k tie order).
     """
     chunk = config.eval_user_chunk
     n = eval_train.shape[0]
+    item_chunk = config.eval_item_chunk
+    if item_chunk is None and chunk is not None:
+        item_chunk = _EVAL_ITEM_CHUNK
     if chunk is None or chunk >= n:
         return evaluate_users(q, eval_train, eval_test,
-                              l2=config.l2, alpha=config.alpha)
+                              l2=config.l2, alpha=config.alpha,
+                              item_chunk=item_chunk)
     sums = np.zeros(4)
     weight = 0.0
     for s in range(0, n, chunk):
         tr, te = eval_train[s:s + chunk], eval_test[s:s + chunk]
-        m = evaluate_users(q, tr, te, l2=config.l2, alpha=config.alpha)
+        m = evaluate_users(q, tr, te, l2=config.l2, alpha=config.alpha,
+                           item_chunk=item_chunk)
         valid = float((np.asarray(te).sum(axis=-1) > 0).sum())
         sums += valid * np.array([float(m.precision), float(m.recall),
                                   float(m.f1), float(m.map)])
@@ -606,6 +631,8 @@ def run_fcf_simulation(
                 aux_chunks.append(aux)
             m = _evaluate(state.q, setup.eval_train, setup.eval_test, config)
             history.log(end, **m.as_dict())
+            if config.snapshot_hook is not None:
+                config.snapshot_hook(end, state)
     else:  # "python": the per-round-dispatch reference loop
         round_fn = _make_round_fn(train_j, setup, config.cohort_shards)
         step = jax.jit(round_fn)
@@ -617,6 +644,8 @@ def run_fcf_simulation(
                 m = _evaluate(state.q, setup.eval_train, setup.eval_test,
                               config)
                 history.log(t, **m.as_dict())
+                if config.snapshot_hook is not None:
+                    config.snapshot_hook(t, state)
 
     return _finalize(setup, config, state, history, aux_chunks, csv_path)
 

@@ -2,6 +2,7 @@
 
   fcf_grad        fused FCF item-gradient (the paper's server/client compute)
   payload_gather  payload row gather / scatter-add (the paper's subset ops)
+  payload_score   fused dequant->score->top-N over compressed tables (serving)
   flash_attention blockwise GQA attention w/ sliding window (model zoo)
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py exposes the jit'd
@@ -9,10 +10,10 @@ wrappers that auto-interpret on CPU.
 """
 from repro.kernels.ops import (
     attention, fcf_item_gradients, gather_rows, scatter_add_rows,
-    scatter_set_rows,
+    scatter_set_rows, wire_topn,
 )
 
 __all__ = [
     "attention", "fcf_item_gradients", "gather_rows", "scatter_add_rows",
-    "scatter_set_rows",
+    "scatter_set_rows", "wire_topn",
 ]

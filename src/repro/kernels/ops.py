@@ -20,6 +20,7 @@ from repro.kernels import flash_attention as _flash
 from repro.kernels import fcf_grad as _fcf
 from repro.kernels import payload_gather as _pg
 from repro.kernels import payload_quant as _pq
+from repro.kernels import payload_score as _ps
 from repro.kernels import ref as _ref
 
 
@@ -148,6 +149,40 @@ def dequant_scatter_set_rows(
         return _ref.dequant_scatter_set_rows_ref(table, idx, values, scales)
     return _pq.dequant_scatter_set_rows(table, idx, values, scales,
                                         interpret=_interpret())
+
+
+def wire_topn(
+    cfg,                   # repro.compress.CodecConfig
+    wire,                  # full-table wire pytree (row-leading leaves)
+    p: jax.Array,          # (B, K) user factors
+    dim: int,              # K — decoded row width
+    top_n: int,
+    train_mask: Optional[jax.Array] = None,   # (B, M) binary; 1 = exclude
+    *,
+    block_m: int = 1024,
+):
+    """Fused dequant->score->top-N over a COMPRESSED table: the serving read
+    path. Returns ``(scores (B, N) f32, item ids (B, N) i32)`` in descending
+    score order with ``lax.top_k`` tie semantics (equal scores -> lowest id).
+
+    Neither the dense fp32 table nor the (B, M) score matrix is ever
+    materialized. The topk wire format has no block-dequant kernel (sparse
+    scatter, not a row transform) and always takes the chunked oracle.
+    """
+    if _use_ref() or cfg.name == "topk":
+        return _ref.wire_topn_ref(cfg, wire, p, dim, top_n,
+                                  train_mask=train_mask, block_m=block_m)
+    interp = _interpret()
+    if cfg.name in ("fp32", "fp16"):
+        return _ps.dense_topn(p, wire.values, top_n, train_mask,
+                              block_m=block_m, interpret=interp)
+    if cfg.name == "int8":
+        return _ps.quant_topn(p, wire.values, wire.scales, top_n, train_mask,
+                              block_m=block_m, interpret=interp)
+    if cfg.name == "int4":
+        return _ps.quant4_topn(p, wire.values, wire.scales, dim, top_n,
+                               train_mask, block_m=block_m, interpret=interp)
+    raise ValueError(f"no fused scoring path for codec {cfg.name!r}")
 
 
 def attention(

@@ -2,7 +2,7 @@
 and dtypes and assert_allclose against these."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,97 @@ def gather_quantize_rows_block_ref(table: jax.Array, local_idx: jax.Array):
     """Shard-local fused downlink encode (clamped gather + per-row int8)."""
     return gather_quantize_rows_ref(
         table, jnp.clip(local_idx, 0, table.shape[0] - 1))
+
+
+NEG_INF = -1e30     # train-mask sentinel, shared with repro.cf.metrics
+
+
+def topn_merge_ref(
+    vals: jax.Array,       # (B, N) running top-N scores, descending
+    idxs: jax.Array,       # (B, N) their global item ids
+    cand_vals: jax.Array,  # (B, C) candidate block scores
+    cand_idx: jax.Array,   # (B, C) candidate global item ids
+):
+    """Merge a candidate block into a running top-N list.
+
+    The running list is concatenated IN FRONT of the candidates, so
+    ``lax.top_k``'s stable tie rule (lower position first) resolves equal
+    scores toward the earlier — i.e. lower item id — entry. By induction
+    over blocks this makes the chunked top-N bit-identical, values and
+    indices and order, to one ``lax.top_k`` over the full score row.
+    """
+    top_n = vals.shape[1]
+    allv = jnp.concatenate([vals, cand_vals], axis=1)
+    alli = jnp.concatenate([idxs, cand_idx], axis=1)
+    v, pos = jax.lax.top_k(allv, top_n)
+    return v, jnp.take_along_axis(alli, pos, axis=1)
+
+
+def wire_topn_ref(
+    cfg,                   # repro.compress.CodecConfig (any codec)
+    wire,                  # full-table wire pytree (row-leading leaves)
+    p: jax.Array,          # (B, K) user factors
+    dim: int,              # K — the decoded row width
+    top_n: int,
+    train_mask: Optional[jax.Array] = None,   # (B, M) binary; 1 = exclude
+    block_m: int = 4096,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused dequant->score->top-N oracle: ``(scores (B, N), ids (B, N))``.
+
+    Scores users directly against the COMPRESSED table: each row block is
+    decoded on the fly (``compress.decode_row_block`` — per-row encoding
+    makes block decode exact), scored as ``p @ q_blk.T``, train-masked with
+    the metrics module's ``NEG_INF`` sentinel, and merged into a running
+    top-N. Neither the dense fp32 table nor the (B, M) score matrix is ever
+    materialized — peak extra memory is one (block_m, K) decode plus one
+    (B, block_m) score block.
+
+    Blocking over items never changes a score (each ``p_i . q_j`` reduces
+    over K only) and the merge preserves ``lax.top_k``'s tie order, so the
+    result matches the naive dense path
+    ``lax.top_k(where(mask, NEG_INF, p @ decode(wire).T), N)``.
+
+    The table is zero-padded to a whole number of ``block_m`` blocks and the
+    pad lanes forced to -inf AFTER train-masking — the same block structure,
+    dot shapes and mask order as the Pallas kernel, which is what makes the
+    kernel-vs-ref comparison bitwise (a gemm's rounding may legitimately
+    vary with its output shape, so a remainder-sized dot would not do).
+    """
+    from repro.compress.codecs import decode_row_block
+
+    num_rows = jax.tree.leaves(wire)[0].shape[0]
+    b = p.shape[0]
+    p = p.astype(jnp.float32)
+
+    nb = -(-num_rows // block_m)
+    pad = nb * block_m - num_rows
+    if pad:
+        wire = jax.tree.map(
+            lambda leaf: jnp.pad(
+                leaf, ((0, pad),) + ((0, 0),) * (leaf.ndim - 1)), wire)
+        if train_mask is not None:
+            train_mask = jnp.pad(train_mask, ((0, 0), (0, pad)))
+
+    def score_block(start: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        q_blk = decode_row_block(cfg, wire, dim, start, block_m)  # (bm, K)
+        s = p @ q_blk.T                                           # (B, bm)
+        gidx = start + jnp.arange(block_m, dtype=jnp.int32)
+        if train_mask is not None:
+            m_blk = jax.lax.dynamic_slice_in_dim(
+                train_mask, start, block_m, axis=1)
+            s = jnp.where(m_blk > 0, NEG_INF, s)
+        s = jnp.where(gidx[None, :] < num_rows, s, -jnp.inf)
+        return s, jnp.broadcast_to(gidx[None, :], (b, block_m))
+
+    vals0 = jnp.full((b, top_n), -jnp.inf, jnp.float32)
+    idxs0 = jnp.zeros((b, top_n), jnp.int32)
+
+    def body(carry, start):
+        return topn_merge_ref(*carry, *score_block(start)), None
+
+    starts = jnp.arange(nb, dtype=jnp.int32) * block_m
+    (vals, idxs), _ = jax.lax.scan(body, (vals0, idxs0), starts)
+    return vals, idxs
 
 
 def mha_chunked_ref(

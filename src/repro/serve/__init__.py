@@ -1,0 +1,18 @@
+"""Compressed serving engine: the read path of the federated recommender.
+
+Training optimizes which payload rows move (the paper's contribution);
+this package serves recommendations FROM that compressed payload. The
+model stays in its downlink wire format end-to-end — the async engine's
+encoded ring snapshots install directly as serving rows
+(:func:`ServingModel.install_snapshot`, no fp32 round-trip), and requests
+score against the wire image through the fused dequant->score->top-N
+kernel (:func:`repro.kernels.wire_topn`), never materializing the dense
+fp32 table or a (B, M) score matrix.
+
+  ServingModel   immutable wire-format model + row-patch install
+  ServingEngine  pad-to-bucket request batching + atomic snapshot swap
+"""
+from repro.serve.model import ServingModel
+from repro.serve.engine import ServeStats, ServingEngine
+
+__all__ = ["ServeStats", "ServingEngine", "ServingModel"]

@@ -1,0 +1,169 @@
+"""Request batching + snapshot publish/swap around a :class:`ServingModel`.
+
+Two serving-infrastructure concerns live here, deliberately outside the
+pure model:
+
+  * REQUEST BATCHING — recommendation requests arrive at arbitrary batch
+    sizes, but every distinct shape costs one XLA compile. The engine pads
+    each request up to a fixed bucket ladder (``buckets``), so steady-state
+    traffic hits a handful of compiled programs no matter the request mix;
+    oversized requests chunk over the largest bucket. Padded user rows are
+    all-zero factor vectors whose results are sliced off before returning.
+  * SNAPSHOT PUBLISH/SWAP — training publishes encoded payload rows
+    (the async ring's :class:`repro.cf.server.EncodedSnapshot` entries);
+    ``publish_snapshot`` patches them into the wire-resident model and
+    atomically swaps the result in. The swap is a single reference
+    assignment under a lock with a monotonically bumped version;
+    in-flight requests keep the model value they grabbed at entry (JAX
+    arrays are immutable), so readers see either the old or the new model
+    in full — never a mix (tested in tests/test_serving.py).
+
+The model/version pair only changes together under ``_lock``; the jit
+cache is keyed on (bucket, M, codec) shapes, so a swap to a same-shape
+model never recompiles.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.model import ServingModel
+
+DEFAULT_BUCKETS = (8, 64, 256)
+
+
+class ServeStats(NamedTuple):
+    """Engine counters (monotonic since construction)."""
+
+    requests: int           # recommend() calls
+    users: int              # real (unpadded) user rows served
+    installs: int           # snapshot/model swaps
+    version: int            # current model version
+
+
+class ServingEngine:
+    """Batched, hot-swappable serving front-end over a wire-format model."""
+
+    def __init__(
+        self,
+        model: ServingModel,
+        *,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        top_n: int = 10,
+        block_m: int = 1024,
+    ):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"buckets must be positive, got {buckets!r}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.top_n = int(top_n)
+        self.block_m = int(block_m)
+        self._lock = threading.Lock()
+        self._model = model
+        self._requests = 0
+        self._users = 0
+        self._installs = 0
+
+    # ------------------------------------------------------------- #
+    # model access + publish/swap
+    # ------------------------------------------------------------- #
+    @property
+    def model(self) -> ServingModel:
+        with self._lock:
+            return self._model
+
+    def swap(self, model: ServingModel) -> ServingModel:
+        """Atomically install ``model`` as the live serving model."""
+        with self._lock:
+            if model.version <= self._model.version:
+                model = model._replace(version=self._model.version + 1)
+            self._model = model
+            self._installs += 1
+            return model
+
+    def publish_rows(self, indices: jax.Array, rows_wire: Any) -> ServingModel:
+        """Patch encoded payload rows into the live model and swap."""
+        return self.swap(self.model.install_rows(indices, rows_wire))
+
+    def publish_snapshot(self, snapshot) -> ServingModel:
+        """Install an async-ring :class:`EncodedSnapshot` (no fp32 decode)."""
+        return self.swap(self.model.install_snapshot(snapshot))
+
+    def publisher(self):
+        """A ``(round, ServerState) -> None`` hook for ``FLSimConfig
+        .snapshot_hook``: publishes each eval-boundary state into this
+        engine. Async-engine states publish their freshest encoded ring
+        snapshot — the wire rows themselves, never a decoded fp32 Q* —
+        while synchronous states (no ring) re-encode the full table.
+        """
+        def hook(_round: int, state) -> None:
+            if state.snapshots != ():
+                from repro.cf.server import latest_snapshot
+                self.publish_snapshot(latest_snapshot(state))
+            else:
+                cur = self.model
+                self.swap(ServingModel.from_dense(
+                    cur.cfg, state.q, version=cur.version + 1))
+
+        return hook
+
+    def stats(self) -> ServeStats:
+        with self._lock:
+            return ServeStats(requests=self._requests, users=self._users,
+                              installs=self._installs,
+                              version=self._model.version)
+
+    # ------------------------------------------------------------- #
+    # batched reads
+    # ------------------------------------------------------------- #
+    def _bucket_for(self, b: int) -> int:
+        for size in self.buckets:
+            if b <= size:
+                return size
+        return self.buckets[-1]
+
+    def recommend(
+        self,
+        p: jax.Array,                             # (B, K) user factors
+        top_n: Optional[int] = None,
+        train_mask: Optional[jax.Array] = None,   # (B, M); 1 = exclude
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Top-N items for a batch of users: ``(scores, ids)``, best first.
+
+        The request is padded up to the bucket ladder (or chunked over the
+        largest bucket) and scored against ONE model value grabbed at
+        entry, so a concurrent publish never splits a request across model
+        versions.
+        """
+        n = self.top_n if top_n is None else int(top_n)
+        model = self.model           # one consistent view for the request
+        b = p.shape[0]
+        out_v, out_i = [], []
+        step = self.buckets[-1]
+        for start in range(0, b, step):
+            pc = p[start:start + step]
+            mc = None if train_mask is None \
+                else train_mask[start:start + step]
+            v, i = self._run_bucket(model, pc, mc, n)
+            out_v.append(v)
+            out_i.append(i)
+        with self._lock:
+            self._requests += 1
+            self._users += b
+        if len(out_v) == 1:
+            return out_v[0], out_i[0]
+        return jnp.concatenate(out_v), jnp.concatenate(out_i)
+
+    def _run_bucket(self, model: ServingModel, p: jax.Array,
+                    mask: Optional[jax.Array], top_n: int):
+        b = p.shape[0]
+        size = self._bucket_for(b)
+        if b < size:
+            p = jnp.pad(p, ((0, size - b), (0, 0)))
+            if mask is not None:
+                mask = jnp.pad(mask, ((0, size - b), (0, 0)))
+        vals, idx = model.topn(p, top_n, train_mask=mask,
+                               block_m=self.block_m)
+        return vals[:b], idx[:b]

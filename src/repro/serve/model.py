@@ -1,0 +1,89 @@
+"""The serving model: a full item table resident in its WIRE format.
+
+A deployed federated recommender holds the same artifact it trains over
+the wire — the compressed payload (SecEmb's deployment model; PAPERS.md).
+:class:`ServingModel` keeps the (M, K) item table as a wire pytree
+(int8 codes + per-row scales, fp16 halves, packed int4 nibbles, or raw
+fp32) and exposes exactly two operations:
+
+  * ``topn`` — fused dequant->score->top-N via :func:`repro.kernels
+    .wire_topn`; the fp32 table and the (B, M) score matrix never exist.
+  * ``install_rows`` / ``install_snapshot`` — patch the wire image with
+    freshly published payload rows, still encoded. Every codec here
+    encodes PER ROW (row-leading leaves, per-row scales), so scattering
+    wire rows is bit-identical to re-encoding the patched dense table —
+    the property that makes decode-free publishing sound (tested in
+    tests/test_serving.py).
+
+Models are immutable pytree-of-arrays values: installs return a new
+model with a bumped ``version``, and in-flight readers keep scoring the
+arrays they already hold (JAX arrays cannot be mutated), so a concurrent
+swap can never tear a request.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import (
+    CodecConfig, direction_configs, encode, wire_resident_bytes,
+)
+from repro.kernels import wire_topn
+
+
+class ServingModel(NamedTuple):
+    cfg: CodecConfig        # the DOWNLINK wire format the table is held in
+    wire: Any               # full-table wire pytree (row-leading leaves)
+    num_items: int          # M
+    dim: int                # K
+    version: int = 0        # bumped on every install (swap audit trail)
+
+    @classmethod
+    def from_dense(cls, cfg: CodecConfig, item_factors: jax.Array,
+                   version: int = 0) -> "ServingModel":
+        """Encode a dense (M, K) table into its resident wire image.
+
+        The one place a dense table legitimately enters the serving path:
+        bootstrapping from a synchronous-engine state (which holds fp32 Q).
+        Async ring snapshots skip this — see :meth:`install_snapshot`.
+        """
+        down_cfg, _ = direction_configs(cfg)
+        m, k = item_factors.shape
+        return cls(cfg=down_cfg, wire=encode(down_cfg, item_factors),
+                   num_items=m, dim=k, version=version)
+
+    def topn(
+        self,
+        p: jax.Array,                         # (B, K) user factors
+        top_n: int,
+        train_mask: Optional[jax.Array] = None,   # (B, M); 1 = exclude
+        *,
+        block_m: int = 1024,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(scores (B, N) f32, item ids (B, N) i32), best first."""
+        return wire_topn(self.cfg, self.wire, p, self.dim, top_n,
+                         train_mask=train_mask, block_m=block_m)
+
+    def install_rows(self, indices: jax.Array, rows_wire: Any,
+                     ) -> "ServingModel":
+        """Patch ``indices`` with already-encoded payload rows (no decode).
+
+        ``rows_wire`` must be in this model's wire format with row-leading
+        leaves (the async ring's entries are, by construction — the ring
+        mirrors the downlink format). Indices must be unique, as selector
+        pulls are.
+        """
+        idx = indices.astype(jnp.int32)
+        wire = jax.tree.map(lambda full, rows: full.at[idx].set(rows),
+                            self.wire, rows_wire)
+        return self._replace(wire=wire, version=self.version + 1)
+
+    def install_snapshot(self, snapshot) -> "ServingModel":
+        """Install a :class:`repro.cf.server.EncodedSnapshot` ring entry."""
+        return self.install_rows(snapshot.indices, snapshot.wire)
+
+    def resident_bytes(self) -> int:
+        """Bytes the model actually occupies in serving memory."""
+        return wire_resident_bytes(self.wire)

@@ -1,0 +1,355 @@
+"""Serving read path: fused dequant->score->top-N kernel parity, the
+decode-free block-scoring contract, snapshot publish/swap, chunked-eval
+bit-parity, and the request-batching layer.
+
+Parity tiers mirror the repo's kernel contract: fp32/fp16/int8 (and the
+chunked ref for every codec) are BIT-EXACT against the naive dense path;
+int4 is bit-exact in interpret mode and documented-ulp on hardware; topk
+has no kernel and always routes through the chunked ref.
+"""
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.compress import (
+    CodecConfig, decode, decode_row_block, encode, slice_rows,
+    wire_resident_bytes,
+)
+from repro.kernels import payload_score as ps_mod
+from repro.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+ALL_CODECS = ("fp32", "fp16", "int8", "int4", "topk")
+KERNEL_CODECS = ("fp32", "fp16", "int8", "int4")   # have a Pallas path
+
+
+def _wire(codec, m, k, seed=0):
+    cfg = CodecConfig(name=codec)
+    q = jnp.asarray(np.random.default_rng(seed).standard_normal((m, k)),
+                    jnp.float32)
+    return cfg, q, encode(cfg, q)
+
+
+def _dense_topn(cfg, wire, p, k, n, mask=None):
+    """The naive oracle: full decode, full (B, M) scores, one top_k."""
+    s = p @ decode(cfg, wire, k).T
+    if mask is not None:
+        s = jnp.where(mask > 0, ref.NEG_INF, s)
+    return jax.lax.top_k(s, n)
+
+
+# --------------------------------------------------------------------- #
+# compress: the decode-free block-scoring contract
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", ALL_CODECS)
+def test_decode_row_block_bitwise(codec):
+    cfg, q, wire = _wire(codec, 157, 25)
+    full = decode(cfg, wire, 25)
+    for start, size in ((0, 64), (64, 64), (128, 29), (37, 100)):
+        blk = decode_row_block(cfg, wire, 25, start, size)
+        assert blk.shape == (size, 25)
+        np.testing.assert_array_equal(np.asarray(blk),
+                                      np.asarray(full[start:start + size]))
+
+
+def test_slice_rows_slices_every_leaf():
+    cfg, q, wire = _wire("topk", 64, 24)
+    part = slice_rows(wire, 16, 8)
+    for leaf, full in zip(jax.tree.leaves(part), jax.tree.leaves(wire)):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(full[16:24]))
+
+
+def test_wire_resident_bytes_orders_codecs():
+    sizes = {}
+    for codec in KERNEL_CODECS:
+        _, _, wire = _wire(codec, 256, 24)
+        sizes[codec] = wire_resident_bytes(wire)
+    assert sizes["fp32"] > sizes["fp16"] > sizes["int8"] > sizes["int4"]
+    assert sizes["fp32"] == 256 * 24 * 4
+
+
+# --------------------------------------------------------------------- #
+# chunked ref vs the naive dense path: bit-exact for EVERY codec
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", ALL_CODECS)
+@pytest.mark.parametrize("block_m", [64, 300, 1000])
+def test_wire_topn_ref_bit_exact(codec, block_m):
+    cfg, q, wire = _wire(codec, 700, 25, seed=1)
+    p = jnp.asarray(RNG.standard_normal((9, 25)), jnp.float32)
+    mask = jnp.asarray((RNG.random((9, 700)) < 0.1).astype(np.float32))
+    for m_ in (None, mask):
+        want_v, want_i = _dense_topn(cfg, wire, p, 25, 10, m_)
+        got_v, got_i = ref.wire_topn_ref(cfg, wire, p, 25, 10,
+                                         train_mask=m_, block_m=block_m)
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+# --------------------------------------------------------------------- #
+# Pallas kernels (interpret mode) vs ref: bit-exact, fp32/fp16/int8;
+# int4 is also exact in interpret mode (documented-ulp on real TPUs)
+# --------------------------------------------------------------------- #
+def _kernel_topn(codec, wire, p, k, n, mask, block_m):
+    if codec in ("fp32", "fp16"):
+        return ps_mod.dense_topn(p, wire.values, n, mask,
+                                 block_m=block_m, interpret=True)
+    if codec == "int8":
+        return ps_mod.quant_topn(p, wire.values, wire.scales, n, mask,
+                                 block_m=block_m, interpret=True)
+    return ps_mod.quant4_topn(p, wire.values, wire.scales, k, n, mask,
+                              block_m=block_m, interpret=True)
+
+
+@pytest.mark.parametrize("codec", KERNEL_CODECS)
+@pytest.mark.parametrize("m,block_m", [(512, 128), (700, 256), (97, 128)])
+def test_payload_score_kernel_matches_ref(codec, m, block_m):
+    cfg, q, wire = _wire(codec, m, 25, seed=2)
+    p = jnp.asarray(RNG.standard_normal((7, 25)), jnp.float32)
+    mask = jnp.asarray((RNG.random((7, m)) < 0.15).astype(np.float32))
+    for m_ in (None, mask):
+        want_v, want_i = ref.wire_topn_ref(cfg, wire, p, 25, 10,
+                                           train_mask=m_, block_m=block_m)
+        got_v, got_i = _kernel_topn(codec, wire, p, 25, 10, m_, block_m)
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_topn_tie_break_is_lowest_index_first():
+    # constant scores: every item ties, top-N must be ids 0..N-1 in order —
+    # lax.top_k's documented stable rule, reproduced by the kernel merge
+    q = jnp.ones((90, 8), jnp.float32)
+    p = jnp.ones((4, 8), jnp.float32)
+    v, i = ps_mod.dense_topn(p, q, 6, block_m=32, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(i), np.tile(np.arange(6), (4, 1)))
+    # ties split across block boundaries resolve identically at any block
+    v2, i2 = ps_mod.dense_topn(p, q, 6, block_m=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i2))
+
+
+def test_train_mask_excludes_interacted_items():
+    cfg, q, wire = _wire("int8", 200, 16, seed=3)
+    p = jnp.asarray(RNG.standard_normal((5, 16)), jnp.float32)
+    mask = np.zeros((5, 200), np.float32)
+    banned = RNG.choice(200, size=(5, 40), replace=False)
+    for u in range(5):
+        mask[u, banned[u]] = 1.0
+    _, idx = ps_mod.quant_topn(p, wire.values, wire.scales, 10,
+                               jnp.asarray(mask), block_m=64, interpret=True)
+    idx = np.asarray(idx)
+    for u in range(5):
+        assert not set(idx[u]) & set(banned[u]), "masked item recommended"
+
+
+def test_mask_beats_padding_degenerate_all_masked():
+    # every item masked: results fall back to the NEG_INF-sentinel ranking
+    # (ties -> lowest ids), identical to the dense oracle's behaviour
+    cfg, q, wire = _wire("fp32", 70, 8, seed=4)
+    p = jnp.asarray(RNG.standard_normal((3, 8)), jnp.float32)
+    mask = jnp.ones((3, 70), jnp.float32)
+    want_v, want_i = _dense_topn(cfg, wire, p, 8, 5, mask)
+    got_v, got_i = ps_mod.dense_topn(p, wire.values, 5, mask,
+                                     block_m=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+# --------------------------------------------------------------------- #
+# ops dispatch + chunked eval bit-parity
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", ALL_CODECS)
+def test_ops_wire_topn_dispatch(codec):
+    from repro.kernels import wire_topn
+
+    cfg, q, wire = _wire(codec, 300, 25, seed=5)
+    p = jnp.asarray(RNG.standard_normal((4, 25)), jnp.float32)
+    want_v, want_i = _dense_topn(cfg, wire, p, 25, 10)
+    got_v, got_i = wire_topn(cfg, wire, p, 25, 10, block_m=128)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_evaluate_users_item_chunk_bit_parity():
+    from repro.cf.metrics import evaluate_users
+
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((230, 12)), jnp.float32)
+    train = jnp.asarray((rng.random((40, 230)) < 0.2).astype(np.float32))
+    test = jnp.asarray((rng.random((40, 230)) < 0.05).astype(np.float32))
+    dense = evaluate_users(q, train, test)
+    for chunk in (64, 128, 512):
+        chunked = evaluate_users(q, train, test, item_chunk=chunk)
+        for k in ("precision", "recall", "f1", "map"):
+            assert float(getattr(dense, k)) == float(getattr(chunked, k)), \
+                f"{k} diverged at item_chunk={chunk}"
+
+
+def test_simulation_eval_reroute_matches_dense():
+    from dataclasses import replace
+
+    from repro.data.synthetic import load_dataset
+    from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+    spec, train, test = load_dataset("movielens-mini", seed=0)
+    base = FLSimConfig(rounds=10, eval_every=5, theta=30, eval_users=48,
+                       seed=0)
+    res_dense = run_fcf_simulation(train, test, base)
+    res_fused = run_fcf_simulation(
+        train, test, replace(base, eval_user_chunk=16, eval_item_chunk=100))
+    for k in ("precision", "recall", "f1", "map"):
+        # rankings are identical (see the bit-parity test above); the only
+        # slack is user-chunked mean accumulation order, ~1e-10 — a real
+        # top-10 swap would move these by >= 1e-3
+        assert res_dense.final[k] == pytest.approx(res_fused.final[k],
+                                                   abs=1e-8), k
+
+
+# --------------------------------------------------------------------- #
+# serving model + engine
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", KERNEL_CODECS)
+def test_install_rows_equals_reencode(codec):
+    from repro.serve import ServingModel
+
+    cfg = CodecConfig(name=codec)
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.standard_normal((120, 17)), jnp.float32)
+    rows = jnp.asarray(rng.standard_normal((9, 17)), jnp.float32)
+    idx = jnp.asarray(rng.choice(120, size=9, replace=False), jnp.int32)
+
+    model = ServingModel.from_dense(cfg, q)
+    patched = model.install_rows(idx, encode(model.cfg, rows))
+    want = ServingModel.from_dense(cfg, q.at[idx].set(rows))
+    for a, b in zip(jax.tree.leaves(patched.wire),
+                    jax.tree.leaves(want.wire)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert patched.version == model.version + 1
+
+
+def test_snapshot_install_from_async_ring_no_fp32_roundtrip():
+    """End to end: async training publishes encoded ring snapshots into the
+    engine; the installed rows are the ring's wire bits verbatim (never a
+    decoded fp32 Q*), and they match the server's own Q on those rows after
+    its own decode — the shared-wire-format contract."""
+    from repro.cf.server import latest_snapshot
+    from repro.data.synthetic import load_dataset
+    from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+    from repro.serve import ServingEngine, ServingModel
+
+    spec, train, test = load_dataset("movielens-mini", seed=0)
+    m = train.shape[1]
+    engine = ServingEngine(
+        ServingModel.from_dense(CodecConfig(name="int8"),
+                                jnp.zeros((m, 25), jnp.float32)),
+        buckets=(4,), top_n=5, block_m=128)
+    cfg = FLSimConfig(rounds=6, eval_every=3, theta=32, backend="async",
+                      max_staleness=2, codec="int8", eval_users=32, seed=0,
+                      snapshot_hook=engine.publisher())
+    result = run_fcf_simulation(train, test, cfg)
+
+    stats = engine.stats()
+    assert stats.installs == 2 and stats.version >= 2
+    # the wire never left int8: codes int8, scales f32, nothing else
+    leaves = jax.tree.leaves(engine.model.wire)
+    assert sorted(str(a.dtype) for a in leaves) == ["float32", "int8"]
+
+    # installed rows == the ring's freshest wire image, bit for bit
+    snap = latest_snapshot(result.server_state)
+    got = jax.tree.map(lambda leaf: leaf[np.asarray(snap.indices)],
+                       engine.model.wire)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(snap.wire)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # and a recommendation comes back well-formed off that model
+    p = jnp.asarray(np.random.default_rng(3).standard_normal((3, 25)),
+                    jnp.float32)
+    vals, idx = engine.recommend(p)
+    assert vals.shape == (3, 5) and idx.shape == (3, 5)
+    assert np.all(np.diff(np.asarray(vals), axis=1) <= 0)   # sorted
+
+
+def test_engine_swap_atomicity_under_concurrent_reads():
+    """Readers racing a publisher must each see ONE model end to end:
+    every result is consistent with some published version, and versions
+    advance monotonically."""
+    from repro.serve import ServingEngine, ServingModel
+
+    cfg = CodecConfig(name="int8")
+    rng = np.random.default_rng(17)
+    tables = [jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+              for _ in range(8)]
+    models = [ServingModel.from_dense(cfg, t, version=i)
+              for i, t in enumerate(tables)]
+    engine = ServingEngine(models[0], buckets=(4,), top_n=3, block_m=32)
+    p = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    # expected results under each version, computed single-threaded
+    expected = {m.version: np.asarray(m.topn(p, 3, block_m=32)[1])
+                for m in models}
+
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            model = engine.model            # the same view recommend() takes
+            got = np.asarray(engine.recommend(p)[1])
+            want = expected[engine.model.version]
+            # got must equal SOME published version's result (no torn mix)
+            if not any(np.array_equal(got, e) for e in expected.values()):
+                errors.append("result matches no published model")
+        del model, want
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    seen_versions = [engine.stats().version]
+    for m in models[1:]:
+        engine.swap(m)
+        seen_versions.append(engine.stats().version)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    assert seen_versions == sorted(seen_versions)
+    assert engine.stats().installs == len(models) - 1
+
+
+def test_engine_bucket_padding_and_chunking():
+    from repro.serve import ServingEngine, ServingModel
+
+    cfg = CodecConfig(name="fp16")
+    q = jnp.asarray(RNG.standard_normal((150, 10)), jnp.float32)
+    model = ServingModel.from_dense(cfg, q)
+    engine = ServingEngine(model, buckets=(4, 16), top_n=4, block_m=64)
+    for b in (1, 3, 4, 9, 16, 37):      # pad-up and chunk-over cases
+        p = jnp.asarray(RNG.standard_normal((b, 10)), jnp.float32)
+        v, i = engine.recommend(p)
+        assert v.shape == (b, 4) and i.shape == (b, 4)
+        want_v, want_i = model.topn(p, 4, block_m=64)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(want_i))
+
+
+# --------------------------------------------------------------------- #
+# examples stay under the dry-run smoke suite
+# --------------------------------------------------------------------- #
+def test_example_serve_recs_dry_run(capsys):
+    import pathlib
+    import sys
+
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(repo / "examples"))
+    try:
+        import serve_recs as example
+        out = example.main(["--dry-run"])
+    finally:
+        sys.path.pop(0)
+        sys.modules.pop("serve_recs", None)
+    assert out["users_per_sec"] > 0
+    assert out["model_version"] >= 2          # snapshots actually published
+    assert "users/s" in capsys.readouterr().out
