@@ -77,6 +77,10 @@ BENCH_CONTEXT_KEYS = ("scale", "dataset")
 BENCH_RATE_SUFFIX = "per_sec"
 # bytes_per_round dicts must price both wire directions (extras allowed)
 BENCH_BYTES_KEYS = ("down", "up")
+# cum_regret series (telemetry-derived) must be cumulative: finite,
+# non-negative and non-decreasing — anything else means the traced regret
+# port diverged from core/regret.RegretTracker
+BENCH_REGRET_KEY = "cum_regret"
 
 
 def validate_bench_artifact(obj: Any, name: str = "artifact") -> List[str]:
@@ -91,6 +95,9 @@ def validate_bench_artifact(obj: Any, name: str = "artifact") -> List[str]:
         number (a zero/NaN rate means a benchmark silently broke),
       * every ``bytes_per_round`` is a dict pricing both wire directions
         with positive integers (:func:`per_round_payload_bytes`'s shape),
+      * every ``cum_regret`` list is a cumulative series: finite,
+        non-negative, non-decreasing numbers (the telemetry-derived regret
+        sections written by benchmarks/round_engine.py),
       * at least one rate figure exists (an artifact with no measurements
         is not a benchmark result).
 
@@ -130,6 +137,19 @@ def validate_bench_artifact(obj: Any, name: str = "artifact") -> List[str]:
                             errors.append(
                                 f"{name}: {here}[{d!r}] must be a positive "
                                 f"int byte count, got {b!r}")
+                elif key == BENCH_REGRET_KEY and isinstance(val, list):
+                    bad = [v for v in val
+                           if not isinstance(v, (int, float))
+                           or isinstance(v, bool)
+                           or not math.isfinite(v) or v < 0]
+                    if bad:
+                        errors.append(
+                            f"{name}: {here} must hold finite non-negative "
+                            f"numbers, got {bad[:3]!r}")
+                    elif any(b < a for a, b in zip(val, val[1:])):
+                        errors.append(
+                            f"{name}: {here} must be non-decreasing "
+                            "(cumulative regret cannot shrink)")
                 else:
                     walk(val, here)
         elif isinstance(node, list):

@@ -22,9 +22,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (async_cohorts, convergence, fcf_experiments,
-                            kernel_bench, payload_compression, payload_table,
-                            reduction_sweep, roofline, serving,
-                            sharded_rounds, table4)
+                            kernel_bench, obs_overhead, payload_compression,
+                            payload_table, reduction_sweep, roofline,
+                            serving, sharded_rounds, table4)
 
     t0 = time.time()
     print("=" * 72)
@@ -42,6 +42,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         sharded_rounds.main(["--dry-run"])
         async_cohorts.main(["--dry-run"])
         serving.main(["--dry-run"])
+        obs_overhead.main(["--dry-run"])
         roofline.main(["--dry-run"])
         print(f"\n[dry-run] all sections smoke-checked in "
               f"{time.time() - t0:.1f}s")
@@ -80,6 +81,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     else:
         serving.run(item_scales=(8192,), batches=(8, 64), iters=5,
                     out_path=None)
+
+    # in-loop telemetry cost: enabled-vs-disabled scan engine throughput
+    obs_overhead.run(quick=not args.full)
 
     roofline.run(mesh="pod16x16")
     roofline.run(mesh="pod2x16x16")

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compress import CodecConfig
+from repro.obs import LatencyHistogram
 from repro.serve import ServingModel
 
 from benchmarks.common import markdown_table
@@ -98,11 +99,14 @@ def _measure_cell(kind: str, fn, b: int, m: int, resident: int,
     lat = _time_call(fn, p, iters=iters)
     med = float(np.median(lat))
     scratch = _scratch_bytes(kind, b, m, block_m)
+    # one quantile definition repo-wide: same obs.hist bucketing as the
+    # ServingEngine /metrics histograms and the serve_recs summary
+    hist = LatencyHistogram.from_values(lat)
     return {
         "path": kind, "batch": b,
         "users_per_sec": b / med,
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "p50_ms": hist.quantile(0.50) * 1e3,
+        "p99_ms": hist.quantile(0.99) * 1e3,
         "resident_model_bytes": resident,
         "request_scratch_bytes": scratch,
         "peak_serving_bytes": resident + scratch,

@@ -9,6 +9,16 @@ image. Prints users/sec, p50/p99 latency, and resident model bytes.
   PYTHONPATH=src python examples/serve_recs.py
   PYTHONPATH=src python examples/serve_recs.py --codec int4 --batch 64
 
+Observability (repro.obs): ``--obs-out DIR`` streams per-round training
+telemetry + host spans to JSONL and writes a final Prometheus scrape;
+``--metrics-port 0`` serves live ``/metrics`` (latency histograms, model
+version, snapshot age). p50/p99 here use the same obs.hist quantile math
+as the engine endpoint and benchmarks/serving.py.
+
+  PYTHONPATH=src python examples/serve_recs.py --obs-out /tmp/obs \
+      --metrics-port 9100 --serve-forever
+  PYTHONPATH=src python -m repro.obs.check /tmp/obs
+
 The LLM decode counterpart (KV-cache serving of the model zoo) lives in
 examples/serve_batch.py.
 """

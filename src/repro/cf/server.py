@@ -44,10 +44,11 @@ from repro.compress import (
 from repro.core.payload import PayloadSelector
 from repro.core.selector import (
     AsyncSelectorState, SelectorConfig, SelectorState, async_selector_init,
-    pending_lookup, pending_record, selector_init, selector_observe,
-    selector_select,
+    pending_lookup, pending_record, pull_stats, selector_init,
+    selector_observe, selector_select,
 )
 from repro.kernels import ops
+from repro.obs.telemetry import RoundTelemetry
 from repro.utils.compat import optimization_barrier
 from repro.optim.adam import (
     AdamConfig, AdamState, adam_init, adam_update_rows,
@@ -110,6 +111,11 @@ class RoundAux(NamedTuple):
 
     indices: jax.Array      # (M_s,) selected arms
     rewards: jax.Array      # (M_s,) bandit rewards (zeros for non-learners)
+    # RoundTelemetry when the step is built with telemetry=True, else the
+    # empty pytree — the default keeps the pytree structure (and therefore
+    # every compiled program and shard out_spec) identical to a build
+    # without the obs layer
+    telemetry: Any = ()
 
 
 class ShardContext(NamedTuple):
@@ -316,8 +322,15 @@ def server_round_step(
     codec_cfg: CodecConfig = CodecConfig(),
     num_users: Optional[int] = None,
     shard: Optional[ShardContext] = None,
+    telemetry: bool = False,
 ) -> Tuple[ServerState, RoundAux]:
     """One fused FL round (Alg. 1 lines 8-19) as a pure function.
+
+    ``telemetry`` (static) additionally surfaces a :class:`RoundTelemetry`
+    of traced in-step scalars on ``RoundAux.telemetry`` — wire bytes,
+    gradient/update norms, arm-pull coverage, and (under ``shard_map``) the
+    psum-reduced per-round collective bytes. The default ``False`` adds no
+    ops at all: the obs layer's disabled-path bit-parity contract.
 
     The cohort of B users stands in for the asynchronous arrival of exactly
     Theta federated updates that triggers a global commit; the server only
@@ -387,9 +400,10 @@ def server_round_step(
     bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
 
     # lines 11-18: cohort solve, uplink, Adam commit, reward feedback
-    q_new, opt, sel, codec_state, rewards, num_users = _commit_against(
+    q_new, opt, sel, codec_state, rewards, num_users, stats = _commit_against(
         state, sel, idx, q_star, cohort_x, sel_cfg=sel_cfg, config=config,
-        cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users, shard=shard)
+        cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users, shard=shard,
+        want_stats=telemetry)
     bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
 
     new_state = ServerState(
@@ -397,7 +411,59 @@ def server_round_step(
         bytes_down=bytes_down, bytes_up=bytes_up, codec=codec_state,
         snapshots=state.snapshots,
     )
-    return new_state, RoundAux(indices=idx, rewards=rewards)
+    aux_tel: Any = ()
+    if telemetry:
+        aux_tel = _round_telemetry(
+            new_state, sel_cfg, down_cfg, up_cfg, m_s, kdim, num_users,
+            shard, stats,
+            staleness=jnp.zeros((), jnp.float32),
+            step_weight=jnp.ones((), jnp.float32))
+    return new_state, RoundAux(indices=idx, rewards=rewards,
+                               telemetry=aux_tel)
+
+
+def _round_telemetry(
+    new_state: ServerState,
+    sel_cfg: SelectorConfig,
+    down_cfg: CodecConfig,
+    up_cfg: CodecConfig,
+    m_s: int,
+    kdim: int,
+    num_users,
+    shard: Optional[ShardContext],
+    stats,
+    *,
+    staleness: jax.Array,
+    step_weight: jax.Array,
+) -> RoundTelemetry:
+    """Assemble one round's :class:`RoundTelemetry` (telemetry=True only).
+
+    ``collective_bytes`` prices what each shard puts on the interconnect
+    per round — its encoded Q* candidate block plus its fp32 partial
+    gradient block, both (M_s,)-sized — psum-reduced over the mesh axis so
+    every shard reports the same mesh-total. 0 off-mesh.
+    """
+    if shard is None:
+        collective = jnp.zeros((), jnp.float32)
+    else:
+        per_shard = jnp.float32(
+            wire_bytes(down_cfg, m_s, kdim) + m_s * kdim * 4)
+        collective = jax.lax.psum(per_shard, shard.axis)
+    arms_explored, pull_max = pull_stats(sel_cfg, new_state.sel)
+    grad_norm, update_norm = stats
+    return RoundTelemetry(
+        t=new_state.t,
+        staleness=jnp.asarray(staleness, jnp.float32),
+        step_weight=jnp.asarray(step_weight, jnp.float32),
+        bytes_down=jnp.float32(wire_bytes(down_cfg, m_s, kdim)),
+        bytes_up=jnp.float32(wire_bytes(up_cfg, m_s, kdim))
+        * jnp.asarray(num_users, jnp.float32),
+        collective_bytes=collective,
+        grad_norm=grad_norm,
+        update_norm=update_norm,
+        arms_explored=arms_explored,
+        pull_max=pull_max,
+    )
 
 
 def _commit_against(
@@ -415,6 +481,7 @@ def _commit_against(
     shard: Optional[ShardContext],
     t_obs: Optional[jax.Array] = None,
     step_weight: Optional[jax.Array] = None,
+    want_stats: bool = False,
 ):
     """Alg. 1 lines 11-18 against a given (idx, Q*) pair — the commit core.
 
@@ -422,7 +489,11 @@ def _commit_against(
     passes the snapshot it just published (``t_obs=None``, no step weight);
     the async step passes a *stale* snapshot popped from the ring plus its
     pull round (delay-corrected reward) and the staleness discount for the
-    Adam step. Returns ``(q, opt, sel, codec_state, rewards, num_users)``.
+    Adam step. Returns ``(q, opt, sel, codec_state, rewards, num_users,
+    stats)`` with ``stats`` a traced ``(grad_norm, update_norm)`` pair when
+    ``want_stats`` (telemetry) is on and ``None`` otherwise — the extra
+    row gathers behind the norms are only ever traced when requested, so
+    the default program is unchanged.
     """
     row_ops = ops.default_row_ops() if shard is None else shard_row_ops(shard)
     kdim = state.q.shape[1]
@@ -483,7 +554,11 @@ def _commit_against(
             grads_hat - 2.0 * config.l2 * num_users * q_star)
     sel, rewards = selector_observe(sel_cfg, sel, idx, feedback,
                                     row_ops=row_ops, t_obs=t_obs)
-    return q_new, opt, sel, codec_state, rewards, num_users
+    stats = None
+    if want_stats:
+        delta = row_ops.gather(q_new, idx) - row_ops.gather(state.q, idx)
+        stats = (jnp.linalg.norm(grads_hat), jnp.linalg.norm(delta))
+    return q_new, opt, sel, codec_state, rewards, num_users, stats
 
 
 def server_round_step_async(
@@ -497,8 +572,13 @@ def server_round_step_async(
     codec_cfg: CodecConfig = CodecConfig(),
     num_users: Optional[int] = None,
     shard: Optional[ShardContext] = None,
+    telemetry: bool = False,
 ) -> Tuple[ServerState, RoundAux]:
     """One staleness-bounded ASYNC round: publish fresh, commit stale.
+
+    ``telemetry`` (static) mirrors :func:`server_round_step`'s flag; the
+    async telemetry additionally reports this commit's snapshot age and
+    the ``staleness_discount ** s`` step weight it applied.
 
     The paper's deployment model has users reporting back asynchronously;
     this step simulates it with the cohort block as the async unit. Each
@@ -573,10 +653,12 @@ def server_round_step_async(
         (m_s,),
         jnp.power(jnp.float32(config.staleness_discount),
                   s.astype(jnp.float32)))
-    q_new, opt, inner, codec_state, rewards, num_users = _commit_against(
-        state, inner, idx_s, q_star, cohort_x, sel_cfg=sel_cfg,
-        config=config, cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users,
-        shard=shard, t_obs=t_s, step_weight=step_weight)
+    q_new, opt, inner, codec_state, rewards, num_users, stats = \
+        _commit_against(
+            state, inner, idx_s, q_star, cohort_x, sel_cfg=sel_cfg,
+            config=config, cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users,
+            shard=shard, t_obs=t_s, step_weight=step_weight,
+            want_stats=telemetry)
     bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
 
     new_state = state._replace(
@@ -585,7 +667,14 @@ def server_round_step_async(
         key=key, t=t_now, bytes_down=bytes_down, bytes_up=bytes_up,
         codec=codec_state, snapshots=ring,
     )
-    return new_state, RoundAux(indices=idx_s, rewards=rewards)
+    aux_tel: Any = ()
+    if telemetry:
+        aux_tel = _round_telemetry(
+            new_state, sel_cfg, down_cfg, up_cfg, m_s, kdim, num_users,
+            shard, stats,
+            staleness=s.astype(jnp.float32), step_weight=step_weight[0])
+    return new_state, RoundAux(indices=idx_s, rewards=rewards,
+                               telemetry=aux_tel)
 
 
 # ===================================================================== #

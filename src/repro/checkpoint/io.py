@@ -15,6 +15,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs.trace import span
+
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
 
@@ -38,28 +40,29 @@ def _path_str(entry) -> str:
 
 
 def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
-    os.makedirs(directory, exist_ok=True)
-    flat = _flatten(tree)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    # np.savez appends '.npz' to bare paths; keep the suffix so the atomic
-    # rename moves the file actually written.
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
-    os.close(fd)
-    try:
-        with open(tmp, "wb") as f:
-            np.savez(f, **flat)
-        os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    _prune(directory, keep)
+    with span("checkpoint_save", step=step):
+        os.makedirs(directory, exist_ok=True)
+        flat = _flatten(tree)
+        path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+        # np.savez appends '.npz' to bare paths; keep the suffix so the
+        # atomic rename moves the file actually written.
+        fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+        os.close(fd)
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        _prune(directory, keep)
     return path
 
 
 def load_checkpoint(path: str, like: Any = None) -> Any:
     """Load. With ``like`` (a pytree template), restores the exact structure;
     without, returns the flat {key: array} dict."""
-    with np.load(path) as data:
+    with span("checkpoint_load"), np.load(path) as data:
         flat = {k: data[k] for k in data.files}
     if like is None:
         return flat

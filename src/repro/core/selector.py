@@ -292,3 +292,18 @@ def selector_counts(cfg: SelectorConfig, state: SelectorState) -> jax.Array:
         return state.counts
     return jnp.full(
         (cfg.num_arms,), state.t.astype(jnp.float32), jnp.float32)
+
+
+def pull_stats(cfg: SelectorConfig,
+               state: SelectorState) -> Tuple[jax.Array, jax.Array]:
+    """Traced arm-pull coverage: ``(arms_explored, pull_max)`` scalars.
+
+    ``arms_explored`` counts arms transmitted at least once, ``pull_max``
+    is the hottest arm's transmission count — the per-strategy pull-count
+    aggregates the round-telemetry stream emits. Built on
+    :func:`selector_counts`, whose (M,) vectors stay replicated under the
+    sharded engine, so these reductions are shard-safe as-is.
+    """
+    counts = selector_counts(cfg, state)
+    return (jnp.sum(counts > 0).astype(jnp.float32),
+            jnp.max(counts).astype(jnp.float32))

@@ -66,6 +66,11 @@ from repro.compress import (
 from repro.core.selector import (
     STRATEGIES, SelectorConfig, selector_counts,
 )
+from repro.obs.config import ObsConfig
+from repro.obs.telemetry import (
+    make_row_emitter, telemetry_round, telemetry_state_init,
+)
+from repro.obs.trace import install_tracer, span
 from repro.optim.adam import AdamConfig
 from repro.utils.logging import MetricLogger, get_logger
 
@@ -144,6 +149,12 @@ class FLSimConfig:
     # (backend="async") — or an encoded full table otherwise — as the live
     # serving model without ever round-tripping through a dense fp32 Q.
     snapshot_hook: Optional[Callable[[int, ServerState], None]] = None
+    # observability (repro.obs.ObsConfig): in-loop round telemetry streamed
+    # through a batched io_callback, host span tracing, optional profiler
+    # hook. None or enabled=False adds ZERO ops — trajectories stay
+    # bit-identical (tests/test_obs.py). Single-run engines only; the
+    # vmapped sweeps reject an enabled config.
+    obs: Optional[ObsConfig] = None
     seed: int = 0
 
 
@@ -227,6 +238,8 @@ def _build(train_j: jax.Array, test_j: jax.Array,
     if is_async and config.blocks_per_commit < 1:
         raise ValueError(
             f"blocks_per_commit must be >= 1, got {config.blocks_per_commit}")
+    if config.obs is not None:
+        config.obs.validate()
     if is_async and config.mesh_shards is not None \
             and config.blocks_per_commit not in (1, config.mesh_shards):
         raise ValueError(
@@ -347,7 +360,7 @@ def _pad_cohort(cohort: jax.Array, shards: int) -> jax.Array:
 
 
 def _make_round_fn(train_j: jax.Array, setup: _SimSetup,
-                   cohort_shards: int = 1):
+                   cohort_shards: int = 1, telemetry: bool = False):
     """(state, cohort_ids (B,)) -> (state, RoundAux): one fused FL round."""
     sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
 
@@ -357,12 +370,14 @@ def _make_round_fn(train_j: jax.Array, setup: _SimSetup,
         cohort_x = _blocked_cohort_x(train_j, ids, cohort_shards, num_users)
         return server_round_step(
             state, cohort_x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
-            codec_cfg=setup.codec_cfg, num_users=num_users)
+            codec_cfg=setup.codec_cfg, num_users=num_users,
+            telemetry=telemetry)
 
     return round_fn
 
 
-def _make_async_round_fn(train_j: jax.Array, setup: _SimSetup, blocks: int):
+def _make_async_round_fn(train_j: jax.Array, setup: _SimSetup, blocks: int,
+                         telemetry: bool = False):
     """(state, cohort (B,), staleness ()) -> (state, aux): one async round."""
     sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
 
@@ -373,13 +388,15 @@ def _make_async_round_fn(train_j: jax.Array, setup: _SimSetup, blocks: int):
         cohort_x = _blocked_cohort_x(train_j, ids, blocks, num_users)
         return server_round_step_async(
             state, cohort_x, staleness, sel_cfg=sel_cfg, config=srv_cfg,
-            cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg, num_users=num_users)
+            cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg, num_users=num_users,
+            telemetry=telemetry)
 
     return round_fn
 
 
 def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
-                              config: FLSimConfig, record: bool = False):
+                              config: FLSimConfig, record: bool = False,
+                              obs: Optional[ObsConfig] = None):
     """Compile the FL round scan as a ``shard_map`` program over a device mesh.
 
     Returns ``(run_chunk, state0)``: ``run_chunk(state, cohorts (R, B) np)``
@@ -399,6 +416,14 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
     ``run_chunk(state, cohorts, staleness)`` takes the schedule slice —
     a stale block is just a block solved against an older Q*, so the
     collective schedule is exactly the synchronous one.
+
+    ``obs`` (an *enabled* :class:`ObsConfig`) additionally threads the
+    replicated telemetry aggregates through the scan carry and returns the
+    per-round telemetry rows from the compiled program; ``run_chunk``
+    emits them host-side after each chunk (the rows come back replicated,
+    so the host emission is mesh-safe without putting an ``io_callback``
+    inside ``shard_map``). ``obs=None`` leaves the original programs
+    byte-for-byte untouched.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -423,6 +448,7 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
     state0 = jax.device_put(setup.state0, to_shardings(mesh, state_specs))
     is_async = config.backend == "async"
     aux_specs = RoundAux(indices=P(), rewards=P()) if record else None
+    telemetry = obs is not None
 
     def _local_cohort_x(ids, didx, train_rep):
         def cohort_x(idx):
@@ -432,6 +458,89 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
                 x = x * (pos < b_total).astype(x.dtype)[:, None]
             return x[None]                                   # (1, b, M_s)
         return cohort_x
+
+    if telemetry:
+        # telemetry variants: the replicated TelemetryState rides the scan
+        # carry, every round's packed row is a replicated (15,) ys output.
+        # The non-telemetry programs below stay byte-for-byte untouched —
+        # that, not cleverness, is what makes the disabled-path bit-parity
+        # contract trivially true for the sharded engine too.
+        tel0 = telemetry_state_init(sel_cfg.num_arms)
+        tel_specs = jax.tree.map(lambda _: P(), tel0)
+        emitter = make_row_emitter(obs.resolve_sink(), obs.telemetry_every)
+
+        if is_async:
+            def chunk(state, tel, cohorts_blk, stale, train_rep):
+                def body(carry, xs):
+                    st, ts = carry
+                    cohort_l, s_t = xs
+                    cohort_x = _local_cohort_x(
+                        cohort_l.reshape(-1), jax.lax.axis_index("data"),
+                        train_rep)
+                    st, aux = server_round_step_async(
+                        st, cohort_x, s_t, sel_cfg=sel_cfg, config=srv_cfg,
+                        cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg,
+                        num_users=b_total, shard=shard_ctx, telemetry=True)
+                    ts, row = telemetry_round(
+                        ts, aux.telemetry, aux.indices, aux.rewards)
+                    ys = aux._replace(telemetry=()) if record else None
+                    return (st, ts), (ys, row)
+
+                (state, tel), (ys, rows) = jax.lax.scan(
+                    body, (state, tel), (cohorts_blk, stale))
+                return state, tel, ys, rows
+
+            run = jax.jit(shard_map(
+                chunk, mesh=mesh,
+                in_specs=(state_specs, tel_specs,
+                          P(None, "data", None), P(), P()),
+                out_specs=(state_specs, tel_specs, aux_specs, P()),
+                check_vma=False))
+        else:
+            def chunk(state, tel, cohorts_blk, train_rep):
+                def body(carry, cohort_l):
+                    st, ts = carry
+                    cohort_x = _local_cohort_x(
+                        cohort_l.reshape(-1), jax.lax.axis_index("data"),
+                        train_rep)
+                    st, aux = server_round_step(
+                        st, cohort_x, sel_cfg=sel_cfg, config=srv_cfg,
+                        cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg,
+                        num_users=b_total, shard=shard_ctx, telemetry=True)
+                    ts, row = telemetry_round(
+                        ts, aux.telemetry, aux.indices, aux.rewards)
+                    ys = aux._replace(telemetry=()) if record else None
+                    return (st, ts), (ys, row)
+
+                (state, tel), (ys, rows) = jax.lax.scan(
+                    body, (state, tel), cohorts_blk)
+                return state, tel, ys, rows
+
+            run = jax.jit(shard_map(
+                chunk, mesh=mesh,
+                in_specs=(state_specs, tel_specs, P(None, "data", None), P()),
+                out_specs=(state_specs, tel_specs, aux_specs, P()),
+                check_vma=False))
+
+        tel_holder = [jax.device_put(tel0, to_shardings(mesh, tel_specs))]
+
+        def run_chunk(state, cohorts, staleness=None):
+            cohorts = np.asarray(cohorts)
+            r = cohorts.shape[0]
+            ids = np.pad(cohorts, ((0, 0), (0, d * b - b_total)))
+            blocked = jnp.asarray(ids.reshape(r, d, b).astype(np.int32))
+            if is_async:
+                stale = jnp.asarray(np.asarray(staleness), jnp.int32)
+                state, tel, ys, rows = run(
+                    state, tel_holder[0], blocked, stale, train_j)
+            else:
+                state, tel, ys, rows = run(
+                    state, tel_holder[0], blocked, train_j)
+            tel_holder[0] = tel
+            emitter(np.asarray(rows))
+            return state, ys
+
+        return run_chunk, state0
 
     if is_async:
         def chunk(state, cohorts_blk, stale, train_rep):
@@ -571,81 +680,194 @@ def run_fcf_simulation(
     config: FLSimConfig,
     csv_path: Optional[str] = None,
 ) -> SimResult:
-    """Run one FL simulation with the backend named by ``config.backend``."""
+    """Run one FL simulation with the backend named by ``config.backend``.
+
+    With an enabled ``config.obs``, every committed round's telemetry
+    (:mod:`repro.obs.telemetry`) streams to the configured sink: the scan
+    engines emit one batched ``io_callback`` per compiled chunk, the
+    sharded engine returns the replicated rows and emits host-side, the
+    python engine emits per round. Host spans (train_chunk / eval /
+    publish) go to ``obs.trace_path`` when set, and ``obs.profile_dir``
+    wraps the whole training loop in ``jax.profiler.trace``. Disabled or
+    absent, none of this exists in the compiled programs.
+    """
     train_j = jnp.asarray(train_x, jnp.float32)
     test_j = jnp.asarray(test_x, jnp.float32)
     setup = _build(train_j, test_j, config)
     record = config.record_selections
+    obs = config.obs if (config.obs is not None
+                         and config.obs.enabled) else None
+    prev_tracer = None
+    if obs is not None and obs.resolve_tracer() is not None:
+        prev_tracer = install_tracer(obs.resolve_tracer())
+    try:
+        return _run_single(train_j, setup, config, record, obs, csv_path)
+    finally:
+        if obs is not None:
+            try:
+                jax.effects_barrier()   # drain pending telemetry callbacks
+            except Exception:
+                pass
+            if obs.resolve_tracer() is not None:
+                install_tracer(prev_tracer)
+
+
+def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
+    from jax.experimental import io_callback
 
     history = MetricLogger(csv_path)
     state = setup.state0
     aux_chunks: List = []
+    emitter = None
+    tel_holder = None
+    if obs is not None:
+        emitter = make_row_emitter(obs.resolve_sink(), obs.telemetry_every)
+        tel_holder = [telemetry_state_init(setup.sel_cfg.num_arms)]
+    profiler = None
+    if obs is not None and obs.profile_dir is not None:
+        profiler = jax.profiler.trace(obs.profile_dir)
+        profiler.__enter__()
 
-    if config.backend in ("scan", "shard", "async"):
-        is_async = config.backend == "async"
-        # async shards the same way the sync engine does — but only when a
-        # mesh is asked for (mesh_shards); plain async is single-device
-        use_mesh = config.backend == "shard" or (
-            is_async and config.mesh_shards is not None)
-        if use_mesh:
-            run_chunk, state = make_sharded_round_runner(
-                train_j, setup, config, record=record)
-        elif is_async:
-            round_fn = _make_async_round_fn(
-                train_j, setup, config.blocks_per_commit)
+    try:
+        if config.backend in ("scan", "shard", "async"):
+            is_async = config.backend == "async"
+            # async shards the same way the sync engine does — but only when
+            # a mesh is asked for (mesh_shards); plain async is single-device
+            use_mesh = config.backend == "shard" or (
+                is_async and config.mesh_shards is not None)
+            if use_mesh:
+                run_chunk, state = make_sharded_round_runner(
+                    train_j, setup, config, record=record, obs=obs)
+            elif is_async:
+                round_fn = _make_async_round_fn(
+                    train_j, setup, config.blocks_per_commit,
+                    telemetry=obs is not None)
 
-            def scan_chunk(st, cohorts, stale):
-                def body(s, xs):
-                    cohort, s_t = xs
-                    s, aux = round_fn(s, cohort, s_t)
-                    return s, (aux if record else None)
-                return jax.lax.scan(body, st, (cohorts, stale))
+                if obs is not None:
+                    def scan_chunk(st, tel, cohorts, stale):
+                        def body(carry, xs):
+                            s, ts = carry
+                            cohort, s_t = xs
+                            s, aux = round_fn(s, cohort, s_t)
+                            ts, row = telemetry_round(
+                                ts, aux.telemetry, aux.indices, aux.rewards)
+                            ys = (aux._replace(telemetry=())
+                                  if record else None)
+                            return (s, ts), (ys, row)
 
-            compiled_async = jax.jit(scan_chunk)
+                        (st, tel), (ys, rows) = jax.lax.scan(
+                            body, (st, tel), (cohorts, stale))
+                        # one BATCHED host callback per compiled chunk; the
+                        # host side applies the telemetry_every rate limit
+                        io_callback(emitter, None, rows, ordered=True)
+                        return st, tel, ys
 
-            def run_chunk(st, cohorts, staleness=None):
-                return compiled_async(
-                    st, jnp.asarray(cohorts),
-                    jnp.asarray(np.asarray(staleness), jnp.int32))
-        else:
-            round_fn = _make_round_fn(train_j, setup, config.cohort_shards)
+                    compiled_async = jax.jit(scan_chunk)
 
-            def scan_chunk(st, cohorts):
-                def body(s, cohort):
-                    s, aux = round_fn(s, cohort)
-                    return s, (aux if record else None)
-                return jax.lax.scan(body, st, cohorts)
+                    def run_chunk(st, cohorts, staleness=None):
+                        st, tel_holder[0], ys = compiled_async(
+                            st, tel_holder[0], jnp.asarray(cohorts),
+                            jnp.asarray(np.asarray(staleness), jnp.int32))
+                        return st, ys
+                else:
+                    def scan_chunk(st, cohorts, stale):
+                        def body(s, xs):
+                            cohort, s_t = xs
+                            s, aux = round_fn(s, cohort, s_t)
+                            return s, (aux if record else None)
+                        return jax.lax.scan(body, st, (cohorts, stale))
 
-            compiled = jax.jit(scan_chunk)
+                    compiled_async = jax.jit(scan_chunk)
 
-            def run_chunk(st, cohorts, staleness=None):
-                return compiled(st, jnp.asarray(cohorts))
-
-        for start, end in _chunk_bounds(config.rounds, config.eval_every):
-            if is_async:
-                state, aux = run_chunk(state, setup.cohorts[start:end],
-                                       setup.staleness[start:end])
+                    def run_chunk(st, cohorts, staleness=None):
+                        return compiled_async(
+                            st, jnp.asarray(cohorts),
+                            jnp.asarray(np.asarray(staleness), jnp.int32))
             else:
-                state, aux = run_chunk(state, setup.cohorts[start:end])
-            if record:
-                aux_chunks.append(aux)
-            m = _evaluate(state.q, setup.eval_train, setup.eval_test, config)
-            history.log(end, **m.as_dict())
-            if config.snapshot_hook is not None:
-                config.snapshot_hook(end, state)
-    else:  # "python": the per-round-dispatch reference loop
-        round_fn = _make_round_fn(train_j, setup, config.cohort_shards)
-        step = jax.jit(round_fn)
-        for t in range(1, config.rounds + 1):
-            state, aux = step(state, jnp.asarray(setup.cohorts[t - 1]))
-            if record:
-                aux_chunks.append(jax.tree.map(lambda a: a[None], aux))
-            if t % config.eval_every == 0 or t == config.rounds:
-                m = _evaluate(state.q, setup.eval_train, setup.eval_test,
-                              config)
-                history.log(t, **m.as_dict())
+                round_fn = _make_round_fn(train_j, setup,
+                                          config.cohort_shards,
+                                          telemetry=obs is not None)
+
+                if obs is not None:
+                    def scan_chunk(st, tel, cohorts):
+                        def body(carry, cohort):
+                            s, ts = carry
+                            s, aux = round_fn(s, cohort)
+                            ts, row = telemetry_round(
+                                ts, aux.telemetry, aux.indices, aux.rewards)
+                            ys = (aux._replace(telemetry=())
+                                  if record else None)
+                            return (s, ts), (ys, row)
+
+                        (st, tel), (ys, rows) = jax.lax.scan(
+                            body, (st, tel), cohorts)
+                        io_callback(emitter, None, rows, ordered=True)
+                        return st, tel, ys
+
+                    compiled = jax.jit(scan_chunk)
+
+                    def run_chunk(st, cohorts, staleness=None):
+                        st, tel_holder[0], ys = compiled(
+                            st, tel_holder[0], jnp.asarray(cohorts))
+                        return st, ys
+                else:
+                    def scan_chunk(st, cohorts):
+                        def body(s, cohort):
+                            s, aux = round_fn(s, cohort)
+                            return s, (aux if record else None)
+                        return jax.lax.scan(body, st, cohorts)
+
+                    compiled = jax.jit(scan_chunk)
+
+                    def run_chunk(st, cohorts, staleness=None):
+                        return compiled(st, jnp.asarray(cohorts))
+
+            for start, end in _chunk_bounds(config.rounds,
+                                            config.eval_every):
+                with span("train_chunk", start=start, end=end,
+                          backend=config.backend):
+                    if is_async:
+                        state, aux = run_chunk(state,
+                                               setup.cohorts[start:end],
+                                               setup.staleness[start:end])
+                    else:
+                        state, aux = run_chunk(state,
+                                               setup.cohorts[start:end])
+                if record:
+                    aux_chunks.append(aux)
+                with span("eval", round=end):
+                    m = _evaluate(state.q, setup.eval_train,
+                                  setup.eval_test, config)
+                history.log(end, **m.as_dict())
                 if config.snapshot_hook is not None:
-                    config.snapshot_hook(t, state)
+                    with span("publish", round=end):
+                        config.snapshot_hook(end, state)
+        else:  # "python": the per-round-dispatch reference loop
+            round_fn = _make_round_fn(train_j, setup, config.cohort_shards,
+                                      telemetry=obs is not None)
+            step = jax.jit(round_fn)
+            tel_step = jax.jit(telemetry_round) if obs is not None else None
+            for t in range(1, config.rounds + 1):
+                state, aux = step(state, jnp.asarray(setup.cohorts[t - 1]))
+                if obs is not None:
+                    tel_holder[0], row = tel_step(
+                        tel_holder[0], aux.telemetry, aux.indices,
+                        aux.rewards)
+                    emitter(np.asarray(row))
+                    aux = aux._replace(telemetry=())
+                if record:
+                    aux_chunks.append(jax.tree.map(lambda a: a[None], aux))
+                if t % config.eval_every == 0 or t == config.rounds:
+                    with span("eval", round=t):
+                        m = _evaluate(state.q, setup.eval_train,
+                                      setup.eval_test, config)
+                    history.log(t, **m.as_dict())
+                    if config.snapshot_hook is not None:
+                        with span("publish", round=t):
+                            config.snapshot_hook(t, state)
+    finally:
+        if profiler is not None:
+            profiler.__exit__(None, None, None)
 
     return _finalize(setup, config, state, history, aux_chunks, csv_path)
 
@@ -671,6 +893,11 @@ def run_seed_sweep(
     """
     if not seeds:
         return []
+    if config.obs is not None and config.obs.enabled:
+        raise ValueError(
+            "config.obs telemetry is single-run only (one stream per "
+            "trajectory); run_seed_sweep vmaps the round engine over seeds "
+            "— disable obs or use run_fcf_simulation per seed")
     train_np = np.asarray(train_x)
     test_np = np.asarray(test_x)
     per_seed_data = train_np.ndim == 3

@@ -1,0 +1,132 @@
+"""CLI schema checker for an emitted observability artifact directory.
+
+    PYTHONPATH=src python -m repro.obs.check OUTDIR
+
+Validates whatever the directory contains (at least one artifact must be
+present):
+
+  * ``telemetry.jsonl`` — every line parses and passes
+    :func:`repro.obs.telemetry.validate_round_event`; ``t`` is strictly
+    increasing; ``cum_regret`` is non-decreasing.
+  * ``trace.jsonl``     — every line passes
+    :func:`repro.obs.trace.validate_span_event`.
+  * ``metrics.prom``    — parses as Prometheus text
+    (:func:`repro.obs.prom.validate_text`) and exposes the serving
+    families the engine promises (latency histogram, model version,
+    snapshot age, resident bytes).
+
+Exit code 0 with a per-file summary when everything validates; exit 1
+with every error printed otherwise. CI runs this against the artifacts
+``examples/serve_recs.py --dry-run --obs-out`` emits.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from repro.obs.prom import validate_text
+from repro.obs.telemetry import validate_round_event
+from repro.obs.trace import validate_span_event
+
+TELEMETRY_FILE = "telemetry.jsonl"
+TRACE_FILE = "trace.jsonl"
+METRICS_FILE = "metrics.prom"
+REQUIRED_SERVE_FAMILIES = (
+    "frs_serve_latency_seconds",
+    "frs_serve_model_version",
+    "frs_serve_snapshot_age_rounds",
+    "frs_serve_resident_bytes",
+)
+
+
+def _check_jsonl(path: str, validate, name: str) -> List[str]:
+    errors: List[str] = []
+    count = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                event = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{name}:{lineno}: not JSON: {e}")
+                continue
+            errors.extend(f"{name}:{lineno}: {e}"
+                          for e in validate(event))
+            count += 1
+    if count == 0:
+        errors.append(f"{name}: no events")
+    return errors
+
+
+def check_telemetry(path: str) -> List[str]:
+    errors = _check_jsonl(path, validate_round_event, TELEMETRY_FILE)
+    last_t, last_cum = 0, 0.0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            try:
+                event = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            t = event.get("t")
+            cum = event.get("cum_regret")
+            if isinstance(t, (int, float)):
+                if t <= last_t:
+                    errors.append(f"{TELEMETRY_FILE}:{lineno}: t={t} not "
+                                  f"increasing (previous {last_t})")
+                last_t = t
+            if isinstance(cum, (int, float)):
+                if cum < last_cum - 1e-9:
+                    errors.append(
+                        f"{TELEMETRY_FILE}:{lineno}: cum_regret={cum} "
+                        f"decreased (previous {last_cum})")
+                last_cum = max(last_cum, cum)
+    return errors
+
+
+def check_dir(outdir: str) -> List[str]:
+    errors: List[str] = []
+    checked = 0
+    tel = os.path.join(outdir, TELEMETRY_FILE)
+    if os.path.exists(tel):
+        errors.extend(check_telemetry(tel))
+        checked += 1
+    tr = os.path.join(outdir, TRACE_FILE)
+    if os.path.exists(tr):
+        errors.extend(_check_jsonl(tr, validate_span_event, TRACE_FILE))
+        checked += 1
+    prom = os.path.join(outdir, METRICS_FILE)
+    if os.path.exists(prom):
+        with open(prom) as f:
+            errors.extend(
+                f"{METRICS_FILE}: {e}"
+                for e in validate_text(f.read(),
+                                       require=REQUIRED_SERVE_FAMILIES))
+        checked += 1
+    if checked == 0:
+        errors.append(f"{outdir}: no observability artifacts found "
+                      f"({TELEMETRY_FILE}/{TRACE_FILE}/{METRICS_FILE})")
+    return errors
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 1:
+        print(__doc__)
+        return 2
+    errors = check_dir(argv[0])
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}")
+        return 1
+    present = [f for f in (TELEMETRY_FILE, TRACE_FILE, METRICS_FILE)
+               if os.path.exists(os.path.join(argv[0], f))]
+    print(f"obs.check OK: {', '.join(present)} validate in {argv[0]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""The observability switch: one config object spanning all layers.
+
+``ObsConfig`` rides on :class:`repro.federated.simulation.FLSimConfig`
+(``obs=``) and :class:`repro.serve.ServingEngine` (``obs=``). The hard
+contract: with ``enabled=False`` (or no config at all) every consumer
+skips its instrumentation at Python/trace time, so the compiled training
+programs and the serving read path are bit-identical to a build without
+the obs layer — enforced by ``tests/test_obs.py`` for all four backends.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.obs.sinks import InMemorySink, Sink
+from repro.obs.trace import Tracer
+
+
+@dataclass
+class ObsConfig:
+    # master switch: False compiles every telemetry op out (bit-parity)
+    enabled: bool = False
+    # emit a round event every N committed rounds (host-side rate limit on
+    # the batched io_callback stream; 1 = every round)
+    telemetry_every: int = 1
+    # round-telemetry sink; None lazily defaults to an InMemorySink
+    sink: Optional[Sink] = None
+    # span-trace JSONL path; None disables host span tracing
+    trace_path: Optional[str] = None
+    # jax.profiler.trace output dir wrapped around the scan chunks of one
+    # training run; None disables profiling
+    profile_dir: Optional[str] = None
+    _tracer: Optional[Tracer] = field(
+        default=None, repr=False, compare=False)
+
+    def validate(self) -> None:
+        if self.telemetry_every < 1:
+            raise ValueError(
+                f"telemetry_every must be >= 1, got {self.telemetry_every}")
+
+    def resolve_sink(self) -> Sink:
+        """The configured sink, defaulting (and caching) an in-memory one."""
+        if self.sink is None:
+            self.sink = InMemorySink()
+        return self.sink
+
+    def resolve_tracer(self) -> Optional[Tracer]:
+        """A (cached) Tracer for ``trace_path``; None when tracing is off."""
+        if self.trace_path is None:
+            return None
+        if self._tracer is None:
+            self._tracer = Tracer(self.trace_path)
+        return self._tracer
+
+    def close(self) -> None:
+        """Flush file-backed sinks and the tracer (idempotent)."""
+        if self.sink is not None:
+            self.sink.close()
+        if self._tracer is not None:
+            self._tracer.close()

@@ -1,0 +1,152 @@
+"""HDR-style latency histograms: fixed geometric buckets, exact merge.
+
+One shared quantile definition for every latency reporter in the repo —
+the serving engine's per-bucket ``/metrics`` histograms, the serving
+benchmark's p50/p99 cells, and the ``serve_recs`` example summary all go
+through :class:`LatencyHistogram`, so their percentiles are comparable by
+construction (they used to disagree: ``np.percentile`` interpolates order
+statistics, a bucketed histogram interpolates within a bucket).
+
+The bucketing is high-dynamic-range in the HdrHistogram sense: upper
+bounds grow geometrically by ``2 ** (1 / buckets_per_octave)`` from
+``min_value`` to ``max_value`` (defaults: 1 microsecond to 1000 seconds at
+8 buckets per octave, ~9% relative resolution, 240 buckets), values below
+the range land in the first bucket and values above it in the overflow
+bucket. Two histograms with the same geometry merge by adding counts —
+the property that lets per-bucket serving histograms aggregate across
+threads, engines, or hosts without approximation beyond the shared
+bucketing itself.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+class LatencyHistogram:
+    """Geometric-bucket histogram over positive values (seconds)."""
+
+    def __init__(self, min_value: float = 1e-6, max_value: float = 1e3,
+                 buckets_per_octave: int = 8):
+        if not (0 < min_value < max_value):
+            raise ValueError(
+                f"need 0 < min_value < max_value, got {min_value}, "
+                f"{max_value}")
+        if buckets_per_octave < 1:
+            raise ValueError(
+                f"buckets_per_octave must be >= 1, got {buckets_per_octave}")
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+        self.buckets_per_octave = int(buckets_per_octave)
+        octaves = math.log2(max_value / min_value)
+        n = int(math.ceil(octaves * buckets_per_octave))
+        # bucket i covers (bounds[i-1], bounds[i]]; the last slot overflows
+        self.bounds = min_value * np.power(
+            2.0, (np.arange(1, n + 1)) / buckets_per_octave)
+        self.counts = np.zeros(n + 1, np.int64)
+        self.sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    # ------------------------------------------------------------- #
+    @property
+    def total(self) -> int:
+        return int(self.counts.sum())
+
+    def same_geometry(self, other: "LatencyHistogram") -> bool:
+        return (self.min_value == other.min_value
+                and self.max_value == other.max_value
+                and self.buckets_per_octave == other.buckets_per_octave)
+
+    # ------------------------------------------------------------- #
+    def record(self, value: float) -> None:
+        self.record_many([value])
+
+    def record_many(self, values: Sequence[float]) -> None:
+        arr = np.asarray(values, np.float64).reshape(-1)
+        if arr.size == 0:
+            return
+        if np.any(arr < 0) or not np.all(np.isfinite(arr)):
+            raise ValueError("latencies must be finite and non-negative")
+        idx = np.searchsorted(self.bounds, arr, side="left")
+        np.add.at(self.counts, idx, 1)
+        self.sum += float(arr.sum())
+        self._min = min(self._min, float(arr.min()))
+        self._max = max(self._max, float(arr.max()))
+
+    @classmethod
+    def from_values(cls, values: Sequence[float],
+                    **kwargs) -> "LatencyHistogram":
+        h = cls(**kwargs)
+        h.record_many(values)
+        return h
+
+    # ------------------------------------------------------------- #
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """A new histogram holding both datasets (exact on counts)."""
+        if not self.same_geometry(other):
+            raise ValueError("cannot merge histograms with different "
+                             "bucket geometry")
+        out = LatencyHistogram(self.min_value, self.max_value,
+                               self.buckets_per_octave)
+        out.counts = self.counts + other.counts
+        out.sum = self.sum + other.sum
+        out._min = min(self._min, other._min)
+        out._max = max(self._max, other._max)
+        return out
+
+    def copy(self) -> "LatencyHistogram":
+        out = LatencyHistogram(self.min_value, self.max_value,
+                               self.buckets_per_octave)
+        out.counts = self.counts.copy()
+        out.sum = self.sum
+        out._min = self._min
+        out._max = self._max
+        return out
+
+    # ------------------------------------------------------------- #
+    def quantile(self, q: float) -> float:
+        """The q-quantile (0 <= q <= 1), interpolated within its bucket.
+
+        Resolution is one bucket (~``2**(1/bpo)`` relative); the result is
+        clamped to the exactly-tracked [min, max] envelope so single-value
+        and extreme-q reads stay sharp.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        n = self.total
+        if n == 0:
+            return math.nan
+        target = q * n
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum, target, side="left"))
+        i = min(i, len(self.counts) - 1)
+        lo = 0.0 if i == 0 else float(self.bounds[i - 1])
+        hi = float(self.bounds[min(i, len(self.bounds) - 1)])
+        prev = 0 if i == 0 else int(cum[i - 1])
+        in_bucket = int(self.counts[i])
+        frac = 0.5 if in_bucket == 0 else (target - prev) / in_bucket
+        frac = min(max(frac, 0.0), 1.0)
+        val = lo + frac * (hi - lo)
+        return float(min(max(val, self._min), self._max))
+
+    def quantiles(self, qs: Sequence[float]) -> List[float]:
+        return [self.quantile(q) for q in qs]
+
+    # ------------------------------------------------------------- #
+    def cumulative_buckets(self) -> List[Tuple[float, int]]:
+        """Non-empty cumulative ``(upper_bound_seconds, count)`` pairs.
+
+        The Prometheus histogram exposition shape (``le`` buckets are
+        cumulative); empty buckets are elided to keep /metrics small, the
+        ``+Inf`` bucket is the renderer's job.
+        """
+        out: List[Tuple[float, int]] = []
+        cum = 0
+        for i, c in enumerate(self.counts[:-1]):
+            cum += int(c)
+            if c > 0:
+                out.append((float(self.bounds[i]), cum))
+        return out

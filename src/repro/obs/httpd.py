@@ -1,0 +1,56 @@
+"""Stdlib ``/metrics`` endpoint: Prometheus exposition over HTTP.
+
+No external web framework — a daemon-threaded ``http.server`` that calls
+a render function per scrape. Serves ``/metrics`` (and ``/``) with the
+Prometheus text content type; anything else is a 404.
+
+    server, url = start_metrics_server(engine.metrics, port=9100)
+    ...
+    server.shutdown()
+
+``port=0`` binds an ephemeral port (the returned URL has the real one) —
+what the CI smoke uses to prove the endpoint serves parseable text.
+"""
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Tuple
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def start_metrics_server(
+    render: Callable[[], str],
+    port: int = 0,
+    host: str = "127.0.0.1",
+) -> Tuple[ThreadingHTTPServer, str]:
+    """Serve ``render()`` at ``http://host:port/metrics`` from a daemon
+    thread. Returns ``(server, url)``; call ``server.shutdown()`` to stop.
+    """
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 - http.server API
+            if self.path.rstrip("/") not in ("", "/metrics"):
+                self.send_error(404)
+                return
+            try:
+                body = render().encode("utf-8")
+            except Exception as e:  # render must never kill the server
+                self.send_error(500, f"metrics render failed: {e}")
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", CONTENT_TYPE)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):  # quiet: no per-scrape stderr spam
+            pass
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="obs-metrics-httpd")
+    thread.start()
+    url = f"http://{host}:{server.server_address[1]}/metrics"
+    return server, url

@@ -1,0 +1,202 @@
+"""Prometheus text exposition (format 0.0.4) rendering and parsing.
+
+The serving engine's ``metrics()`` renders through :func:`render`; tests
+and the CI schema checker round-trip the text through :func:`parse` /
+:func:`validate_text`. Only the subset of the format the repo emits is
+supported: ``counter``/``gauge`` samples and ``histogram`` families
+(cumulative ``_bucket{le=...}`` + ``_sum`` + ``_count``), with flat
+string labels.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.hist import LatencyHistogram
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$")
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+Labels = Dict[str, str]
+
+
+class Metric:
+    """One metric family to render: scalar samples or histograms."""
+
+    def __init__(self, name: str, mtype: str, help: str,
+                 samples: Optional[Sequence[Tuple[Labels, float]]] = None,
+                 hists: Optional[
+                     Sequence[Tuple[Labels, LatencyHistogram]]] = None):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"bad metric name {name!r}")
+        if mtype not in ("counter", "gauge", "histogram"):
+            raise ValueError(f"bad metric type {mtype!r}")
+        self.name = name
+        self.mtype = mtype
+        self.help = help
+        self.samples = list(samples or [])
+        self.hists = list(hists or [])
+
+
+def _fmt_labels(labels: Labels) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(
+        f'{k}="{str(v).replace(chr(92), chr(92) * 2).replace(chr(34), chr(92) + chr(34))}"'
+        for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if isinstance(v, int):
+        return str(v)
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def render(metrics: Sequence[Metric]) -> str:
+    """Render metric families as Prometheus exposition text."""
+    lines: List[str] = []
+    for m in metrics:
+        lines.append(f"# HELP {m.name} {m.help}")
+        lines.append(f"# TYPE {m.name} {m.mtype}")
+        if m.mtype == "histogram":
+            for labels, hist in m.hists:
+                for le, cum in hist.cumulative_buckets():
+                    lab = dict(labels, le=_fmt_value(le))
+                    lines.append(
+                        f"{m.name}_bucket{_fmt_labels(lab)} {cum}")
+                lab = dict(labels, le="+Inf")
+                lines.append(
+                    f"{m.name}_bucket{_fmt_labels(lab)} {hist.total}")
+                lines.append(
+                    f"{m.name}_sum{_fmt_labels(labels)} "
+                    f"{_fmt_value(hist.sum)}")
+                lines.append(
+                    f"{m.name}_count{_fmt_labels(labels)} {hist.total}")
+        else:
+            for labels, value in m.samples:
+                lines.append(
+                    f"{m.name}{_fmt_labels(labels)} {_fmt_value(value)}")
+    return "\n".join(lines) + "\n"
+
+
+# ------------------------------------------------------------------ #
+# parsing / validation
+# ------------------------------------------------------------------ #
+def _parse_value(s: str) -> float:
+    if s == "+Inf":
+        return math.inf
+    if s == "-Inf":
+        return -math.inf
+    if s == "NaN":
+        return math.nan
+    return float(s)
+
+
+def parse(text: str) -> Dict[str, Dict]:
+    """Parse exposition text into ``{family: {type, help, samples}}``.
+
+    ``samples`` maps a sample name (``foo``, ``foo_bucket``, ...) to a list
+    of ``(labels, value)`` pairs. Raises ``ValueError`` on malformed lines,
+    samples without a preceding ``# TYPE``, or unparseable values.
+    """
+    families: Dict[str, Dict] = {}
+    current: Optional[str] = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            name = parts[2]
+            families.setdefault(
+                name, {"type": None, "help": None, "samples": {}})
+            families[name]["help"] = parts[3] if len(parts) > 3 else ""
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                raise ValueError(f"line {lineno}: malformed TYPE: {raw!r}")
+            name, mtype = parts[2], parts[3]
+            families.setdefault(
+                name, {"type": None, "help": None, "samples": {}})
+            families[name]["type"] = mtype
+            current = name
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {lineno}: malformed sample: {raw!r}")
+        sname = m.group("name")
+        labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+        value = _parse_value(m.group("value"))
+        family = current
+        if family is None or not (
+                sname == family or sname.startswith(family + "_")):
+            # sample outside its TYPE block: find the owning family
+            family = next(
+                (f for f in families
+                 if sname == f or sname.startswith(f + "_")), None)
+            if family is None:
+                raise ValueError(
+                    f"line {lineno}: sample {sname!r} has no # TYPE family")
+        families[family]["samples"].setdefault(sname, []).append(
+            (labels, value))
+    return families
+
+
+def validate_text(text: str, require: Sequence[str] = ()) -> List[str]:
+    """Schema errors for exposition text ([] = valid).
+
+    Beyond parseability: every family must carry a TYPE; histogram
+    families must expose cumulative non-decreasing buckets ending at
+    ``+Inf`` with ``_count`` equal to the ``+Inf`` bucket; ``require``
+    lists family names that must be present.
+    """
+    errors: List[str] = []
+    try:
+        families = parse(text)
+    except ValueError as e:
+        return [str(e)]
+    for name in require:
+        if name not in families:
+            errors.append(f"missing required metric family {name!r}")
+    for name, fam in families.items():
+        if fam["type"] is None:
+            errors.append(f"{name}: no # TYPE line")
+            continue
+        if fam["type"] != "histogram":
+            if name not in fam["samples"] and fam["samples"]:
+                errors.append(f"{name}: {fam['type']} has no bare sample")
+            continue
+        buckets = fam["samples"].get(f"{name}_bucket", [])
+        counts = fam["samples"].get(f"{name}_count", [])
+        by_series: Dict[Tuple, List[Tuple[float, float]]] = {}
+        for labels, value in buckets:
+            key = tuple(sorted((k, v) for k, v in labels.items()
+                               if k != "le"))
+            by_series.setdefault(key, []).append(
+                (_parse_value(labels.get("le", "NaN")), value))
+        for key, series in by_series.items():
+            series.sort(key=lambda t: t[0])
+            les = [le for le, _ in series]
+            vals = [v for _, v in series]
+            if not les or not math.isinf(les[-1]):
+                errors.append(f"{name}{dict(key)}: no +Inf bucket")
+                continue
+            if any(b > a for b, a in zip(vals, vals[1:])):
+                errors.append(f"{name}{dict(key)}: buckets not cumulative")
+            cnt = next((v for labels, v in counts
+                        if tuple(sorted(labels.items())) == key), None)
+            if cnt is not None and cnt != vals[-1]:
+                errors.append(
+                    f"{name}{dict(key)}: _count {cnt} != +Inf bucket "
+                    f"{vals[-1]}")
+    return errors

@@ -1,0 +1,124 @@
+"""Pluggable event sinks for telemetry streams.
+
+A sink receives flat JSON-serializable dict events (round telemetry rows,
+eval rows, span events) via ``emit`` and owns their persistence. Three
+implementations cover the repo's needs:
+
+  * :class:`InMemorySink` — a list, for tests and programmatic readers.
+  * :class:`JsonlSink`    — one JSON object per line, flushed per event so
+    a concurrent reader (CI schema checker, tail -f) always sees complete
+    lines.
+  * :class:`CsvSink`      — buffered rows written on ``close`` through
+    :func:`write_csv`, the shared stable-column CSV writer that
+    :class:`repro.utils.logging.MetricLogger` is rebased on.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+
+class Sink:
+    """Interface: ``emit`` one event dict; ``close`` flushes/persists."""
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:  # pragma: no cover - trivial default
+        pass
+
+    def __enter__(self) -> "Sink":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class InMemorySink(Sink):
+    """Accumulate events in ``self.events`` (programmatic consumption)."""
+
+    def __init__(self) -> None:
+        self.events: List[Dict[str, Any]] = []
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        self.events.append(dict(event))
+
+
+class JsonlSink(Sink):
+    """Append events to a JSONL file, one complete line per event."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = None
+        self.count = 0
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        if self._fh is None:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            self._fh = open(self.path, "w")
+        self._fh.write(json.dumps(event, default=float) + "\n")
+        self._fh.flush()
+        self.count += 1
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+class CsvSink(Sink):
+    """Buffer events and persist them as a stable-column CSV on close."""
+
+    def __init__(self, path: str, front: Sequence[str] = ("step", "wall_s")):
+        self.path = path
+        self.front = tuple(front)
+        self.events: List[Dict[str, Any]] = []
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        self.events.append(dict(event))
+
+    def close(self) -> None:
+        write_csv(self.path, self.events, front=self.front)
+
+
+def csv_fieldnames(rows: Sequence[Dict[str, Any]],
+                   front: Sequence[str] = ("step", "wall_s")) -> List[str]:
+    """Stable column order for heterogeneous rows.
+
+    ``front`` keys first (in the given order, when present anywhere), then
+    every other key in sorted order — a function of the key *set* only, so
+    the column layout cannot depend on which row happened to come first
+    (eval rows and train rows carry different keys).
+    """
+    seen = set()
+    for r in rows:
+        seen.update(r.keys())
+    head = [k for k in front if k in seen]
+    rest = sorted(seen - set(head))
+    return head + rest
+
+
+def write_csv(path: str, rows: Sequence[Dict[str, Any]],
+              front: Sequence[str] = ("step", "wall_s")) -> str:
+    """Write heterogeneous dict rows with stable columns and ``restval=""``.
+
+    Missing cells are written as the empty string EXPLICITLY (not by
+    accident of the csv module's default), so mixed eval/train rows
+    round-trip: reading the file back with ``csv.DictReader`` and dropping
+    ``""`` cells reproduces the original row dicts (modulo str conversion).
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fieldnames = csv_fieldnames(rows, front=front)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fieldnames, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def resolve_sink(sink: Optional[Sink]) -> Sink:
+    """Default to an :class:`InMemorySink` when no sink is configured."""
+    return sink if sink is not None else InMemorySink()

@@ -1,0 +1,212 @@
+"""In-loop round telemetry: traced scalars out of the fused FL round.
+
+Two pieces, split along the jit boundary:
+
+  * :class:`RoundTelemetry` — the per-round scalars only the fused step
+    can see (wire bytes, gradient/update norms, commit staleness, the
+    staleness-discounted step weight, psum-reduced collective bytes under
+    ``shard_map``, arm-pull coverage). Computed inside
+    ``server_round_step`` / ``server_round_step_async`` when the step is
+    built with ``telemetry=True`` — with ``telemetry=False`` (the
+    default) not a single op is added, which is what makes the
+    disabled-path bit-parity contract (tests/test_obs.py) hold trivially.
+  * :class:`TelemetryState` + :func:`telemetry_round` — the scan-carry
+    reward/regret aggregates (the traced port of
+    :class:`repro.core.regret.RegretTracker`'s pseudo-regret: per-round
+    mean reward vs. the hindsight-best subset of equal size) plus the
+    packing of one round's telemetry into a flat float32 row vector with
+    the fixed :data:`TELEMETRY_FIELDS` order. Rows stream out of the
+    compiled chunk through one *batched* ``jax.experimental.io_callback``
+    per chunk; the host side (:func:`rows_to_events`) applies the
+    ``telemetry_every`` rate limit and converts rows to JSONL events.
+
+Round events (one JSON object per line)::
+
+    {"type": "round", "t": 25, "staleness": 1, "step_weight": 0.8,
+     "bytes_down": 20800.0, "bytes_up": 2080000.0, "collective_bytes": 0.0,
+     "grad_norm": 12.3, "update_norm": 0.04, "reward_mean": 0.0,
+     "reward_min": -1.2, "reward_max": 2.1, "regret": 0.3,
+     "cum_regret": 5.1, "arms_explored": 812, "pull_max": 25}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the wire order of one telemetry row; the first entry MUST stay "t"
+# (the host-side rate limiter keys on it)
+TELEMETRY_FIELDS = (
+    "t",                 # committed global round (1-based)
+    "staleness",         # snapshot age s of this round's commit (0 = sync)
+    "step_weight",       # staleness_discount ** s applied to the Adam step
+    "bytes_down",        # this round's downlink payload wire bytes
+    "bytes_up",          # this round's uplink payload wire bytes (x cohort)
+    "collective_bytes",  # psum-reduced cross-device bytes (0 off-mesh)
+    "grad_norm",         # ||decoded aggregated gradient||_F
+    "update_norm",       # ||committed row delta||_F
+    "reward_mean",       # mean bandit reward over the selected arms
+    "reward_min",
+    "reward_max",
+    "regret",            # this round's pseudo-regret increment
+    "cum_regret",        # running cumulative pseudo-regret
+    "arms_explored",     # arms pulled at least once so far
+    "pull_max",          # max per-arm transmission count so far
+)
+_INT_FIELDS = frozenset({"t", "arms_explored", "pull_max", "staleness"})
+
+
+class RoundTelemetry(NamedTuple):
+    """Traced per-round scalars produced inside the fused round step."""
+
+    t: jax.Array                  # () int32
+    staleness: jax.Array          # () float32
+    step_weight: jax.Array        # () float32
+    bytes_down: jax.Array         # () float32
+    bytes_up: jax.Array           # () float32
+    collective_bytes: jax.Array   # () float32
+    grad_norm: jax.Array          # () float32
+    update_norm: jax.Array        # () float32
+    arms_explored: jax.Array      # () float32
+    pull_max: jax.Array           # () float32
+
+
+class TelemetryState(NamedTuple):
+    """Scan-carry reward/regret aggregates (replicated under shard_map)."""
+
+    reward_sum: jax.Array     # (M,) float32 — per-arm reward totals
+    reward_count: jax.Array   # (M,) float32 — per-arm observation counts
+    cum_regret: jax.Array     # () float32
+
+
+def telemetry_state_init(num_arms: int) -> TelemetryState:
+    return TelemetryState(
+        reward_sum=jnp.zeros((num_arms,), jnp.float32),
+        reward_count=jnp.zeros((num_arms,), jnp.float32),
+        cum_regret=jnp.zeros((), jnp.float32),
+    )
+
+
+def telemetry_round(
+    ts: TelemetryState,
+    tel: RoundTelemetry,
+    indices: jax.Array,       # (M_s,) this round's committed arms
+    rewards: jax.Array,       # (M_s,) their bandit rewards
+) -> Tuple[TelemetryState, jax.Array]:
+    """Fold one round into the regret aggregates; pack the telemetry row.
+
+    The regret proxy mirrors :class:`repro.core.regret.RegretTracker`
+    op-for-op (record first, then hindsight means, then the top-M_s best
+    mean): ``regret_t = max(0, best - mean_t)`` accumulated over rounds —
+    the empirical stand-in for the paper's (unproven) sub-linear BTS
+    regret claim, now computable while the scan is still running.
+
+    Returns ``(new_state, row)`` with ``row`` a flat float32
+    ``(len(TELEMETRY_FIELDS),)`` vector in :data:`TELEMETRY_FIELDS` order.
+    """
+    m_s = indices.shape[0]
+    idx = indices.astype(jnp.int32)
+    r = rewards.astype(jnp.float32)
+    reward_sum = ts.reward_sum.at[idx].add(r)
+    reward_count = ts.reward_count.at[idx].add(1.0)
+
+    mean_t = jnp.mean(r)
+    means = jnp.where(reward_count > 0,
+                      reward_sum / jnp.maximum(reward_count, 1.0), 0.0)
+    best = jnp.mean(jax.lax.top_k(means, m_s)[0])
+    inc = jnp.maximum(0.0, best - mean_t)
+    cum = ts.cum_regret + inc
+
+    values = {
+        "t": tel.t.astype(jnp.float32),
+        "staleness": tel.staleness,
+        "step_weight": tel.step_weight,
+        "bytes_down": tel.bytes_down,
+        "bytes_up": tel.bytes_up,
+        "collective_bytes": tel.collective_bytes,
+        "grad_norm": tel.grad_norm,
+        "update_norm": tel.update_norm,
+        "reward_mean": mean_t,
+        "reward_min": jnp.min(r),
+        "reward_max": jnp.max(r),
+        "regret": inc,
+        "cum_regret": cum,
+        "arms_explored": tel.arms_explored,
+        "pull_max": tel.pull_max,
+    }
+    row = jnp.stack([jnp.asarray(values[f], jnp.float32)
+                     for f in TELEMETRY_FIELDS])
+    return TelemetryState(reward_sum=reward_sum, reward_count=reward_count,
+                          cum_regret=cum), row
+
+
+# ------------------------------------------------------------------ #
+# host side: rows -> events, sinks, schema
+# ------------------------------------------------------------------ #
+def rows_to_events(rows: Any, every: int = 1) -> List[Dict[str, Any]]:
+    """Convert stacked telemetry rows to JSONL round events.
+
+    ``rows`` is a ``(R, len(TELEMETRY_FIELDS))`` array (or a single row).
+    ``every`` is the rate limit: only rounds with ``t % every == 0`` (plus
+    ``t == 1``, so a stream is never empty) become events.
+    """
+    arr = np.asarray(rows, np.float64)
+    if arr.ndim == 1:
+        arr = arr[None]
+    if arr.shape[-1] != len(TELEMETRY_FIELDS):
+        raise ValueError(
+            f"telemetry rows must have {len(TELEMETRY_FIELDS)} fields, "
+            f"got shape {arr.shape}")
+    events: List[Dict[str, Any]] = []
+    for row in arr:
+        t = int(row[0])
+        if every > 1 and t != 1 and t % every != 0:
+            continue
+        event: Dict[str, Any] = {"type": "round"}
+        for name, value in zip(TELEMETRY_FIELDS, row):
+            event[name] = int(value) if name in _INT_FIELDS else float(value)
+        events.append(event)
+    return events
+
+
+def make_row_emitter(sink, every: int = 1):
+    """An ``io_callback``-shaped host function appending rows to ``sink``."""
+
+    def emit(rows) -> None:
+        for event in rows_to_events(rows, every=every):
+            sink.emit(event)
+
+    return emit
+
+
+def validate_round_event(event: Any) -> List[str]:
+    """Schema errors for one round-telemetry event dict ([] = valid)."""
+    errors: List[str] = []
+    if not isinstance(event, dict):
+        return [f"round event must be a dict, got {type(event).__name__}"]
+    if event.get("type") != "round":
+        errors.append(f"round event type must be 'round', "
+                      f"got {event.get('type')!r}")
+    for name in TELEMETRY_FIELDS:
+        if name not in event:
+            errors.append(f"round event missing field {name!r}")
+            continue
+        v = event[name]
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            errors.append(f"round field {name!r} must be a number, "
+                          f"got {v!r}")
+            continue
+        if name in _INT_FIELDS and int(v) != v:
+            errors.append(f"round field {name!r} must be integral, "
+                          f"got {v!r}")
+    if not errors:
+        if event["t"] < 1:
+            errors.append(f"round t must be >= 1, got {event['t']}")
+        for name in ("bytes_down", "bytes_up", "cum_regret", "regret",
+                     "collective_bytes", "staleness"):
+            if event[name] < 0:
+                errors.append(f"round field {name!r} must be non-negative, "
+                              f"got {event[name]}")
+    return errors

@@ -1,0 +1,193 @@
+"""Host-side span tracing: nested spans to a JSONL event log.
+
+``span("name", attr=...)`` wraps the host-side phases of a run — snapshot
+publish, ring-chunk execution, eval, checkpoint save/restore, serving
+batch assembly — and records one event per span with monotonic
+timestamps, duration, nesting depth and parent name. The module-level
+:func:`span` dispatches to the *installed* tracer; the default is a
+:class:`NullTracer` whose ``span`` returns a shared reusable no-op
+context manager, so instrumented call sites cost one attribute load and
+a no-op ``__enter__``/``__exit__`` when tracing is off — nothing is
+formatted, allocated per-call, or written.
+
+Span events (one JSON object per line)::
+
+    {"type": "span", "name": "train.chunk", "ts": 12.031, "dur": 0.482,
+     "depth": 0, "parent": null, "attrs": {"t0": 0, "t1": 25}}
+
+``ts`` is seconds on the monotonic clock relative to tracer creation.
+Nesting is tracked per thread, so concurrent serving threads produce
+well-formed (if interleaved) span streams.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+SPAN_REQUIRED_KEYS = ("type", "name", "ts", "dur", "depth")
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """The no-op default: ``span`` hands back one shared null context."""
+
+    def span(self, name: str, **attrs) -> Any:
+        return _NULL_SPAN
+
+    def close(self) -> None:
+        pass
+
+
+class _Span:
+    __slots__ = ("tracer", "name", "attrs", "t0", "depth", "parent")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Dict[str, Any]):
+        self.tracer = tracer
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        stack = self.tracer._stack()
+        self.depth = len(stack)
+        self.parent = stack[-1] if stack else None
+        stack.append(self.name)
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        dur = time.monotonic() - self.t0
+        self.tracer._stack().pop()
+        event = {
+            "type": "span",
+            "name": self.name,
+            "ts": round(self.t0 - self.tracer.t0, 6),
+            "dur": round(dur, 6),
+            "depth": self.depth,
+            "parent": self.parent,
+        }
+        if self.attrs:
+            event["attrs"] = self.attrs
+        self.tracer._write(event)
+        return False
+
+
+class Tracer:
+    """Collect span events; persist to ``path`` (JSONL) or ``.events``."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.t0 = time.monotonic()
+        self.events: List[Dict[str, Any]] = []
+        self._fh = None
+        self._lock = threading.Lock()
+        self._local = threading.local()
+
+    def _stack(self) -> List[str]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def span(self, name: str, **attrs) -> _Span:
+        return _Span(self, name, attrs)
+
+    def _write(self, event: Dict[str, Any]) -> None:
+        with self._lock:
+            if self.path is None:
+                self.events.append(event)
+                return
+            if self._fh is None:
+                os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+                self._fh = open(self.path, "w")
+            self._fh.write(json.dumps(event, default=float) + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+_active: Any = NullTracer()
+
+
+def install_tracer(tracer: Optional[Any]) -> Any:
+    """Install the process-global tracer (None reverts to the no-op).
+
+    Returns the previously installed tracer so callers can restore it.
+    """
+    global _active
+    previous = _active
+    _active = tracer if tracer is not None else NullTracer()
+    return previous
+
+
+def active_tracer() -> Any:
+    return _active
+
+
+def span(name: str, **attrs) -> Any:
+    """A span context on the installed tracer (no-op unless installed)."""
+    return _active.span(name, **attrs)
+
+
+def traced(name: Optional[str] = None):
+    """Decorator form: wrap a function call in a span."""
+
+    def deco(fn):
+        span_name = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with _active.span(span_name):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
+
+
+def validate_span_event(event: Any) -> List[str]:
+    """Schema errors for one span event dict ([] = valid)."""
+    errors: List[str] = []
+    if not isinstance(event, dict):
+        return [f"span event must be a dict, got {type(event).__name__}"]
+    for key in SPAN_REQUIRED_KEYS:
+        if key not in event:
+            errors.append(f"span event missing key {key!r}")
+    if errors:
+        return errors
+    if event["type"] != "span":
+        errors.append(f"span event type must be 'span', got "
+                      f"{event['type']!r}")
+    if not isinstance(event["name"], str) or not event["name"]:
+        errors.append("span name must be a non-empty string")
+    for key in ("ts", "dur"):
+        v = event[key]
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+            errors.append(f"span {key} must be a non-negative number, "
+                          f"got {v!r}")
+    d = event["depth"]
+    if not isinstance(d, int) or isinstance(d, bool) or d < 0:
+        errors.append(f"span depth must be a non-negative int, got {d!r}")
+    parent = event.get("parent")
+    if parent is not None and not isinstance(parent, str):
+        errors.append(f"span parent must be null or a string, got {parent!r}")
+    return errors

@@ -25,11 +25,16 @@ model never recompiles.
 from __future__ import annotations
 
 import threading
-from typing import Any, NamedTuple, Optional, Sequence, Tuple
+import time
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs.config import ObsConfig
+from repro.obs.hist import LatencyHistogram
+from repro.obs.prom import Metric, render
+from repro.obs.trace import span
 from repro.serve.model import ServingModel
 
 DEFAULT_BUCKETS = (8, 64, 256)
@@ -54,6 +59,7 @@ class ServingEngine:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         top_n: int = 10,
         block_m: int = 1024,
+        obs: Optional[ObsConfig] = None,
     ):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"buckets must be positive, got {buckets!r}")
@@ -65,6 +71,14 @@ class ServingEngine:
         self._requests = 0
         self._users = 0
         self._installs = 0
+        # observability: metrics() renders regardless, but per-request
+        # latency timing (a device sync per bucket chunk) only runs with an
+        # enabled obs config — the read path is untouched otherwise
+        self._obs_on = obs is not None and obs.enabled
+        self._lat: Dict[int, LatencyHistogram] = {
+            b: LatencyHistogram() for b in self.buckets}
+        self._inflight = 0
+        self._snapshot_age = -1     # rounds; -1 = never published
 
     # ------------------------------------------------------------- #
     # model access + publish/swap
@@ -98,14 +112,20 @@ class ServingEngine:
         snapshot — the wire rows themselves, never a decoded fp32 Q* —
         while synchronous states (no ring) re-encode the full table.
         """
-        def hook(_round: int, state) -> None:
-            if state.snapshots != ():
-                from repro.cf.server import latest_snapshot
-                self.publish_snapshot(latest_snapshot(state))
-            else:
-                cur = self.model
-                self.swap(ServingModel.from_dense(
-                    cur.cfg, state.q, version=cur.version + 1))
+        def hook(round_: int, state) -> None:
+            with span("publish_snapshot", round=round_):
+                if state.snapshots != ():
+                    from repro.cf.server import latest_snapshot
+                    snap = latest_snapshot(state)
+                    self.publish_snapshot(snap)
+                    age = round_ - int(snap.t) if self._obs_on else 0
+                else:
+                    cur = self.model
+                    self.swap(ServingModel.from_dense(
+                        cur.cfg, state.q, version=cur.version + 1))
+                    age = 0     # synchronous states publish their live table
+            with self._lock:
+                self._snapshot_age = age
 
         return hook
 
@@ -114,6 +134,63 @@ class ServingEngine:
             return ServeStats(requests=self._requests, users=self._users,
                               installs=self._installs,
                               version=self._model.version)
+
+    # ------------------------------------------------------------- #
+    # observability
+    # ------------------------------------------------------------- #
+    def latency_histogram(self) -> LatencyHistogram:
+        """All bucket histograms merged (exact) — one engine-wide view.
+
+        Populated only when the engine was built with an enabled obs
+        config; empty (``total == 0``) otherwise.
+        """
+        with self._lock:
+            hists = [h.copy() for h in self._lat.values()]
+        merged = hists[0]
+        for h in hists[1:]:
+            merged = merged.merge(h)
+        return merged
+
+    def metrics(self) -> str:
+        """Prometheus text exposition of the engine's counters, gauges and
+        per-bucket latency histograms (format 0.0.4).
+
+        Always renders — latency histograms just stay empty without an
+        enabled obs config. Thread-safe against concurrent ``recommend``/
+        ``swap`` calls: everything is copied under the lock, so a scrape
+        sees one consistent cut (counters monotone across scrapes).
+        """
+        with self._lock:
+            model = self._model
+            requests, users = self._requests, self._users
+            installs, inflight = self._installs, self._inflight
+            age = self._snapshot_age
+            hists = [({"bucket": str(b)}, h.copy())
+                     for b, h in sorted(self._lat.items())]
+        families = [
+            Metric("frs_serve_requests_total", "counter",
+                   "recommend() calls served", [({}, requests)]),
+            Metric("frs_serve_users_total", "counter",
+                   "real (unpadded) user rows served", [({}, users)]),
+            Metric("frs_serve_installs_total", "counter",
+                   "model snapshot installs (swap count)",
+                   [({}, installs)]),
+            Metric("frs_serve_queue_depth", "gauge",
+                   "recommend() calls currently in flight",
+                   [({}, inflight)]),
+            Metric("frs_serve_model_version", "gauge",
+                   "live serving model version", [({}, model.version)]),
+            Metric("frs_serve_snapshot_age_rounds", "gauge",
+                   "age in rounds of the last published snapshot "
+                   "(-1 = never published)", [({}, age)]),
+            Metric("frs_serve_resident_bytes", "gauge",
+                   "wire-resident serving model bytes",
+                   [({}, model.resident_bytes())]),
+            Metric("frs_serve_latency_seconds", "histogram",
+                   "recommend latency per padded request bucket",
+                   hists=hists),
+        ]
+        return render(families)
 
     # ------------------------------------------------------------- #
     # batched reads
@@ -140,15 +217,34 @@ class ServingEngine:
         n = self.top_n if top_n is None else int(top_n)
         model = self.model           # one consistent view for the request
         b = p.shape[0]
-        out_v, out_i = [], []
-        step = self.buckets[-1]
-        for start in range(0, b, step):
-            pc = p[start:start + step]
-            mc = None if train_mask is None \
-                else train_mask[start:start + step]
-            v, i = self._run_bucket(model, pc, mc, n)
-            out_v.append(v)
-            out_i.append(i)
+        timed = self._obs_on
+        if timed:
+            with self._lock:
+                self._inflight += 1
+        try:
+            with span("serve_batch", users=b):
+                out_v, out_i = [], []
+                step = self.buckets[-1]
+                for start in range(0, b, step):
+                    pc = p[start:start + step]
+                    mc = None if train_mask is None \
+                        else train_mask[start:start + step]
+                    if timed:
+                        t0 = time.perf_counter()
+                        v, i = self._run_bucket(model, pc, mc, n)
+                        jax.block_until_ready((v, i))
+                        dt = time.perf_counter() - t0
+                        with self._lock:
+                            self._lat[self._bucket_for(pc.shape[0])] \
+                                .record(dt)
+                    else:
+                        v, i = self._run_bucket(model, pc, mc, n)
+                    out_v.append(v)
+                    out_i.append(i)
+        finally:
+            if timed:
+                with self._lock:
+                    self._inflight -= 1
         with self._lock:
             self._requests += 1
             self._users += b

@@ -1,13 +1,12 @@
 """Lightweight structured logging + metric accumulation (no external deps)."""
 from __future__ import annotations
 
-import csv
 import logging
-import os
 import sys
 import time
-from collections import defaultdict
 from typing import Any, Dict, List, Optional
+
+from repro.obs.sinks import InMemorySink, Sink, write_csv
 
 _FORMAT = "%(asctime)s %(name)s %(levelname).1s | %(message)s"
 
@@ -29,17 +28,37 @@ class MetricLogger:
     Used by the FL simulation driver and the training loop. Keeps a rolling
     window so the paper's "average of the previous ten global metric values"
     convention (Sec 6.2) is directly supported via ``rolling_mean``.
+
+    Rebased on the observability sinks (:mod:`repro.obs.sinks`): rows
+    accumulate in a :class:`repro.obs.sinks.Sink` (``InMemorySink`` by
+    default, or any sink passed as ``sink=``) and ``to_csv`` goes through
+    the shared stable-column writer, so columns no longer depend on which
+    row was logged first and missing cells are explicitly ``""``. The
+    public API (``rows``/``log``/``rolling_mean``/``series``/``last``/
+    ``to_csv``) is unchanged; new code streaming telemetry should prefer
+    the obs sinks directly (this class remains the step-metrics
+    accumulator for drivers).
     """
 
-    def __init__(self, out_path: Optional[str] = None):
-        self.rows: List[Dict[str, Any]] = []
+    def __init__(self, out_path: Optional[str] = None,
+                 sink: Optional[Sink] = None):
+        self._sink = sink if sink is not None else InMemorySink()
+        if not hasattr(self._sink, "events"):
+            raise ValueError(
+                "MetricLogger needs a sink with an .events buffer "
+                "(InMemorySink/CsvSink); for stream-only sinks use "
+                "repro.obs directly")
         self.out_path = out_path
         self._t0 = time.time()
+
+    @property
+    def rows(self) -> List[Dict[str, Any]]:
+        return self._sink.events
 
     def log(self, step: int, **metrics: float) -> None:
         row = {"step": step, "wall_s": round(time.time() - self._t0, 3)}
         row.update({k: float(v) for k, v in metrics.items()})
-        self.rows.append(row)
+        self._sink.emit(row)
 
     def rolling_mean(self, key: str, window: int = 10) -> float:
         vals = [r[key] for r in self.rows if key in r][-window:]
@@ -57,17 +76,7 @@ class MetricLogger:
     def to_csv(self, path: Optional[str] = None) -> str:
         path = path or self.out_path
         assert path is not None, "no output path configured"
-        keys: List[str] = []
-        for r in self.rows:
-            for k in r:
-                if k not in keys:
-                    keys.append(k)
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=keys)
-            w.writeheader()
-            w.writerows(self.rows)
-        return path
+        return write_csv(path, self.rows)
 
 
 class Timer:
