@@ -1,0 +1,36 @@
+"""repro.analysis — contract-enforcing static analysis for this repo.
+
+The functional-core architecture (pure round steps under jit/scan/
+shard_map, NamedTuple carries, kernel/oracle bit-parity, float32
+trajectories, a lock-disciplined serving engine) is held up by invariants
+that nothing mechanical enforced until now. This package is that
+enforcement: an AST-based engine with a pluggable rule registry
+(:mod:`repro.analysis.rules`), per-line suppressions
+(``# repro-lint: disable=<rule>``), a committed baseline for
+grandfathered findings, text/JSON reporters, and a complementary
+``jax.eval_shape`` shape-lint (:mod:`repro.analysis.shapelint`).
+
+CLI: ``python -m repro.analysis src tests benchmarks`` — exits non-zero
+on any finding not in the baseline. See docs/INVARIANTS.md for the
+contracts and the rationale behind each rule.
+"""
+from repro.analysis.baseline import (
+    DEFAULT_BASELINE, load_baseline, split_findings, write_baseline,
+)
+from repro.analysis.core import (
+    DEFAULT_EXCLUDES, Finding, Project, SourceFile, load_project, run_rules,
+)
+from repro.analysis.report import render_json, render_text
+from repro.analysis.rules import (
+    DtypeWidthRule, KernelParityRule, LockGuardRule, PytreeCarryRule,
+    RULE_CLASSES, TracedPurityRule, default_rules, rule_names,
+)
+
+__all__ = [
+    "DEFAULT_BASELINE", "DEFAULT_EXCLUDES", "Finding", "Project",
+    "SourceFile", "RULE_CLASSES", "DtypeWidthRule", "KernelParityRule",
+    "LockGuardRule", "PytreeCarryRule", "TracedPurityRule",
+    "default_rules", "load_baseline", "load_project", "render_json",
+    "render_text", "rule_names", "run_rules", "split_findings",
+    "write_baseline",
+]

@@ -1,0 +1,94 @@
+"""CLI entry point: ``python -m repro.analysis [paths...]``.
+
+Exit status 0 iff no *new* findings (and, with ``--shape-lint``, no shape
+errors). Grandfathered findings live in the committed baseline file; the
+goal state is an empty baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.analysis.baseline import (
+    DEFAULT_BASELINE, load_baseline, split_findings, write_baseline,
+)
+from repro.analysis.core import DEFAULT_EXCLUDES, load_project, run_rules
+from repro.analysis.report import render_json, render_text
+from repro.analysis.rules import default_rules, rule_names
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="contract-enforcing static analysis (see "
+                    "docs/INVARIANTS.md)")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files/directories to analyze (default: src)")
+    p.add_argument("--root", default=".",
+                   help="repo root findings are reported relative to")
+    p.add_argument("--baseline", default=DEFAULT_BASELINE,
+                   help=f"baseline JSON path (default: {DEFAULT_BASELINE})")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline file; report every finding "
+                        "as new")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write all current findings to the baseline file "
+                        "and exit 0")
+    p.add_argument("--disable", action="append", default=[],
+                   metavar="RULE", help="disable a rule by name "
+                   "(repeatable)")
+    p.add_argument("--no-default-excludes", action="store_true",
+                   help="lint paths the default excludes would skip "
+                        "(e.g. the analysis_fixtures corpus)")
+    p.add_argument("--json", action="store_true",
+                   help="emit a JSON report instead of text")
+    p.add_argument("--shape-lint", action="store_true",
+                   help="also run jax.eval_shape checks over the public "
+                        "entry points (imports jax + repro)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print registered rule names and exit")
+    return p
+
+
+def main(argv: List[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for name in rule_names():
+            print(name)
+        return 0
+
+    unknown = set(args.disable) - set(rule_names())
+    if unknown:
+        print(f"error: unknown rule(s) in --disable: {sorted(unknown)}",
+              file=sys.stderr)
+        return 2
+
+    excludes = ("__pycache__",) if args.no_default_excludes else \
+        DEFAULT_EXCLUDES
+    project = load_project(args.paths, root=args.root, excludes=excludes)
+    findings = run_rules(project, default_rules(disable=args.disable))
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len({f.key() for f in findings})} finding key(s) "
+              f"to {args.baseline}")
+        return 0
+
+    baseline_keys = [] if args.no_baseline else load_baseline(args.baseline)
+    new, grandfathered, stale = split_findings(findings, baseline_keys)
+
+    shape_errors: List[str] = []
+    if args.shape_lint:
+        from repro.analysis.shapelint import run_shape_lint
+
+        shape_errors = run_shape_lint()
+
+    render = render_json if args.json else render_text
+    print(render(new, grandfathered, stale, shape_errors))
+    return 1 if (new or shape_errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Committed baseline of grandfathered findings.
+
+The baseline file is a JSON document holding finding *keys*
+(``rule::path::message`` — line numbers excluded, so pure line drift
+never churns it). The CLI fails only on findings absent from the
+baseline; baseline entries that no longer fire are reported as stale so
+the file shrinks monotonically toward the goal state: empty.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.core import Finding
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+def load_baseline(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or not isinstance(
+            data.get("findings"), list):
+        raise ValueError(
+            f"baseline {path} must be {{'findings': [keys...]}}")
+    return [str(k) for k in data["findings"]]
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    keys = sorted({f.key() for f in findings})
+    doc: Dict = {
+        "comment": ("grandfathered repro.analysis findings — new code "
+                    "must not add entries; prefer fixing or an inline "
+                    "`# repro-lint: disable=<rule>` with justification"),
+        "findings": keys,
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+
+def split_findings(
+    findings: Sequence[Finding], baseline_keys: Sequence[str]
+) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """(new, grandfathered, stale-baseline-keys)."""
+    baseline = set(baseline_keys)
+    new = [f for f in findings if f.key() not in baseline]
+    old = [f for f in findings if f.key() in baseline]
+    live = {f.key() for f in findings}
+    stale = sorted(k for k in baseline if k not in live)
+    return new, old, stale

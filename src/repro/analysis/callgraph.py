@@ -1,0 +1,309 @@
+"""Project-wide symbol index + traced-call-graph walker.
+
+The purity and dtype rules need to know which functions execute *inside* a
+``jit``/``scan``/``shard_map`` trace. That set is computed statically:
+
+  * every file under a source root maps to a dotted module name
+    (``src/repro/cf/server.py`` -> ``repro.cf.server``);
+  * per module we index top-level (and nested) function defs plus the
+    import table (``from repro.kernels import ops`` -> ``ops`` means module
+    ``repro.kernels.ops``), following one level of package re-export
+    (``from repro.compress import decode`` resolves through
+    ``repro/compress/__init__.py``'s own from-imports);
+  * traced ROOTS are (a) an explicit dotted-name list (the fused round
+    steps and their kernels), (b) any function carrying a ``jit`` /
+    ``pmap`` / ``shard_map`` decorator, and (c) any local function passed
+    by name into ``jax.jit(...)`` / ``jax.lax.scan(...)`` /
+    ``shard_map(...)`` — which picks up the simulation drivers' compiled
+    chunk closures without hand-listing them;
+  * the traced set is the BFS closure of project-resolvable calls from the
+    roots. Nested defs and lambdas of a traced function are walked as part
+    of its body.
+
+Resolution is best-effort by design: a call we cannot resolve (data-driven
+dispatch, closure variables, third-party code) is simply not followed.
+That keeps the walker precise — it never guesses — at the cost of relying
+on the explicit root list for entry points reached dynamically.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Project, SourceFile
+
+# decorator / wrapper identifiers that mark a function as a trace entry
+_TRACE_MARKERS = {"jit", "pmap", "shard_map", "eval_shape", "vmap", "scan"}
+
+
+def module_name_for(relpath: str) -> Optional[str]:
+    """Dotted module name for a repo-relative path, or None off-src."""
+    norm = relpath.replace(os.sep, "/")
+    if "src/" in norm:
+        norm = norm.split("src/", 1)[1]
+    elif not norm.startswith(("repro/", "repro.")):
+        return None
+    if not norm.endswith(".py"):
+        return None
+    norm = norm[: -len(".py")]
+    if norm.endswith("/__init__"):
+        norm = norm[: -len("/__init__")]
+    return norm.replace("/", ".")
+
+
+@dataclass
+class FunctionInfo:
+    """One function (possibly nested) in one module."""
+
+    module: str
+    qualname: str                # "outer.<locals>.inner" flattened to dots
+    node: ast.AST                # FunctionDef | AsyncFunctionDef
+    src: SourceFile
+
+    @property
+    def ref(self) -> Tuple[str, str]:
+        return (self.module, self.qualname)
+
+
+@dataclass
+class ModuleInfo:
+    name: str
+    src: SourceFile
+    functions: Dict[str, FunctionInfo] = field(default_factory=dict)
+    # local name -> dotted target: "ops" -> "repro.kernels.ops" (module
+    # import) or "decode" -> "repro.compress.decode" (from-import)
+    imports: Dict[str, str] = field(default_factory=dict)
+
+
+class ProjectIndex:
+    """Symbol tables + call resolution over a parsed :class:`Project`."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.modules: Dict[str, ModuleInfo] = {}
+        for src in project.files:
+            mod = module_name_for(src.relpath)
+            if mod is None:
+                continue
+            self.modules[mod] = _index_module(mod, src)
+
+    # ------------------------------------------------------------- #
+    # name resolution
+    # ------------------------------------------------------------- #
+    def dotted_name(self, node: ast.AST, mod: ModuleInfo) -> Optional[str]:
+        """Canonical dotted name of a Name/Attribute chain, import-resolved.
+
+        ``np.random.default_rng`` -> ``numpy.random.default_rng`` when the
+        module imported ``numpy as np``; unresolvable heads fall back to
+        their source spelling so bans on e.g. ``time.`` still match direct
+        ``import time`` modules.
+        """
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = mod.imports.get(node.id, node.id)
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    def resolve_call(
+        self, node: ast.Call, mod: ModuleInfo, scope: FunctionInfo
+    ) -> Optional[FunctionInfo]:
+        """The project function a call statically resolves to, if any."""
+        func = node.func
+        if isinstance(func, ast.Name):
+            # local / same-module function, else a from-import
+            name = func.id
+            sib = mod.functions.get(f"{scope.qualname}.{name}") \
+                or mod.functions.get(name)
+            if sib is not None:
+                return sib
+            return self._resolve_dotted(mod.imports.get(name))
+        if isinstance(func, ast.Attribute):
+            return self._resolve_dotted(self.dotted_name(func, mod))
+        return None
+
+    def _resolve_dotted(self, dotted: Optional[str],
+                        depth: int = 0) -> Optional[FunctionInfo]:
+        if dotted is None or "." not in dotted or depth > 4:
+            return None
+        mod_name, attr = dotted.rsplit(".", 1)
+        target = self.modules.get(mod_name)
+        if target is None:
+            return None
+        fn = target.functions.get(attr)
+        if fn is not None:
+            return fn
+        # one level of package re-export: __init__.py from-imports
+        return self._resolve_dotted(target.imports.get(attr), depth + 1)
+
+    # ------------------------------------------------------------- #
+    # traced closure
+    # ------------------------------------------------------------- #
+    def traced_functions(
+        self, roots: Sequence[str] = ()
+    ) -> Dict[Tuple[str, str], FunctionInfo]:
+        """BFS closure of the traced call graph.
+
+        ``roots`` are dotted names; ``repro.kernels.*`` means every public
+        top-level function of every module under that package. Decorator /
+        wrapper roots are discovered automatically.
+        """
+        queue: List[FunctionInfo] = []
+        for root in roots:
+            queue.extend(self._root_functions(root))
+        for mod in self.modules.values():
+            for fn in mod.functions.values():
+                if _is_marked_root(fn, mod, self):
+                    queue.append(fn)
+
+        traced: Dict[Tuple[str, str], FunctionInfo] = {}
+        while queue:
+            fn = queue.pop()
+            if fn.ref in traced:
+                continue
+            traced[fn.ref] = fn
+            mod = self.modules[fn.module]
+            for call in _calls_in(fn.node):
+                callee = self.resolve_call(call, mod, fn)
+                if callee is not None:
+                    queue.append(callee)
+        return traced
+
+    def _root_functions(self, root: str) -> List[FunctionInfo]:
+        if root.endswith(".*"):
+            prefix = root[:-2]
+            out: List[FunctionInfo] = []
+            for name, mod in self.modules.items():
+                if name == prefix or name.startswith(prefix + "."):
+                    out.extend(fn for qn, fn in mod.functions.items()
+                               if "." not in qn and not qn.startswith("_"))
+            return out
+        fn = self._resolve_dotted(root)
+        return [fn] if fn is not None else []
+
+
+def _index_module(name: str, src: SourceFile) -> ModuleInfo:
+    info = ModuleInfo(name=name, src=src)
+
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                info.imports[alias.asname or alias.name.split(".")[0]] = \
+                    alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            base = node.module
+            if node.level:  # relative import: anchor on this package
+                pkg = name.rsplit(".", node.level)[0]
+                base = f"{pkg}.{node.module}" if node.module else pkg
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                info.imports[alias.asname or alias.name] = \
+                    f"{base}.{alias.name}"
+
+    def collect(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                info.functions[qual] = FunctionInfo(
+                    module=name, qualname=qual, node=child, src=src)
+                collect(child, qual)
+            elif isinstance(child, ast.ClassDef):
+                # methods indexed as Class.method (not callable by bare name)
+                collect(child, f"{prefix}.{child.name}" if prefix
+                        else child.name)
+            elif not isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                collect(child, prefix)
+
+    collect(src.tree, "")
+    return info
+
+
+def _is_marked_root(fn: FunctionInfo, mod: ModuleInfo,
+                    index: ProjectIndex) -> bool:
+    """jit/pmap/shard_map decorator, or passed by name into jit/scan/..."""
+    node = fn.node
+    for dec in getattr(node, "decorator_list", []):
+        for sub in ast.walk(dec):
+            if isinstance(sub, ast.Name) and sub.id in _TRACE_MARKERS:
+                return True
+            if isinstance(sub, ast.Attribute) and sub.attr in _TRACE_MARKERS:
+                return True
+    # find Name references to this function used as an argument of a
+    # jit/scan/shard_map call anywhere in its own module
+    short = fn.qualname.rsplit(".", 1)[-1]
+    for call in _calls_in(mod.src.tree):
+        dotted = index.dotted_name(call.func, mod) or ""
+        tail = dotted.rsplit(".", 1)[-1]
+        if tail not in _TRACE_MARKERS:
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Name) and arg.id == short:
+                return True
+    return False
+
+
+def _calls_in(node: ast.AST) -> List[ast.Call]:
+    return [n for n in ast.walk(node) if isinstance(n, ast.Call)]
+
+
+def local_bindings(fn_node: ast.AST) -> Set[str]:
+    """Names bound inside a function body (params, assigns, loops, withs).
+
+    Used to separate trace-time-local container mutation (fine: invisible
+    outside the trace) from mutation of closure/global state (impure).
+    Nested function defs contribute their own params only to themselves,
+    but their assignments are conservatively counted as local here — the
+    purity rule walks the whole body at once.
+    """
+    names: Set[str] = set()
+    args = getattr(fn_node, "args", None)
+    if args is not None:
+        for a in (args.posonlyargs + args.args + args.kwonlyargs
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            names.add(a.arg)
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(sub.name)
+            sub_args = sub.args
+            for a in (sub_args.posonlyargs + sub_args.args
+                      + sub_args.kwonlyargs
+                      + ([sub_args.vararg] if sub_args.vararg else [])
+                      + ([sub_args.kwarg] if sub_args.kwarg else [])):
+                names.add(a.arg)
+        elif isinstance(sub, ast.Lambda):
+            for a in (sub.args.posonlyargs + sub.args.args
+                      + sub.args.kwonlyargs):
+                names.add(a.arg)
+        elif isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = sub.targets if isinstance(sub, ast.Assign) \
+                else [sub.target]
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        names.add(n.id)
+        elif isinstance(sub, (ast.For, ast.AsyncFor)):
+            for n in ast.walk(sub.target):
+                if isinstance(n, ast.Name):
+                    names.add(n.id)
+        elif isinstance(sub, (ast.With, ast.AsyncWith)):
+            for item in sub.items:
+                if item.optional_vars is not None:
+                    for n in ast.walk(item.optional_vars):
+                        if isinstance(n, ast.Name):
+                            names.add(n.id)
+        elif isinstance(sub, ast.comprehension):
+            for n in ast.walk(sub.target):
+                if isinstance(n, ast.Name):
+                    names.add(n.id)
+        elif isinstance(sub, (ast.Global, ast.Nonlocal)):
+            # declared non-local on purpose: NOT local
+            names.difference_update(sub.names)
+    return names

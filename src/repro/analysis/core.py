@@ -1,0 +1,173 @@
+"""Static-analysis engine core: source model, findings, suppressions.
+
+The engine is deliberately small: a :class:`Project` is a set of parsed
+Python files plus the repo root they are relative to; a rule is any object
+with a ``name``, a ``description`` and a ``check(project)`` generator; the
+engine runs every rule and filters the findings through per-line / per-file
+suppression comments. Everything contract-specific lives in
+:mod:`repro.analysis.rules`.
+
+Suppressions::
+
+    x = np.array(data)        # repro-lint: disable=dtype-width -- host stats
+    # repro-lint: disable-file=traced-purity -- host-only driver module
+
+``disable=`` applies to findings on its own line (or on the line above,
+so multi-line calls can carry the comment on their first line);
+``disable-file=`` anywhere in the file applies to the whole file. A
+suppression must name the rule(s) it silences — there is no bare
+"disable everything" form, so every exemption stays attributable. The
+``--`` tail is an optional free-form justification; CI treats an
+undocumented suppression the same as a documented one, but review should
+not.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+# paths containing any of these fragments are never linted by default —
+# the rule-fixture corpus deliberately violates every rule
+DEFAULT_EXCLUDES = ("__pycache__", "analysis_fixtures")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str        # rule name, e.g. "dtype-width"
+    path: str        # repo-relative posix path
+    line: int        # 1-based source line (0 = whole-file finding)
+    message: str
+
+    def key(self) -> str:
+        """Baseline identity: stable across pure line-number drift."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class SourceFile:
+    """One parsed source file with its suppression table."""
+
+    path: str                   # absolute
+    relpath: str                # repo-relative posix
+    text: str
+    tree: ast.Module
+    # line -> rules silenced on that line; "disable-file" lands in file_rules
+    line_rules: Dict[int, Set[str]] = field(default_factory=dict)
+    file_rules: Set[str] = field(default_factory=set)
+
+    @classmethod
+    def parse(cls, path: str, relpath: str) -> "SourceFile":
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+        tree = ast.parse(text, filename=path)
+        sf = cls(path=path, relpath=relpath, text=text, tree=tree)
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            # "-- justification" tail is free-form commentary, not a rule
+            spec = m.group(2).split("--")[0]
+            rules = {r.strip() for r in spec.split(",") if r.strip()}
+            if m.group(1) == "disable-file":
+                sf.file_rules |= rules
+            else:
+                sf.line_rules.setdefault(lineno, set()).update(rules)
+        return sf
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_rules:
+            return True
+        # a disable= comment silences its own line and the line below it,
+        # so a multi-line expression can carry the comment just above
+        for probe in (line, line - 1):
+            if rule in self.line_rules.get(probe, set()):
+                return True
+        return False
+
+
+@dataclass
+class Project:
+    """The lint unit: parsed files + the root their relpaths hang off."""
+
+    root: str
+    files: List[SourceFile]
+    parse_errors: List[Finding] = field(default_factory=list)
+
+    def by_relpath(self, relpath: str) -> Optional[SourceFile]:
+        for f in self.files:
+            if f.relpath == relpath:
+                return f
+        return None
+
+    def matching(self, prefix: str) -> List[SourceFile]:
+        return [f for f in self.files if f.relpath.startswith(prefix)]
+
+
+def _iter_py_files(path: str, excludes: Sequence[str]) -> Iterator[str]:
+    if os.path.isfile(path):
+        yield path
+        return
+    for dirpath, dirnames, filenames in os.walk(path):
+        dirnames[:] = sorted(
+            d for d in dirnames
+            if not any(e in os.path.join(dirpath, d) for e in excludes))
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                full = os.path.join(dirpath, name)
+                if not any(e in full for e in excludes):
+                    yield full
+
+
+def load_project(
+    paths: Sequence[str],
+    root: Optional[str] = None,
+    excludes: Sequence[str] = DEFAULT_EXCLUDES,
+) -> Project:
+    """Parse every ``.py`` under ``paths`` into a :class:`Project`.
+
+    ``root`` anchors the repo-relative paths findings and baselines use;
+    it defaults to the current working directory (CI runs from the repo
+    root). Unparseable files become parse-error findings instead of
+    aborting the run — a syntax error must fail the lint, not crash it.
+    """
+    root = os.path.abspath(root or os.getcwd())
+    files: List[SourceFile] = []
+    errors: List[Finding] = []
+    seen: Set[str] = set()
+    for p in paths:
+        for path in _iter_py_files(os.path.abspath(p), excludes):
+            if path in seen:
+                continue
+            seen.add(path)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            try:
+                files.append(SourceFile.parse(path, rel))
+            except SyntaxError as e:
+                errors.append(Finding(
+                    rule="parse-error", path=rel, line=e.lineno or 0,
+                    message=f"syntax error: {e.msg}"))
+    return Project(root=root, files=files, parse_errors=errors)
+
+
+def run_rules(project: Project, rules: Iterable) -> List[Finding]:
+    """Run every rule over the project; filter suppressed findings."""
+    findings: List[Finding] = list(project.parse_errors)
+    for rule in rules:
+        for finding in rule.check(project):
+            src = project.by_relpath(finding.path)
+            if src is not None and src.suppressed(finding.rule, finding.line):
+                continue
+            findings.append(finding)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings

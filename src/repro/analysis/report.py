@@ -1,0 +1,56 @@
+"""Text / JSON reporters for analysis findings."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from repro.analysis.core import Finding
+
+
+def render_text(
+    new: Sequence[Finding],
+    grandfathered: Sequence[Finding] = (),
+    stale_baseline: Sequence[str] = (),
+    shape_errors: Sequence[str] = (),
+) -> str:
+    lines: List[str] = []
+    for f in new:
+        lines.append(f.render())
+    for err in shape_errors:
+        lines.append(f"shape-lint: {err}")
+    if grandfathered:
+        lines.append(f"note: {len(grandfathered)} grandfathered finding(s) "
+                     f"suppressed by baseline")
+    if stale_baseline:
+        lines.append(f"note: {len(stale_baseline)} stale baseline entr"
+                     f"{'y' if len(stale_baseline) == 1 else 'ies'} no "
+                     f"longer fire(s) — prune the baseline:")
+        for key in stale_baseline:
+            lines.append(f"  stale: {key}")
+    total_bad = len(new) + len(shape_errors)
+    if total_bad:
+        lines.append(f"FAILED: {len(new)} new finding(s), "
+                     f"{len(shape_errors)} shape-lint error(s)")
+    else:
+        lines.append("OK: no new findings")
+    return "\n".join(lines)
+
+
+def render_json(
+    new: Sequence[Finding],
+    grandfathered: Sequence[Finding] = (),
+    stale_baseline: Sequence[str] = (),
+    shape_errors: Sequence[str] = (),
+) -> str:
+    def enc(f: Finding) -> Dict:
+        return {"rule": f.rule, "path": f.path, "line": f.line,
+                "message": f.message, "key": f.key()}
+
+    doc = {
+        "new": [enc(f) for f in new],
+        "grandfathered": [enc(f) for f in grandfathered],
+        "stale_baseline": list(stale_baseline),
+        "shape_errors": list(shape_errors),
+        "ok": not new and not shape_errors,
+    }
+    return json.dumps(doc, indent=2)

@@ -1,0 +1,37 @@
+"""Rule registry for the contract-enforcing static analysis.
+
+Each rule guards one of the repo's hand-enforced invariants (see
+docs/INVARIANTS.md). Default instances are built by :func:`default_rules`;
+tests and special runs can instantiate rule classes with their own
+scopes/roots.
+"""
+from repro.analysis.rules.dtype import DtypeWidthRule
+from repro.analysis.rules.locks import LockGuardRule
+from repro.analysis.rules.parity import KernelParityRule
+from repro.analysis.rules.purity import TracedPurityRule
+from repro.analysis.rules.pytree import PytreeCarryRule
+
+RULE_CLASSES = (
+    TracedPurityRule,
+    PytreeCarryRule,
+    KernelParityRule,
+    DtypeWidthRule,
+    LockGuardRule,
+)
+
+
+def default_rules(disable=()):
+    """One default-configured instance of every registered rule."""
+    disabled = set(disable)
+    return [cls() for cls in RULE_CLASSES if cls.name not in disabled]
+
+
+def rule_names():
+    return [cls.name for cls in RULE_CLASSES]
+
+
+__all__ = [
+    "DtypeWidthRule", "KernelParityRule", "LockGuardRule",
+    "PytreeCarryRule", "TracedPurityRule", "RULE_CLASSES",
+    "default_rules", "rule_names",
+]

@@ -1,0 +1,136 @@
+"""dtype-width: no implicit float64 in traced code or wire formats.
+
+The whole trajectory contract is float32 (JAX default, x64 disabled): a
+float64 leaking into a traced function or a codec either crashes under
+jit (dtype mismatch against the float32 carry) or — worse — silently
+doubles wire bytes and breaks the bit-parity tests only on machines with
+x64 enabled. Three checks, two scopes:
+
+STRICT scope — functions in the traced call graph (same walker as
+traced-purity) plus every function in the wire-format and kernel modules
+(``repro.compress``, ``repro.kernels``):
+
+  * ``float64`` / ``double`` dtype references (``np.float64``,
+    ``jnp.float64``, ``dtype="float64"``);
+  * ``dtype=float`` — the builtin ``float`` is float64;
+  * bare ``np.array`` / ``np.asarray`` / ``np.zeros`` / ``np.ones`` /
+    ``np.empty`` / ``np.full`` without an explicit dtype — numpy defaults
+    to float64 and the value then enters the traced graph.
+
+HOST scope — every other linted file (drivers, benchmarks, tests):
+only the first two checks. Host-side numpy statistics are allowed to be
+float64 (that is numpy's native accumulator width and several host
+oracles — ``core/regret.py`` — use it deliberately against the traced
+float32 fold); such deliberate uses in strict scope carry inline
+suppressions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Sequence, Set, Tuple
+
+from repro.analysis.callgraph import ProjectIndex, module_name_for
+from repro.analysis.core import Finding, Project
+from repro.analysis.rules.purity import DEFAULT_ROOTS
+
+DEFAULT_STRICT_MODULES = ("repro.compress", "repro.kernels")
+
+_F64_TAILS = {"float64", "double", "complex128"}
+_BARE_DEFAULT_F64 = {"array", "asarray", "zeros", "ones", "empty", "full",
+                     "zeros_like", "ones_like", "empty_like", "full_like"}
+
+
+class DtypeWidthRule:
+    name = "dtype-width"
+    description = ("no implicit float64 promotion in traced code or wire "
+                   "codecs: float64 dtype refs, dtype=float, and bare "
+                   "np.array-family constructors are flagged")
+
+    def __init__(self, roots: Sequence[str] = DEFAULT_ROOTS,
+                 strict_modules: Sequence[str] = DEFAULT_STRICT_MODULES):
+        self.roots = tuple(roots)
+        self.strict_modules = tuple(strict_modules)
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        index = ProjectIndex(project)
+        traced = index.traced_functions(self.roots)
+
+        # strict-scope line spans: traced function bodies + whole strict
+        # modules; everything else linted is host scope
+        strict_spans: dict = {}
+        for fn in traced.values():
+            spans = strict_spans.setdefault(fn.src.relpath, [])
+            end = getattr(fn.node, "end_lineno", fn.node.lineno)
+            spans.append((fn.node.lineno, end))
+        strict_files: Set[str] = set()
+        for mod_name, mod in index.modules.items():
+            if any(mod_name == s or mod_name.startswith(s + ".")
+                   for s in self.strict_modules):
+                strict_files.add(mod.src.relpath)
+
+        for src in project.files:
+            mod = index.modules.get(module_name_for(src.relpath) or "")
+            for node in ast.walk(src.tree):
+                line = getattr(node, "lineno", None)
+                if line is None:
+                    continue
+                strict = src.relpath in strict_files or any(
+                    a <= line <= b
+                    for a, b in strict_spans.get(src.relpath, ()))
+                for found_line, msg in self._check_node(node, mod, index,
+                                                        strict):
+                    yield Finding(rule=self.name, path=src.relpath,
+                                  line=found_line, message=msg)
+
+    # ------------------------------------------------------------- #
+    def _check_node(self, node: ast.AST, mod, index: ProjectIndex,
+                    strict: bool) -> Iterator[Tuple[int, str]]:
+        # float64 attribute references: np.float64 / jnp.float64
+        if isinstance(node, ast.Attribute) and node.attr in _F64_TAILS:
+            yield node.lineno, (
+                f"64-bit dtype reference `.{node.attr}` — trajectories "
+                f"and wire formats are float32; use an explicit 32-bit "
+                f"dtype (suppress if this is a deliberate host-side "
+                f"oracle)")
+            return
+        if not isinstance(node, ast.Call):
+            return
+        # dtype=float / dtype="float64" keywords on any call
+        for kw in node.keywords:
+            if kw.arg != "dtype":
+                continue
+            if isinstance(kw.value, ast.Name) and kw.value.id == "float":
+                yield node.lineno, (
+                    "`dtype=float` is float64 — name the width "
+                    "(jnp.float32) explicitly")
+            elif isinstance(kw.value, ast.Constant) and \
+                    str(kw.value.value) in ("float64", "double"):
+                yield node.lineno, (
+                    f"`dtype={kw.value.value!r}` — trajectories and wire "
+                    f"formats are float32")
+        if not strict:
+            return
+        # bare numpy constructors defaulting to float64 (strict scope only)
+        dotted = None
+        if mod is not None:
+            dotted = index.dotted_name(node.func, mod)
+        elif isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id in ("np", "numpy"):
+            dotted = f"numpy.{node.func.attr}"
+        if not dotted or not dotted.startswith("numpy."):
+            return
+        tail = dotted.rsplit(".", 1)[-1]
+        if tail not in _BARE_DEFAULT_F64:
+            return
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            return
+        # positional dtype: np.zeros(shape, np.int32) etc.
+        max_args = {"array": 2, "asarray": 2, "zeros": 2, "ones": 2,
+                    "empty": 2, "full": 3, "zeros_like": 2, "ones_like": 2,
+                    "empty_like": 2, "full_like": 3}[tail]
+        if len(node.args) >= max_args:
+            return
+        yield node.lineno, (
+            f"bare `{dotted}(...)` without dtype defaults to float64 in "
+            f"traced/wire scope — pass an explicit dtype")

@@ -1,0 +1,129 @@
+"""lock-guard: shared mutable attributes only under ``with self._lock``.
+
+The serving engine's swap/read/metrics contract (PR 6/7): the model/
+version pair and every counter the Prometheus scrape reports change only
+together, under one lock, so a scrape sees a consistent cut and versions
+are monotone under concurrent readers. This rule generalizes that to any
+class that builds a ``threading.Lock``/``RLock`` in ``__init__``:
+
+  * GUARDED attributes are the ``self.x`` names the class *writes outside
+    __init__* — mutable shared state by construction (attributes only
+    ever assigned in ``__init__`` are init-frozen configuration and stay
+    unguarded);
+  * every read or write of a guarded attribute in any method other than
+    ``__init__`` must sit lexically inside a ``with self.<lock>`` block
+    (nested functions inherit the enclosing with-blocks — the lexical
+    rule intentionally over-approximates: a closure that escapes the
+    lock scope must be suppressed explicitly with a justification).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.core import Finding, Project, SourceFile
+
+_LOCK_TYPES = {"Lock", "RLock"}
+
+
+class LockGuardRule:
+    name = "lock-guard"
+    description = ("attributes a lock-owning class mutates outside "
+                   "__init__ may only be touched inside `with self.<lock>` "
+                   "blocks")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for src in project.files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ClassDef):
+                    yield from self._check_class(node, src)
+
+    # ------------------------------------------------------------- #
+    def _check_class(self, cls: ast.ClassDef,
+                     src: SourceFile) -> Iterator[Finding]:
+        methods = [n for n in cls.body
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        init = next((m for m in methods if m.name == "__init__"), None)
+        if init is None:
+            return
+        locks = _lock_attrs(init)
+        if not locks:
+            return
+        guarded = _guarded_attrs(methods, locks)
+        if not guarded:
+            return
+        for method in methods:
+            if method.name == "__init__":
+                continue
+            yield from self._check_method(method, src, cls.name, locks,
+                                          guarded)
+
+    def _check_method(self, method, src: SourceFile, cls_name: str,
+                      locks: Set[str],
+                      guarded: Set[str]) -> Iterator[Finding]:
+        def walk(node: ast.AST, locked: bool) -> Iterator[Finding]:
+            for child in ast.iter_child_nodes(node):
+                child_locked = locked
+                if isinstance(child, (ast.With, ast.AsyncWith)) and \
+                        _takes_lock(child, locks):
+                    child_locked = True
+                if isinstance(child, ast.Attribute) and \
+                        isinstance(child.value, ast.Name) and \
+                        child.value.id == "self" and \
+                        child.attr in guarded and not child_locked:
+                    access = "write" if isinstance(
+                        child.ctx, (ast.Store, ast.Del)) else "read"
+                    yield Finding(
+                        rule=self.name, path=src.relpath, line=child.lineno,
+                        message=(f"{access} of `self.{child.attr}` in "
+                                 f"`{cls_name}.{method.name}` outside "
+                                 f"`with self.{sorted(locks)[0]}` — "
+                                 f"shared mutable state must be "
+                                 f"lock-guarded"))
+                yield from walk(child, child_locked)
+
+        yield from walk(method, False)
+
+
+def _lock_attrs(init) -> Set[str]:
+    """self attrs assigned a threading.Lock()/RLock() in __init__."""
+    locks: Set[str] = set()
+    for node in ast.walk(init):
+        if not isinstance(node, ast.Assign) or \
+                not isinstance(node.value, ast.Call):
+            continue
+        func = node.value.func
+        name = func.attr if isinstance(func, ast.Attribute) else \
+            getattr(func, "id", None)
+        if name not in _LOCK_TYPES:
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and \
+                    isinstance(t.value, ast.Name) and t.value.id == "self":
+                locks.add(t.attr)
+    return locks
+
+
+def _guarded_attrs(methods: List, locks: Set[str]) -> Set[str]:
+    """self attrs written (Store/AugStore/Del) outside __init__."""
+    guarded: Set[str] = set()
+    for method in methods:
+        if method.name == "__init__":
+            continue
+        for node in ast.walk(method):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, (ast.Store, ast.Del)) and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id == "self" and node.attr not in locks:
+                guarded.add(node.attr)
+    return guarded
+
+
+def _takes_lock(node, locks: Set[str]) -> bool:
+    for item in node.items:
+        expr = item.context_expr
+        if isinstance(expr, ast.Attribute) and \
+                isinstance(expr.value, ast.Name) and \
+                expr.value.id == "self" and expr.attr in locks:
+            return True
+    return False

@@ -1,0 +1,113 @@
+"""kernel-parity: every Pallas kernel must have a ref.py oracle + a test.
+
+The bit-parity contract from PRs 2/4/6: each public kernel in
+``src/repro/kernels/*.py`` has a pure-jnp oracle in ``kernels/ref.py``
+and at least one test exercises the pair, so a new kernel cannot land
+without the machinery that keeps it honest on every backend.
+
+Oracle mapping: ``<kernel>_ref`` by default; kernels whose oracle has a
+different name declare it in a module-level ``PARITY_ORACLES`` dict
+(``payload_score.py`` maps its three fused scoring kernels onto
+``wire_topn_ref``). The test check is textual on purpose — it asks "does
+any test file mention both this kernel (or its module) and its oracle?",
+which is robust to how the test imports them.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.analysis.core import Finding, Project, SourceFile
+
+DEFAULT_KERNELS_DIR = "src/repro/kernels"
+DEFAULT_TESTS_DIR = "tests"
+_NON_KERNEL_FILES = {"__init__.py", "ops.py", "ref.py"}
+
+
+class KernelParityRule:
+    name = "kernel-parity"
+    description = ("every public kernel in kernels/*.py needs a ref.py "
+                   "oracle (default <name>_ref, or a PARITY_ORACLES "
+                   "entry) and at least one test referencing both")
+
+    def __init__(self, kernels_dir: str = DEFAULT_KERNELS_DIR,
+                 tests_dir: str = DEFAULT_TESTS_DIR):
+        self.kernels_dir = kernels_dir.rstrip("/")
+        self.tests_dir = tests_dir.rstrip("/")
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        kernel_files = [
+            f for f in project.matching(self.kernels_dir + "/")
+            if os.path.basename(f.relpath) not in _NON_KERNEL_FILES
+            and "/" not in f.relpath[len(self.kernels_dir) + 1:]]
+        if not kernel_files:
+            return
+        ref_file = project.by_relpath(f"{self.kernels_dir}/ref.py")
+        ref_defs = _top_level_defs(ref_file) if ref_file else set()
+        test_files = [f for f in project.matching(self.tests_dir + "/")
+                      if os.path.basename(f.relpath).startswith("test_")]
+
+        for src in kernel_files:
+            oracles = _parity_oracles(src)
+            for fn in _public_kernels(src):
+                oracle = oracles.get(fn.name, f"{fn.name}_ref")
+                if ref_file is None:
+                    yield Finding(
+                        rule=self.name, path=src.relpath, line=fn.lineno,
+                        message=(f"kernel `{fn.name}` has no oracle: "
+                                 f"{self.kernels_dir}/ref.py not found"))
+                    continue
+                if oracle not in ref_defs:
+                    yield Finding(
+                        rule=self.name, path=src.relpath, line=fn.lineno,
+                        message=(f"kernel `{fn.name}` has no ref.py oracle "
+                                 f"`{oracle}` (add the oracle, or map the "
+                                 f"kernel in PARITY_ORACLES)"))
+                    continue
+                if test_files and not _covered(fn.name, src, oracle,
+                                               test_files):
+                    yield Finding(
+                        rule=self.name, path=src.relpath, line=fn.lineno,
+                        message=(f"kernel `{fn.name}` / oracle `{oracle}` "
+                                 f"pair is not exercised by any test under "
+                                 f"{self.tests_dir}/ — add a parity test "
+                                 f"importing both"))
+
+
+def _public_kernels(src: SourceFile) -> List[ast.FunctionDef]:
+    return [node for node in src.tree.body
+            if isinstance(node, ast.FunctionDef)
+            and not node.name.startswith("_")]
+
+
+def _top_level_defs(src: Optional[SourceFile]) -> set:
+    if src is None:
+        return set()
+    return {node.name for node in src.tree.body
+            if isinstance(node, ast.FunctionDef)}
+
+
+def _parity_oracles(src: SourceFile) -> Dict[str, str]:
+    """Module-level ``PARITY_ORACLES = {"kernel": "oracle_ref", ...}``."""
+    for node in src.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "PARITY_ORACLES" \
+                and isinstance(node.value, ast.Dict):
+            out: Dict[str, str] = {}
+            for k, v in zip(node.value.keys, node.value.values):
+                if isinstance(k, ast.Constant) and isinstance(v,
+                                                              ast.Constant):
+                    out[str(k.value)] = str(v.value)
+            return out
+    return {}
+
+
+def _covered(kernel: str, src: SourceFile, oracle: str,
+             test_files: Sequence[SourceFile]) -> bool:
+    module = os.path.basename(src.relpath)[:-3]
+    for tf in test_files:
+        if oracle in tf.text and (kernel in tf.text or module in tf.text):
+            return True
+    return False

@@ -1,0 +1,173 @@
+"""traced-purity: no host effects inside jit/scan/shard_map-traced code.
+
+The functional core's contract (PR 1 onward): everything reachable from
+the fused round steps, the scan chunk bodies and the Pallas kernels is a
+pure function of its inputs. This rule walks the traced call graph
+(:mod:`repro.analysis.callgraph`) and flags:
+
+  * host clocks / host RNG / host I/O calls (``time.*``, ``np.random.*``,
+    stdlib ``random.*``, ``print``/``open``/``input``/``breakpoint``) —
+    each would be baked in at trace time or fire per-trace, silently
+    desynchronizing the scan/python/shard/async bit-parity contracts;
+  * mutation of state the function does not own — ``global`` /
+    ``nonlocal`` declarations and mutating method calls
+    (``.append``/``.update``/...) or subscript-stores on names that are
+    not bound inside the function (trace-time mutation of *local*
+    containers is fine and idiomatic: building block lists for
+    ``jnp.stack``);
+  * ``io_callback`` / ``jax.debug.print`` / ``jax.debug.callback``
+    anywhere outside the sanctioned batched-telemetry module — the obs
+    subsystem's zero-overhead-when-off contract allows exactly one
+    batched, ordered callback per compiled chunk, emitted by
+    ``repro.federated.simulation`` (this sub-check is module-wide, not
+    call-graph-scoped: an unsanctioned callback is wrong wherever it
+    hides).
+
+``jax.random.*`` is the sanctioned traced RNG and is never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Sequence, Tuple
+
+from repro.analysis.callgraph import (
+    FunctionInfo, ProjectIndex, local_bindings,
+)
+from repro.analysis.core import Finding, Project
+
+# entry points traced by jit/lax.scan/shard_map that no decorator marks:
+# the fused round steps (called inside the drivers' compiled closures)
+# and every public Pallas kernel / kernel dispatcher
+DEFAULT_ROOTS = (
+    "repro.cf.server.server_round_step",
+    "repro.cf.server.server_round_step_async",
+    "repro.kernels.*",
+)
+
+# modules allowed to host the batched telemetry io_callback
+DEFAULT_SANCTIONED_CALLBACKS = ("repro.federated.simulation",)
+
+_BANNED_PREFIXES: Tuple[Tuple[str, str], ...] = (
+    ("time.", "host clock read"),
+    ("numpy.random.", "host RNG"),
+    ("random.", "host RNG"),
+    ("datetime.", "host clock read"),
+    ("builtins.print", "host I/O"),
+    ("builtins.open", "host I/O"),
+    ("builtins.input", "host I/O"),
+    ("builtins.breakpoint", "host debugger"),
+)
+
+_CALLBACK_TAILS = {"io_callback", "pure_callback"}
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "clear",
+             "update", "setdefault", "add", "discard", "popitem",
+             "appendleft", "extendleft"}
+
+
+class TracedPurityRule:
+    name = "traced-purity"
+    description = ("functions reachable from jit/scan/shard_map entry "
+                   "points must be pure: no host clocks/RNG/I-O, no "
+                   "mutation of non-local state, no unsanctioned "
+                   "host callbacks")
+
+    def __init__(self, roots: Sequence[str] = DEFAULT_ROOTS,
+                 sanctioned_callback_modules: Sequence[str] =
+                 DEFAULT_SANCTIONED_CALLBACKS):
+        self.roots = tuple(roots)
+        self.sanctioned = tuple(sanctioned_callback_modules)
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        index = ProjectIndex(project)
+        traced = index.traced_functions(self.roots)
+        for fn in traced.values():
+            yield from self._check_function(fn, index)
+        # module-wide callback discipline (independent of the call graph)
+        for mod_name, mod in sorted(index.modules.items()):
+            if any(mod_name == s or mod_name.startswith(s + ".")
+                   for s in self.sanctioned):
+                continue
+            if not mod_name.startswith("repro."):
+                continue
+            for call in ast.walk(mod.src.tree):
+                if not isinstance(call, ast.Call):
+                    continue
+                dotted = index.dotted_name(call.func, mod) or ""
+                tail = dotted.rsplit(".", 1)[-1]
+                if tail in _CALLBACK_TAILS or dotted.endswith(
+                        ("jax.debug.print", "jax.debug.callback",
+                         "debug.print", "debug.callback")):
+                    yield Finding(
+                        rule=self.name, path=mod.src.relpath,
+                        line=call.lineno,
+                        message=(f"host callback `{dotted}` outside the "
+                                 f"sanctioned batched-telemetry path "
+                                 f"({', '.join(self.sanctioned)})"))
+
+    # ------------------------------------------------------------- #
+    def _check_function(self, fn: FunctionInfo,
+                        index: ProjectIndex) -> Iterator[Finding]:
+        mod = index.modules[fn.module]
+        local = local_bindings(fn.node)
+        short = fn.qualname.rsplit(".", 1)[-1]
+
+        for node in ast.walk(fn.node):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                kind = "global" if isinstance(node, ast.Global) else \
+                    "nonlocal"
+                yield Finding(
+                    rule=self.name, path=fn.src.relpath, line=node.lineno,
+                    message=(f"`{kind} {', '.join(node.names)}` in traced "
+                             f"function `{short}` mutates state outside "
+                             f"the trace"))
+            elif isinstance(node, ast.Call):
+                yield from self._check_call(node, fn, mod, index, local,
+                                            short)
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    # x[i] = v / x.attr = v where x is a free variable
+                    base = t
+                    while isinstance(base, (ast.Subscript, ast.Attribute)):
+                        base = base.value
+                    if (isinstance(base, ast.Name) and base is not t
+                            and base.id not in local
+                            and base.id != "self"
+                            and base.id not in mod.imports):
+                        yield Finding(
+                            rule=self.name, path=fn.src.relpath,
+                            line=node.lineno,
+                            message=(f"traced function `{short}` stores "
+                                     f"into free variable `{base.id}` — "
+                                     f"mutation of non-local state"))
+
+    def _check_call(self, node: ast.Call, fn: FunctionInfo, mod, index,
+                    local, short) -> Iterator[Finding]:
+        dotted = index.dotted_name(node.func, mod)
+        if dotted is not None:
+            canon = dotted
+            if canon in ("print", "open", "input", "breakpoint"):
+                canon = f"builtins.{canon}"
+            if not canon.startswith("jax."):
+                for prefix, why in _BANNED_PREFIXES:
+                    if canon == prefix or canon.startswith(prefix) \
+                            or canon == prefix.rstrip("."):
+                        yield Finding(
+                            rule=self.name, path=fn.src.relpath,
+                            line=node.lineno,
+                            message=(f"{why} `{dotted}` inside traced "
+                                     f"function `{short}`"))
+                        break
+        # container mutation on a free variable: free.append(...)
+        func = node.func
+        if (isinstance(func, ast.Attribute) and func.attr in _MUTATORS
+                and isinstance(func.value, ast.Name)):
+            name = func.value.id
+            if name not in local and name != "self" \
+                    and name not in mod.imports:
+                yield Finding(
+                    rule=self.name, path=fn.src.relpath, line=node.lineno,
+                    message=(f"traced function `{short}` calls "
+                             f"`{name}.{func.attr}(...)` on a free "
+                             f"variable — mutation of non-local state"))

@@ -1,0 +1,207 @@
+"""pytree-carry: scan-carry NamedTuples may hold only pytree-leaf fields.
+
+Every state object that rides a ``lax.scan`` carry or crosses a
+``shard_map`` boundary (``ServerState``, ``TelemetryState``, the selector
+/ codec / optimizer states) must be a pytree whose leaves are arrays (or
+nested registered pytrees): a stray ``int``/``str``/config field either
+gets silently promoted to a weak-typed traced array (changing dtypes
+mid-trajectory) or breaks the carry structure equality that ``lax.scan``
+requires. Static configuration belongs in the step closure, not the
+carry.
+
+Carry classes are discovered by convention + closure: every NamedTuple
+class named ``*State`` or ``*Wire`` under the linted sources, an explicit
+extra list for the scan ``ys`` pytrees (``RoundAux``, ``RoundTelemetry``,
+``EncodedSnapshot``), and — transitively — any NamedTuple referenced from
+a carry field annotation (that is how ``PendingAttribution`` and
+``BTSState`` get checked without being listed).
+
+Allowed field annotations: ``jax.Array`` / ``jnp.ndarray`` / ``Array``,
+``Any`` (a documented dynamic sub-pytree, e.g. ``ServerState.codec``),
+``Optional``/``Union`` of allowed types, ``Dict``/``List``/``Tuple``
+containers of allowed types (registered pytree nodes), and other carry
+NamedTuples.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, Project, SourceFile
+
+DEFAULT_EXTRA_CARRIES = ("RoundAux", "RoundTelemetry", "EncodedSnapshot")
+DEFAULT_SUFFIXES = ("State", "Wire")
+
+_ARRAY_NAMES = {"Array", "ndarray", "ArrayLike"}
+_SCALARS = {"int", "float", "bool", "str", "bytes", "complex", "object"}
+_CONTAINERS = {"Dict", "dict", "List", "list", "Tuple", "tuple",
+               "Sequence", "Mapping", "FrozenSet", "frozenset", "Set",
+               "set"}
+_WRAPPERS = {"Optional", "Union"}
+
+
+@dataclass
+class _ClassInfo:
+    name: str
+    node: ast.ClassDef
+    src: SourceFile
+    fields: List[Tuple[str, Optional[ast.AST], int]]  # (name, annot, line)
+
+
+class PytreeCarryRule:
+    name = "pytree-carry"
+    description = ("NamedTuple classes used as scan carries / shard_map "
+                   "operands must have only array-or-registered-pytree "
+                   "fields; static config goes in the step closure")
+
+    def __init__(self, extra_carries: Sequence[str] = DEFAULT_EXTRA_CARRIES,
+                 suffixes: Sequence[str] = DEFAULT_SUFFIXES):
+        self.extra = set(extra_carries)
+        self.suffixes = tuple(suffixes)
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        classes, aliases = _collect(project)
+        # roots: suffix-matched + explicit; closure over field annotations
+        todo = [c for c in classes.values()
+                if c.name.endswith(self.suffixes) or c.name in self.extra]
+        seen: Set[str] = set()
+        while todo:
+            cls = todo.pop()
+            if cls.name in seen:
+                continue
+            seen.add(cls.name)
+            for fname, annot, line in cls.fields:
+                problems, refs = _validate(annot, classes, aliases)
+                for ref in refs:
+                    if ref.name not in seen:
+                        todo.append(ref)
+                for why in problems:
+                    yield Finding(
+                        rule=self.name, path=cls.src.relpath, line=line,
+                        message=(f"carry NamedTuple `{cls.name}` field "
+                                 f"`{fname}` {why}"))
+
+
+def _collect(project: Project):
+    """All NamedTuple class defs + module-level type aliases, by name."""
+    classes: Dict[str, _ClassInfo] = {}
+    aliases: Dict[str, ast.AST] = {}
+    for src in project.files:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ClassDef) and _is_namedtuple(node):
+                fields: List[Tuple[str, Optional[ast.AST], int]] = []
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) and \
+                            isinstance(stmt.target, ast.Name):
+                        fields.append((stmt.target.id, stmt.annotation,
+                                       stmt.lineno))
+                classes[node.name] = _ClassInfo(
+                    name=node.name, node=node, src=src, fields=fields)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                # module-level alias: SelectorState = Union[...]
+                aliases.setdefault(node.targets[0].id, node.value)
+            elif isinstance(node, ast.ImportFrom):
+                # import renames: BTSState as BanditState
+                for alias in node.names:
+                    if alias.asname and alias.asname != alias.name:
+                        aliases.setdefault(
+                            alias.asname,
+                            ast.Name(id=alias.name, ctx=ast.Load()))
+    return classes, aliases
+
+
+def _is_namedtuple(node: ast.ClassDef) -> bool:
+    for base in node.bases:
+        name = base.attr if isinstance(base, ast.Attribute) else \
+            getattr(base, "id", None)
+        if name == "NamedTuple":
+            return True
+    return False
+
+
+def _tail_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _validate(
+    annot: Optional[ast.AST],
+    classes: Dict[str, _ClassInfo],
+    aliases: Dict[str, ast.AST],
+    depth: int = 0,
+) -> Tuple[List[str], List[_ClassInfo]]:
+    """(problem descriptions, referenced NamedTuple classes to recurse)."""
+    if annot is None:
+        return ["has no type annotation (annotate the pytree leaf type)"], []
+    if depth > 6:
+        return [], []
+
+    # string annotation ("ServingModel") — parse and recurse
+    if isinstance(annot, ast.Constant):
+        if isinstance(annot.value, str):
+            try:
+                parsed = ast.parse(annot.value, mode="eval").body
+            except SyntaxError:
+                return [f"has unparseable annotation {annot.value!r}"], []
+            return _validate(parsed, classes, aliases, depth + 1)
+        if annot.value is None:    # NoneType half of Optional[...]
+            return [], []
+        return [f"has non-type annotation {annot.value!r}"], []
+
+    name = _tail_name(annot)
+    if name is not None and not isinstance(annot, ast.Subscript):
+        if name == "Any" or name in _ARRAY_NAMES:
+            return [], []
+        if name in _SCALARS:
+            return [(f"is annotated `{name}` — a Python scalar is not an "
+                     f"array leaf; make it a () jax.Array or hang it off "
+                     f"the static step config")], []
+        if name in ("Callable",):
+            return [(f"is annotated `{name}` — callables cannot cross a "
+                     f"scan/shard_map boundary")], []
+        if name in classes:
+            return [], [classes[name]]
+        if name in aliases:
+            return _validate(aliases[name], classes, aliases, depth + 1)
+        if name in _CONTAINERS:
+            return [], []          # unparameterized container: trust it
+        # unknown external type (e.g. chex.Array): give it the benefit of
+        # the doubt only when it *looks* like an array alias
+        if name.endswith(("Array", "Params")):
+            return [], []
+        return [(f"is annotated `{name}` — not a known array type, carry "
+                 f"NamedTuple or registered pytree (suppress with a "
+                 f"`# repro-lint: disable=pytree-carry` if deliberate)")], []
+
+    if isinstance(annot, ast.Subscript):
+        head = _tail_name(annot.value)
+        inner = annot.slice
+        parts = list(inner.elts) if isinstance(inner, ast.Tuple) else [inner]
+        if head in _WRAPPERS or head in _CONTAINERS:
+            problems: List[str] = []
+            refs: List[_ClassInfo] = []
+            for part in parts:
+                if isinstance(part, ast.Constant) and part.value is Ellipsis:
+                    continue
+                # dict keys are static structure, not leaves
+                if head in ("Dict", "dict", "Mapping") and part is parts[0]:
+                    continue
+                p, r = _validate(part, classes, aliases, depth + 1)
+                problems.extend(p)
+                refs.extend(r)
+            return problems, refs
+        if head in aliases:
+            return _validate(aliases[head], classes, aliases, depth + 1)
+        return [f"has unsupported generic annotation `{ast.dump(annot)[:40]}`"], []
+
+    if isinstance(annot, ast.BinOp):   # PEP 604: X | Y
+        p1, r1 = _validate(annot.left, classes, aliases, depth + 1)
+        p2, r2 = _validate(annot.right, classes, aliases, depth + 1)
+        return p1 + p2, r1 + r2
+
+    return [], []

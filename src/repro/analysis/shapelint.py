@@ -1,0 +1,211 @@
+"""shape-lint: abstract-interpretation checks over the public entry points.
+
+``jax.eval_shape`` runs the real tracing machinery — every shape rule,
+dtype promotion and pytree-structure requirement — without executing a
+single flop. This module drives the fused round steps (sync + async, with
+and without telemetry), the compressed serving read path and the
+telemetry fold over a small grid of (M, K, Theta) shapes and asserts the
+contracts the rest of the repo relies on:
+
+  * the scan-carry invariant: ``server_round_step`` returns a state with
+    the SAME pytree structure, leaf shapes and leaf dtypes it was given
+    (anything else cannot ride ``lax.scan``);
+  * the trajectory dtype contract: Q stays float32, round/byte counters
+    stay int32/float32 — a float64 or fp16 leak surfaces here in seconds;
+  * the wire read path: ``wire_topn`` returns ``((B, N) float32,
+    (B, N) int32)`` for every codec;
+  * telemetry rows are exactly ``len(TELEMETRY_FIELDS)`` float32 wide and
+    the telemetry fold preserves its own carry structure.
+
+Pure shape drift (a refactor changing an output rank, an accidental
+promotion) fails the lint long before a trajectory-level test would
+notice.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+# (M, K, Theta) grid — small on purpose: eval_shape cost is trace cost
+DEFAULT_GRID: Tuple[Tuple[int, int, int], ...] = (
+    (64, 8, 8),
+    (128, 16, 4),
+)
+DEFAULT_CODECS = ("fp32", "int8", "topk")
+DEFAULT_STRATEGIES = ("bts", "random")
+
+
+def _leaf_sig(x):
+    return (tuple(x.shape), str(x.dtype))
+
+
+def _tree_sig(tree):
+    import jax
+
+    return jax.tree.map(_leaf_sig, tree)
+
+
+def _expect(errors: List[str], cond: bool, ctx: str, msg: str) -> None:
+    if not cond:
+        errors.append(f"{ctx}: {msg}")
+
+
+def run_shape_lint(
+    grid: Sequence[Tuple[int, int, int]] = DEFAULT_GRID,
+    codecs: Sequence[str] = DEFAULT_CODECS,
+    strategies: Sequence[str] = DEFAULT_STRATEGIES,
+) -> List[str]:
+    """Run every shape check; return human-readable error strings."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cf.model import CFConfig
+    from repro.cf.server import (
+        FCFServerConfig, server_init, server_round_step,
+        server_round_step_async,
+    )
+    from repro.compress import CodecConfig, encode
+    from repro.core.selector import SelectorConfig
+    from repro.kernels.ref import wire_topn_ref
+    from repro.obs.telemetry import (
+        TELEMETRY_FIELDS, telemetry_state_init, telemetry_round,
+    )
+
+    errors: List[str] = []
+    f32 = jnp.float32
+
+    for (m, k, theta) in grid:
+        m_s = max(2, m // 4)
+        cf_cfg = CFConfig(num_users=theta, num_items=m, num_factors=k)
+        srv_cfg = FCFServerConfig(theta=theta)
+        q0 = jax.ShapeDtypeStruct((m, k), f32)
+        key0 = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        cohort = jax.ShapeDtypeStruct((theta, m), f32)
+
+        for strategy in strategies:
+            sel_cfg = SelectorConfig(strategy=strategy, num_arms=m,
+                                     num_select=m_s, dim=k)
+            for codec in codecs:
+                cc = CodecConfig(name=codec)
+                ctx = f"(M={m}, K={k}, Θ={theta}, {strategy}/{codec})"
+                try:
+                    errors.extend(_check_sync(
+                        jax, ctx, q0, key0, cohort, sel_cfg, srv_cfg,
+                        cf_cfg, cc, m, k, m_s,
+                        server_init, server_round_step))
+                except Exception as e:      # noqa: BLE001 — report, don't die
+                    errors.append(f"{ctx} sync: {type(e).__name__}: {e}")
+                try:
+                    errors.extend(_check_async(
+                        jax, jnp, ctx, q0, key0, cohort, sel_cfg, srv_cfg,
+                        cf_cfg, cc, m, k, m_s,
+                        server_init, server_round_step_async))
+                except Exception as e:      # noqa: BLE001
+                    errors.append(f"{ctx} async: {type(e).__name__}: {e}")
+
+        # serving read path: every codec, one (B, N) probe per grid point
+        for codec in codecs:
+            cc = CodecConfig(name=codec)
+            ctx = f"(M={m}, K={k}) serve/{codec}"
+            try:
+                b, top_n = 4, min(8, m)
+
+                def read(q, p, _cc=cc, _k=k, _n=top_n):
+                    wire = encode(_cc, q)
+                    return wire_topn_ref(_cc, wire, p, _k, _n, block_m=32)
+
+                vals, idx = jax.eval_shape(
+                    read, q0, jax.ShapeDtypeStruct((b, k), f32))
+                _expect(errors, vals.shape == (b, top_n), ctx,
+                        f"topn scores shape {vals.shape} != ({b}, {top_n})")
+                _expect(errors, vals.dtype == f32, ctx,
+                        f"topn scores dtype {vals.dtype} != float32")
+                _expect(errors, idx.shape == (b, top_n), ctx,
+                        f"topn ids shape {idx.shape} != ({b}, {top_n})")
+                _expect(errors, idx.dtype == jnp.int32, ctx,
+                        f"topn ids dtype {idx.dtype} != int32")
+            except Exception as e:          # noqa: BLE001
+                errors.append(f"{ctx}: {type(e).__name__}: {e}")
+
+    # telemetry fold: carry-preserving, row width pinned to the schema
+    try:
+        m, m_s = 64, 16
+        ts0 = jax.eval_shape(lambda: telemetry_state_init(m))
+        from repro.obs.telemetry import RoundTelemetry
+
+        tel = RoundTelemetry(*[
+            jax.ShapeDtypeStruct((), jnp.int32 if f == "t" else f32)
+            for f in RoundTelemetry._fields])
+        ts1, row = jax.eval_shape(
+            telemetry_round, ts0,
+            tel, jax.ShapeDtypeStruct((m_s,), jnp.int32),
+            jax.ShapeDtypeStruct((m_s,), f32))
+        _expect(errors, _tree_sig(ts1) == _tree_sig(ts0), "telemetry",
+                "telemetry_round does not preserve TelemetryState "
+                "shapes/dtypes")
+        _expect(errors, row.shape == (len(TELEMETRY_FIELDS),), "telemetry",
+                f"row shape {row.shape} != ({len(TELEMETRY_FIELDS)},)")
+        _expect(errors, row.dtype == f32, "telemetry",
+                f"row dtype {row.dtype} != float32")
+    except Exception as e:                  # noqa: BLE001
+        errors.append(f"telemetry: {type(e).__name__}: {e}")
+
+    return errors
+
+
+def _check_sync(jax, ctx, q0, key0, cohort, sel_cfg, srv_cfg, cf_cfg, cc,
+                m, k, m_s, server_init, server_round_step) -> List[str]:
+    errors: List[str] = []
+    state = jax.eval_shape(
+        lambda q, key: server_init(q, sel_cfg, key, srv_cfg, cc), q0, key0)
+
+    for telemetry in (False, True):
+        def step(st, x, _tel=telemetry):
+            return server_round_step(
+                st, x, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
+                codec_cfg=cc, telemetry=_tel)
+
+        out_state, aux = jax.eval_shape(step, state, cohort)
+        tag = f"{ctx} sync(telemetry={telemetry})"
+        _expect(errors, _tree_sig(out_state) == _tree_sig(state), tag,
+                "round step does not preserve ServerState pytree "
+                "shapes/dtypes (breaks the lax.scan carry contract)")
+        _expect(errors, _leaf_sig(out_state.q) == ((m, k), "float32"), tag,
+                f"Q leaf is {_leaf_sig(out_state.q)}, expected "
+                f"(({m}, {k}), float32)")
+        _expect(errors, _leaf_sig(aux.indices)[0] == (m_s,), tag,
+                f"aux.indices shape {aux.indices.shape} != ({m_s},)")
+        _expect(errors, _leaf_sig(aux.rewards) == ((m_s,), "float32"), tag,
+                f"aux.rewards is {_leaf_sig(aux.rewards)}")
+        n_tel = len(jax.tree.leaves(aux.telemetry))
+        _expect(errors, (n_tel > 0) == telemetry, tag,
+                f"telemetry={telemetry} but aux.telemetry has {n_tel} "
+                f"leaves — the zero-overhead-when-off contract")
+    return errors
+
+
+def _check_async(jax, jnp, ctx, q0, key0, cohort, sel_cfg, srv_cfg, cf_cfg,
+                 cc, m, k, m_s, server_init,
+                 server_round_step_async) -> List[str]:
+    errors: List[str] = []
+    slots = 3
+    state = jax.eval_shape(
+        lambda q, key: server_init(q, sel_cfg, key, srv_cfg, cc,
+                                   async_slots=slots), q0, key0)
+
+    def step(st, x, s):
+        return server_round_step_async(
+            st, x, s, sel_cfg=sel_cfg, config=srv_cfg, cf_cfg=cf_cfg,
+            codec_cfg=cc)
+
+    out_state, aux = jax.eval_shape(
+        step, state, cohort, jax.ShapeDtypeStruct((), jnp.int32))
+    tag = f"{ctx} async"
+    _expect(errors, _tree_sig(out_state) == _tree_sig(state), tag,
+            "async round step does not preserve ServerState pytree "
+            "shapes/dtypes (breaks the lax.scan carry contract)")
+    _expect(errors, _leaf_sig(aux.indices)[0] == (m_s,), tag,
+            f"aux.indices shape {aux.indices.shape} != ({m_s},)")
+    ring_leaves = jax.tree.leaves(out_state.snapshots)
+    _expect(errors, all(l.shape[0] == slots for l in ring_leaves), tag,
+            f"snapshot ring leaves lost their (slots={slots},) axis")
+    return errors

@@ -19,15 +19,17 @@ import numpy as np
 class RegretTracker:
     def __init__(self, num_arms: int):
         self.num_arms = num_arms
-        self.reward_sum = np.zeros((num_arms,), np.float64)
-        self.counts = np.zeros((num_arms,), np.float64)
+        # host-side oracle: f64 accumulators on purpose, so the tracker can
+        # cross-check the traced f32 telemetry fold against higher precision
+        self.reward_sum = np.zeros((num_arms,), np.float64)  # repro-lint: disable=dtype-width
+        self.counts = np.zeros((num_arms,), np.float64)  # repro-lint: disable=dtype-width
         self.per_round_mean: List[float] = []
         self.cumulative: List[float] = []
         self._cum = 0.0
 
     def record(self, indices, rewards) -> None:
         indices = np.asarray(indices)
-        rewards = np.asarray(rewards, np.float64)
+        rewards = np.asarray(rewards, np.float64)  # repro-lint: disable=dtype-width
         self.reward_sum[indices] += rewards
         self.counts[indices] += 1.0
         self.per_round_mean.append(float(rewards.mean()))

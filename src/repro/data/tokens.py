@@ -23,7 +23,8 @@ class TokenDataConfig:
 
 
 def _zipf_probs(vocab: int, s: float) -> np.ndarray:
-    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    # host-side data gen: f64 keeps the normalized Zipf tail from underflowing
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)  # repro-lint: disable=dtype-width
     p = ranks ** (-s)
     return p / p.sum()
 
@@ -40,7 +41,7 @@ def synthetic_token_batches(
     base = _zipf_probs(config.vocab_size, config.zipf_exponent)
     if config.num_clients > 1:
         boost = rng.dirichlet(
-            np.full(config.vocab_size, config.client_concentration, np.float64)
+            np.full(config.vocab_size, config.client_concentration, np.float64)  # repro-lint: disable=dtype-width
         )
         probs = 0.5 * base + 0.5 * boost
     else:

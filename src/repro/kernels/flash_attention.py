@@ -30,6 +30,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# kernel -> ref.py oracle (repro.analysis kernel-parity reads this mapping)
+PARITY_ORACLES = {"flash_attention": "mha_ref"}
+
 NEG_INF = -1e30
 
 

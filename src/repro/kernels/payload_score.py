@@ -47,6 +47,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# kernel -> ref.py oracle, for kernels whose oracle is not `<name>_ref`:
+# all three codec variants share the one wire-level oracle (repro.analysis
+# kernel-parity reads this mapping)
+PARITY_ORACLES = {
+    "dense_topn": "wire_topn_ref",
+    "quant_topn": "wire_topn_ref",
+    "quant4_topn": "wire_topn_ref",
+}
+
 NEG_INF = -1e30     # train-mask sentinel, shared with repro.cf.metrics
 
 

@@ -65,7 +65,8 @@ class LatencyHistogram:
         self.record_many([value])
 
     def record_many(self, values: Sequence[float]) -> None:
-        arr = np.asarray(values, np.float64).reshape(-1)
+        # host-side histogram: f64 sum stays exact far past f32's 2^24 counts
+        arr = np.asarray(values, np.float64).reshape(-1)  # repro-lint: disable=dtype-width
         if arr.size == 0:
             return
         if np.any(arr < 0) or not np.all(np.isfinite(arr)):

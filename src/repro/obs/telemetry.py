@@ -152,7 +152,9 @@ def rows_to_events(rows: Any, every: int = 1) -> List[Dict[str, Any]]:
     ``every`` is the rate limit: only rounds with ``t % every == 0`` (plus
     ``t == 1``, so a stream is never empty) become events.
     """
-    arr = np.asarray(rows, np.float64)
+    # host-side event conversion, off the traced path — f64 so round counters
+    # render exactly when formatted back to int
+    arr = np.asarray(rows, np.float64)  # repro-lint: disable=dtype-width
     if arr.ndim == 1:
         arr = arr[None]
     if arr.shape[-1] != len(TELEMETRY_FIELDS):

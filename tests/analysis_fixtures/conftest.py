@@ -1,0 +1,5 @@
+# fixture corpus for tests/test_analysis.py: every file below deliberately
+# violates (or deliberately satisfies) one lint rule. Never collected as
+# tests, never linted by the repo run (DEFAULT_EXCLUDES skips
+# "analysis_fixtures").
+collect_ignore_glob = ["*"]

@@ -1,0 +1,10 @@
+"""Fixture: dtype-width in a strict (wire-format) module."""
+import numpy as np
+
+
+def encode_rows(rows):
+    scale = np.array([1.0])                  # L6: bare constructor (strict)
+    wide = np.zeros((4,), np.float64)        # L7: .float64 reference
+    out = np.asarray(rows, dtype=float)      # L8: dtype=float
+    ok = np.zeros((4,), dtype=np.int32)      # fine: explicit 32-bit
+    return scale, wide, out, ok

@@ -1,0 +1,14 @@
+"""Fixture: dtype-width host/traced scope split in one driver module."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced(x):
+    w = np.ones((3,))                        # L8: bare constructor (traced)
+    return x * w
+
+
+def summarize(vals):
+    arr = np.asarray(vals)                   # fine: host scope
+    return float(arr.mean())

@@ -1,0 +1,32 @@
+"""Fixture: lock-guard — one compliant and two violating methods."""
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._model = None
+        self._count = 0
+        self.block = 8                 # init-frozen config: never guarded
+
+    def swap(self, model):
+        with self._lock:
+            self._model = model        # fine: under the lock
+            self._count += 1           # fine: under the lock
+
+    def bad_swap(self, model):
+        self._model = model            # L18: write outside lock
+
+    def peek(self):
+        return self._model             # L21: read outside lock
+
+    def geometry(self):
+        return self.block              # fine: init-frozen attribute
+
+
+class NoLocks:
+    def __init__(self):
+        self.x = 0
+
+    def bump(self):
+        self.x += 1                    # fine: class owns no lock

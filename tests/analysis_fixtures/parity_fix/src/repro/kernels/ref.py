@@ -1,0 +1,9 @@
+"""Fixture oracles for widget.py."""
+
+
+def covered_op_ref(x):
+    return x + 1
+
+
+def shared_ref(x):
+    return x - 1

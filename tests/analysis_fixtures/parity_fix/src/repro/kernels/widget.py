@@ -1,0 +1,19 @@
+"""Fixture: kernel-parity — covered, oracle-less, and untested kernels."""
+
+PARITY_ORACLES = {"unmapped_op": "shared_ref"}
+
+
+def covered_op(x):
+    return x + 1
+
+
+def uncovered_op(x):                   # L10: no `uncovered_op_ref` oracle
+    return x * 2
+
+
+def unmapped_op(x):                    # L14: oracle exists, no test pairs them
+    return x - 1
+
+
+def _private_helper(x):                # fine: private
+    return x

@@ -1,0 +1,7 @@
+"""Fixture parity test: mentions covered_op AND covered_op_ref only."""
+from repro.kernels import ref
+from repro.kernels.widget import covered_op
+
+
+def test_covered_op_matches_ref():
+    assert covered_op(3) == ref.covered_op_ref(3)

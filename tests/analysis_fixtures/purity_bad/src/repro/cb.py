@@ -1,0 +1,7 @@
+"""Fixture: unsanctioned host callback (module-wide check)."""
+from jax.experimental import io_callback
+
+
+def leak(x):
+    io_callback(print, None, x)          # L6: callback outside sanctioned mod
+    return x

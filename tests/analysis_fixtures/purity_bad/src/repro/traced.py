@@ -1,0 +1,34 @@
+"""Fixture: traced-purity violations (every flagged line is deliberate)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CACHE = []
+_T = 0
+
+
+@jax.jit
+def bad_step(x):
+    t = time.time()                      # L15: host clock
+    noise = np.random.rand(4)            # L16: host RNG
+    _CACHE.append(x)                     # L17: free-variable mutation
+    return x * t + jnp.sum(jnp.asarray(noise))
+
+
+@jax.jit
+def bad_global(x):
+    global _T                            # L22: global declaration
+    _T = 3
+    return x
+
+
+def driver(xs):
+    # `chunk` is never decorated — it must be discovered as a traced root
+    # because it is passed by name into lax.scan
+    def chunk(c, x):
+        time.sleep(0.0)                  # L31: host clock in scan body
+        return c, x
+
+    return jax.lax.scan(chunk, 0, xs)

@@ -1,0 +1,7 @@
+"""Fixture: the sanctioned batched-telemetry module may host io_callback."""
+from jax.experimental import io_callback
+
+
+def emit(rows, emitter):
+    io_callback(emitter, None, rows, ordered=True)   # sanctioned here
+    return rows

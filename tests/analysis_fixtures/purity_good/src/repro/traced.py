@@ -1,0 +1,21 @@
+"""Fixture: pure traced code the purity rule must stay silent on."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def good_step(x):
+    parts = []
+    for i in range(3):
+        parts.append(x * i)              # local container: fine
+    key = jax.random.PRNGKey(0)          # traced RNG: fine
+    return jnp.stack(parts).sum() + jax.random.normal(key, ())
+
+
+def driver(xs):
+    def chunk(c, x):
+        acc = {}
+        acc["y"] = c + x                 # local dict: fine
+        return acc["y"], x
+
+    return jax.lax.scan(chunk, jnp.zeros(()), xs)

@@ -1,0 +1,35 @@
+"""Fixture: pytree-carry rule — clean and violating carry NamedTuples."""
+from typing import Any, Callable, Dict, NamedTuple, Optional, Union
+
+import jax
+
+
+class GoodState(NamedTuple):
+    q: jax.Array
+    codec: Any = ()
+    extra: Optional[jax.Array] = None
+    table: Dict[str, jax.Array] = {}
+
+
+class InnerBuf(NamedTuple):          # reached transitively via NestState
+    vals: jax.Array
+    count: int                       # L16: scalar leaf, found via closure
+
+
+class NestState(NamedTuple):
+    buf: InnerBuf
+    more: "jax.Array"                # string annotation: fine
+
+
+class BadState(NamedTuple):
+    q: jax.Array
+    num_rounds: int                  # L25: scalar field
+    hook: Callable                   # L26: callable field
+    note: str                        # L27: scalar field
+
+
+AliasState = Union[GoodState, BadState]
+
+
+class NotACarry(NamedTuple):
+    anything: int                    # fine: not *State/*Wire, not referenced

@@ -1,0 +1,8 @@
+"""Fixture: inline suppression mechanics."""
+import numpy as np
+
+A = np.float64(1.0)  # repro-lint: disable=dtype-width -- fixture: silenced
+# repro-lint: disable=dtype-width -- comment-above form
+B = np.float64(2.0)
+C = np.float64(3.0)                    # L7: NOT suppressed — must fire
+D = np.float64(4.0)  # repro-lint: disable=traced-purity -- wrong rule: fires

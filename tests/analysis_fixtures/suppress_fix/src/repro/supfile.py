@@ -1,0 +1,6 @@
+"""Fixture: whole-file suppression."""
+# repro-lint: disable-file=dtype-width -- fixture: host-stats module
+import numpy as np
+
+A = np.float64(1.0)
+B = np.float64(2.0)

@@ -1,0 +1,219 @@
+"""repro.analysis engine tests: each rule fires exactly where the fixture
+corpus says it should, suppressions and the baseline are honored, the CLI
+exits non-zero on new findings, and the repo itself lints clean."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    Finding, load_baseline, load_project, run_rules, split_findings,
+    write_baseline,
+)
+from repro.analysis.rules import (
+    DtypeWidthRule, KernelParityRule, LockGuardRule, PytreeCarryRule,
+    TracedPurityRule, default_rules, rule_names,
+)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _lint(case, rules):
+    root = os.path.join(FIXTURES, case)
+    project = load_project([root], root=root, excludes=("__pycache__",))
+    return run_rules(project, rules)
+
+
+def _at(findings, rule, path_tail, line):
+    hits = [f for f in findings
+            if f.rule == rule and f.path.endswith(path_tail)
+            and f.line == line]
+    return hits
+
+
+# --------------------------------------------------------------------- #
+# traced-purity
+# --------------------------------------------------------------------- #
+def test_purity_flags_every_planted_violation():
+    findings = _lint("purity_bad", [TracedPurityRule()])
+    got = {(f.path.rsplit("/", 1)[-1], f.line) for f in findings}
+    assert ("traced.py", 14) in got, "host clock in jitted fn"
+    assert ("traced.py", 15) in got, "host RNG in jitted fn"
+    assert ("traced.py", 16) in got, "free-variable .append in jitted fn"
+    assert ("traced.py", 22) in got, "global declaration in jitted fn"
+    assert ("traced.py", 31) in got, \
+        "scan body discovered via lax.scan(chunk, ...) by-name root"
+    assert ("cb.py", 6) in got, "unsanctioned io_callback (module-wide)"
+    assert all(f.rule == "traced-purity" for f in findings)
+
+
+def test_purity_silent_on_pure_code_and_sanctioned_callback():
+    assert _lint("purity_good", [TracedPurityRule()]) == []
+
+
+# --------------------------------------------------------------------- #
+# pytree-carry
+# --------------------------------------------------------------------- #
+def test_pytree_flags_scalar_callable_and_transitive_fields():
+    findings = _lint("pytree_fix", [PytreeCarryRule()])
+    lines = sorted(f.line for f in findings)
+    assert lines == [16, 26, 27, 28], [f.render() for f in findings]
+    by_line = {f.line: f.message for f in findings}
+    assert "InnerBuf" in by_line[16], "transitive closure via NestState.buf"
+    assert "`int`" in by_line[26]
+    assert "Callable" in by_line[27]
+    assert "`str`" in by_line[28]
+
+
+# --------------------------------------------------------------------- #
+# kernel-parity
+# --------------------------------------------------------------------- #
+def test_parity_flags_missing_oracle_and_missing_test():
+    findings = _lint("parity_fix", [KernelParityRule()])
+    assert len(findings) == 2, [f.render() for f in findings]
+    missing_oracle = _at(findings, "kernel-parity", "widget.py", 10)
+    assert missing_oracle and "uncovered_op_ref" in missing_oracle[0].message
+    missing_test = _at(findings, "kernel-parity", "widget.py", 14)
+    assert missing_test and "not exercised" in missing_test[0].message
+    # covered_op (oracle + test) and _private_helper produce nothing
+    assert not [f for f in findings if f.line not in (10, 14)]
+
+
+# --------------------------------------------------------------------- #
+# dtype-width
+# --------------------------------------------------------------------- #
+def test_dtype_strict_scope_covers_wire_modules_and_traced_functions():
+    findings = _lint("dtype_fix", [DtypeWidthRule()])
+    got = {(f.path.rsplit("/", 1)[-1], f.line) for f in findings}
+    assert ("codec.py", 6) in got, "bare np.array in wire module"
+    assert ("codec.py", 7) in got, ".float64 reference"
+    assert ("codec.py", 8) in got, "dtype=float"
+    assert ("driver.py", 8) in got, "bare np.ones inside jitted fn"
+    # host scope: bare asarray in summarize() must NOT fire
+    assert not [f for f in findings
+                if f.path.endswith("driver.py") and f.line > 9], \
+        [f.render() for f in findings]
+    assert len(got) == 4
+
+
+# --------------------------------------------------------------------- #
+# lock-guard
+# --------------------------------------------------------------------- #
+def test_locks_flag_unguarded_access_only():
+    findings = _lint("locks_fix", [LockGuardRule()])
+    assert sorted(f.line for f in findings) == [18, 21], \
+        [f.render() for f in findings]
+    assert "write" in _at(findings, "lock-guard", "engine.py", 18)[0].message
+    assert "read" in _at(findings, "lock-guard", "engine.py", 21)[0].message
+
+
+# --------------------------------------------------------------------- #
+# suppressions + baseline
+# --------------------------------------------------------------------- #
+def test_inline_and_file_suppressions():
+    findings = _lint("suppress_fix", [DtypeWidthRule()])
+    # sup.py: A (same-line) and B (line-above) silenced; C fires; D's
+    # wrong-rule suppression does not apply. supfile.py: fully silenced.
+    assert [f.line for f in findings] == [7, 8], \
+        [f.render() for f in findings]
+    assert all(f.path.endswith("sup.py") for f in findings)
+
+
+def test_baseline_grandfathers_and_reports_stale(tmp_path):
+    # lock-guard findings have distinct messages -> distinct baseline keys
+    findings = _lint("locks_fix", [LockGuardRule()])
+    assert len(findings) == 2
+    path = str(tmp_path / "baseline.json")
+    write_baseline(path, findings[:1])
+    keys = load_baseline(path) + ["lock-guard::gone.py::never fires"]
+    new, old, stale = split_findings(findings, keys)
+    assert [f.key() for f in new] == [findings[1].key()]
+    assert [f.key() for f in old] == [findings[0].key()]
+    assert stale == ["lock-guard::gone.py::never fires"]
+
+
+def test_baseline_key_is_line_number_free():
+    f1 = Finding(rule="r", path="p.py", line=10, message="m")
+    f2 = Finding(rule="r", path="p.py", line=99, message="m")
+    assert f1.key() == f2.key()
+
+
+# --------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------- #
+def _run_cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=cwd or REPO)
+
+
+def test_cli_fails_on_violations_with_json_report():
+    case = os.path.join(FIXTURES, "locks_fix")
+    proc = _run_cli(case, "--root", case, "--no-baseline", "--json",
+                    "--no-default-excludes")
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc["ok"] is False
+    assert {f["rule"] for f in doc["new"]} == {"lock-guard"}
+
+
+def test_cli_passes_on_clean_tree():
+    case = os.path.join(FIXTURES, "purity_good")
+    proc = _run_cli(case, "--root", case, "--no-baseline",
+                    "--no-default-excludes")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK: no new findings" in proc.stdout
+
+
+def test_cli_lists_rules_and_rejects_unknown_disable():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    assert set(proc.stdout.split()) == set(rule_names())
+    case = os.path.join(FIXTURES, "purity_good")
+    proc = _run_cli(case, "--disable", "no-such-rule")
+    assert proc.returncode == 2
+
+
+def test_cli_disable_silences_a_rule():
+    case = os.path.join(FIXTURES, "locks_fix")
+    proc = _run_cli(case, "--root", case, "--no-baseline",
+                    "--no-default-excludes", "--disable", "lock-guard")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# --------------------------------------------------------------------- #
+# the repo's own sources lint clean (same invocation CI runs)
+# --------------------------------------------------------------------- #
+def test_repo_lints_clean_with_all_rules():
+    project = load_project(
+        [os.path.join(REPO, d) for d in ("src", "tests", "benchmarks")],
+        root=REPO)
+    findings = run_rules(project, default_rules())
+    baseline = load_baseline(os.path.join(REPO, "analysis_baseline.json"))
+    new, _, _ = split_findings(findings, baseline)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+# --------------------------------------------------------------------- #
+# shape-lint
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_shape_lint_clean_on_small_grid():
+    from repro.analysis.shapelint import run_shape_lint
+
+    errs = run_shape_lint(grid=[(32, 4, 4)], codecs=["fp32", "int8"],
+                          strategies=["bts"])
+    assert errs == [], "\n".join(errs)
+
+
+def test_shape_lint_reports_instead_of_raising():
+    from repro.analysis.shapelint import run_shape_lint
+
+    errs = run_shape_lint(grid=[(0, 4, 4)], codecs=["fp32"],
+                          strategies=["bts"])
+    assert errs and any("M=0" in e for e in errs)

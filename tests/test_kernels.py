@@ -198,6 +198,14 @@ def test_gather_quantize_rows_block_bit_exact_vs_full_table():
                                       np.asarray(want_codes)[owned])
         np.testing.assert_array_equal(np.asarray(scales)[owned],
                                       np.asarray(want_scales)[owned])
+        # and the kernel must match its own block oracle on every row,
+        # out-of-shard garbage rows included
+        ref_codes, ref_scales = ref.gather_quantize_rows_block_ref(block,
+                                                                   local)
+        np.testing.assert_array_equal(np.asarray(codes),
+                                      np.asarray(ref_codes))
+        np.testing.assert_array_equal(np.asarray(scales),
+                                      np.asarray(ref_scales))
 
 
 # --------------------------------------------------------------------- #

@@ -11,11 +11,12 @@ from repro.optim.adam import (
 
 def _reference_adam(params, grads_seq, cfg):
     """Straightline numpy Adam for cross-checking."""
-    p = np.array(params, np.float64)
+    # f64 on purpose: the oracle should be strictly more precise than the DUT
+    p = np.array(params, np.float64)  # repro-lint: disable=dtype-width
     m = np.zeros_like(p)
     v = np.zeros_like(p)
     for t, g in enumerate(grads_seq, start=1):
-        g = np.asarray(g, np.float64)
+        g = np.asarray(g, np.float64)  # repro-lint: disable=dtype-width
         m = cfg.beta1 * m + (1 - cfg.beta1) * g
         v = cfg.beta2 * v + (1 - cfg.beta2) * g**2
         mhat = m / (1 - cfg.beta1**t)

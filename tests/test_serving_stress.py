@@ -1,0 +1,113 @@
+"""Threaded stress test for the ServingEngine swap/read/metrics contract.
+
+Writers hammer ``swap`` while readers hammer ``recommend``/``stats``/
+``metrics``. Each published table is a constant-fill whose value encodes
+its publish sequence number, so every score a reader gets back names
+exactly one published model — a torn read (scoring against a mix of two
+tables, or a model/version pair from different swaps) produces a score no
+single publish could. Versions must be strictly monotone across swaps and
+non-decreasing from any single observer's point of view.
+"""
+import re
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import CodecConfig
+from repro.serve import ServingEngine, ServingModel
+
+M, K, TOP_N = 32, 8, 3
+N_WRITERS, SWAPS_PER_WRITER = 2, 25
+N_READERS, READS_PER_READER = 4, 40
+
+
+def _fill_model(seq: int) -> ServingModel:
+    """Constant-fill table: every score row equals (seq + 1) * K."""
+    q = jnp.full((M, K), float(seq + 1), jnp.float32)
+    return ServingModel.from_dense(CodecConfig(name="fp32"), q)
+
+
+def test_concurrent_swap_read_metrics_consistency():
+    engine = ServingEngine(_fill_model(0), buckets=(4,), top_n=TOP_N,
+                           block_m=32)
+    published = {1.0}               # constant fills already swapped in
+    published_lock = threading.Lock()
+    stop = threading.Event()
+    errors = []
+    swap_versions = [[] for _ in range(N_WRITERS)]
+
+    def writer(wid):
+        try:
+            for i in range(SWAPS_PER_WRITER):
+                seq = wid * SWAPS_PER_WRITER + i + 1
+                with published_lock:
+                    # record BEFORE the swap so a reader can never observe
+                    # a fill value absent from `published`
+                    published.add(float(seq + 1))
+                installed = engine.swap(_fill_model(seq))
+                swap_versions[wid].append(installed.version)
+        except Exception as e:      # noqa: BLE001 — surfaced by the join
+            errors.append(("writer", wid, e))
+        finally:
+            stop.set()
+
+    def reader(rid):
+        try:
+            p = jnp.ones((2, K), jnp.float32)
+            last_version = -1
+            last_installs = -1
+            for i in range(READS_PER_READER):
+                vals, ids = engine.recommend(p)
+                arr = np.asarray(vals)
+                assert arr.shape == (2, TOP_N)
+                # constant-fill model: every score in the batch identical
+                assert np.all(arr == arr[0, 0]), \
+                    f"torn read: mixed scores {arr}"
+                fill = arr[0, 0] / K
+                with published_lock:
+                    assert fill in published, \
+                        f"score fill {fill} was never published"
+                s = engine.stats()
+                assert s.version >= last_version, \
+                    f"version went backwards: {last_version} -> {s.version}"
+                assert s.installs >= last_installs
+                last_version, last_installs = s.version, s.installs
+                if i % 8 == 0:
+                    text = engine.metrics()
+                    ver = int(float(re.search(
+                        r"^frs_serve_model_version (\S+)$", text,
+                        re.MULTILINE).group(1)))
+                    assert ver >= last_version - 1  # scrape may pre-date s
+        except Exception as e:      # noqa: BLE001
+            errors.append(("reader", rid, e))
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(N_WRITERS)]
+    threads += [threading.Thread(target=reader, args=(r,))
+                for r in range(N_READERS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "stress threads hung"
+    assert errors == [], errors
+
+    # per-writer versions strictly increase; across writers all distinct
+    # (every swap bumps under the lock — two swaps can never share one)
+    all_versions = []
+    for vs in swap_versions:
+        assert vs == sorted(vs) and len(set(vs)) == len(vs)
+        all_versions.extend(vs)
+    assert len(set(all_versions)) == len(all_versions)
+
+    stats = engine.stats()
+    assert stats.installs == N_WRITERS * SWAPS_PER_WRITER
+    assert stats.requests == N_READERS * READS_PER_READER
+    assert stats.users == 2 * N_READERS * READS_PER_READER
+    assert stats.version == max(all_versions)
+
+    # final scrape reflects the settled counters exactly
+    text = engine.metrics()
+    assert f"frs_serve_installs_total {float(stats.installs)}" in text \
+        or f"frs_serve_installs_total {stats.installs}" in text
