@@ -1,0 +1,289 @@
+"""Fault tolerance: quality-under-dropout, corruption overhead, resume cost.
+
+Three sections, one artifact (``BENCH_fault_tolerance.json``):
+
+  * DROPOUT CURVES — for dropout in {0, 0.1, 0.3, 0.5} x {bts, random}
+    run the scan engine on movielens-mini with the deterministic fault
+    schedule dropping that fraction of each cohort (dropped clients are
+    exact no-ops: gradients renormalized over survivors, bandit rewards
+    attributed only to observed pulls). P@10 vs dropout, BTS against the
+    random-selection baseline, answers whether payload *optimization*
+    stays ahead of payload *sampling* when cohorts degrade — the paper's
+    comparison under the failure mode real fleets actually have.
+  * CORRUPTION / RETRANSMIT — with wire-payload bit corruption enabled,
+    every uplink row carries a 4-byte checksum and corrupted rows are
+    rejected into the error-feedback residual for retransmission. The
+    section prices that: checksum overhead vs the clean uplink, plus the
+    retransmit bytes actually burned (both from the traced in-state
+    counters, not estimates).
+  * CRASH-RESUME — run R rounds uninterrupted; run the same config with a
+    simulated host crash mid-training plus checkpoints at eval
+    boundaries; resume from the newest verified checkpoint. Reports the
+    wall-clock overhead of crash+resume vs uninterrupted and asserts the
+    two trajectories converge to IDENTICAL final metrics (the bit-parity
+    contract tier-1 enforces on small cases, priced here at bench scale).
+
+Usage:  PYTHONPATH=src python -m benchmarks.fault_tolerance [--quick|--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from dataclasses import replace
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from benchmarks.common import markdown_table, per_round_payload_bytes
+
+OUT_PATH = "BENCH_fault_tolerance.json"
+DROPOUT_RATES = (0.0, 0.1, 0.3, 0.5)
+STRATEGIES = ("bts", "random")
+CORRUPT_RATES = (0.02, 0.1)
+
+
+def _fault_cfg(**kw):
+    from repro.faults import FaultConfig
+    return FaultConfig(enabled=True, **kw)
+
+
+def _counters(res) -> Dict[str, float]:
+    """The traced FaultState counters off a finished run (zeros if off)."""
+    faults = res.server_state.faults
+    if faults == ():                        # faults disabled: () sentinel
+        return {"dropped": 0.0, "stragglers": 0.0, "corrupt_rows": 0.0,
+                "retransmit_bytes": 0.0}
+    return {
+        "dropped": float(faults.dropped),
+        "stragglers": float(faults.stragglers),
+        "corrupt_rows": float(faults.corrupt_rows),
+        "retransmit_bytes": float(faults.retransmit_bytes),
+    }
+
+
+def run(dataset: str = "movielens-mini", rounds: int = 120, theta: int = 40,
+        dropout_rates: Sequence[float] = DROPOUT_RATES,
+        strategies: Sequence[str] = STRATEGIES,
+        corrupt_rates: Sequence[float] = CORRUPT_RATES,
+        codec: str = "int8", keep: float = 0.1, seed: int = 0,
+        out_path: Optional[str] = OUT_PATH) -> Dict:
+    from repro.data.synthetic import load_dataset
+    from repro.faults import SimulatedCrash
+    from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+    if not dropout_rates or dropout_rates[0] != 0.0:
+        raise ValueError("dropout_rates must start with 0.0 (the clean "
+                         "baseline the degradation curves are relative to)")
+    spec, train, test = load_dataset(dataset, seed=seed)
+    num_items = train.shape[1]
+    num_select = max(1, int(round(keep * num_items)))
+    base = FLSimConfig(rounds=rounds, theta=theta, keep_fraction=keep,
+                       codec=codec, eval_every=max(rounds // 6, 1),
+                       eval_users=min(256, train.shape[0]), seed=seed)
+    theta_eff = min(theta, train.shape[0])
+    bytes_pr = per_round_payload_bytes(num_select, base.num_factors,
+                                       codec=codec, theta=theta_eff)
+
+    # ---------------- dropout curves: P@10 vs dropout, bts vs random ----
+    cells: List[Dict] = []
+    clean_p10: Dict[str, float] = {}
+    for strategy in strategies:
+        for rate in dropout_rates:
+            faults = _fault_cfg(dropout_rate=rate, seed=seed) \
+                if rate > 0.0 else None
+            cfg = replace(base, strategy=strategy, faults=faults)
+            t0 = time.perf_counter()
+            res = run_fcf_simulation(train, test, cfg)
+            secs = time.perf_counter() - t0
+            if rate == 0.0:
+                clean_p10[strategy] = res.final["precision"]
+            counters = _counters(res)
+            cells.append({
+                "strategy": strategy, "dropout_rate": rate,
+                "precision_at_10": res.final["precision"],
+                "f1": res.final["f1"], "map": res.final["map"],
+                "p10_drop_pct_vs_clean": 100.0 * (
+                    1.0 - res.final["precision"]
+                    / max(clean_p10[strategy], 1e-9)),
+                "dropped_per_round": counters["dropped"] / rounds,
+                "rounds_per_sec": rounds / secs,
+                "bytes_per_round": bytes_pr,
+                "sim_seconds": secs,
+            })
+
+    # ---------------- corruption: checksum + retransmit byte overhead ---
+    clean = run_fcf_simulation(train, test, replace(base, strategy="bts"))
+    corruption_cells: List[Dict] = []
+    for rate in corrupt_rates:
+        cfg = replace(base, strategy="bts",
+                      faults=_fault_cfg(corrupt_rate=rate, seed=seed))
+        res = run_fcf_simulation(train, test, cfg)
+        counters = _counters(res)
+        corruption_cells.append({
+            "corrupt_rate": rate,
+            "precision_at_10": res.final["precision"],
+            "bytes_up": res.bytes_up,
+            "uplink_overhead_pct": 100.0 * (
+                res.bytes_up / max(clean.bytes_up, 1) - 1.0),
+            "corrupted_rows": counters["corrupt_rows"],
+            "retransmit_bytes": counters["retransmit_bytes"],
+        })
+
+    # ---------------- crash-resume: overhead + identical trajectory -----
+    resume_cfg = replace(base, strategy="bts",
+                         faults=_fault_cfg(dropout_rate=0.1, seed=seed))
+    t0 = time.perf_counter()
+    uninterrupted = run_fcf_simulation(train, test, resume_cfg)
+    uninterrupted_s = time.perf_counter() - t0
+    crash_round = rounds // 2 + 1
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_ft_ckpt_")
+    try:
+        crashed_cfg = replace(
+            resume_cfg, checkpoint_dir=ckpt_dir,
+            faults=resume_cfg.faults._replace(crash_round=crash_round))
+        t0 = time.perf_counter()
+        try:
+            run_fcf_simulation(train, test, crashed_cfg)
+            raise RuntimeError("simulated crash never fired")
+        except SimulatedCrash:
+            pass
+        crash_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        resumed = run_fcf_simulation(train, test, replace(
+            resume_cfg, checkpoint_dir=ckpt_dir, resume_from=ckpt_dir))
+        resume_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    # parity is a STATE contract: the resumed run's history is shorter by
+    # construction (evals before the crash were already logged), so compare
+    # the final table bitwise plus the last eval row — not rolling means
+    # whose windows span different numbers of evals
+    bit_identical = bool(
+        np.array_equal(np.asarray(uninterrupted.server_state.q),
+                       np.asarray(resumed.server_state.q))
+        and all(uninterrupted.smoothed(k, 1) == resumed.smoothed(k, 1)
+                for k in ("precision", "recall", "f1", "map")))
+    resume_section = {
+        "crash_round": crash_round, "rounds": rounds,
+        "uninterrupted_seconds": uninterrupted_s,
+        "crash_seconds": crash_s, "resume_seconds": resume_s,
+        "overhead_pct": 100.0 * (
+            (crash_s + resume_s) / max(uninterrupted_s, 1e-9) - 1.0),
+        "resume_rounds_per_sec": rounds / max(resume_s, 1e-9),
+        "bit_identical": bit_identical,
+    }
+    assert bit_identical, \
+        "crash+resume diverged from the uninterrupted trajectory"
+
+    worst = max(c["p10_drop_pct_vs_clean"] for c in cells
+                if c["strategy"] == "bts")
+    headline = {
+        "bts_p10_drop_pct_at_max_dropout": worst,
+        "max_uplink_overhead_pct": max(
+            c["uplink_overhead_pct"] for c in corruption_cells),
+        "resume_overhead_pct": resume_section["overhead_pct"],
+        "resume_bit_identical": bit_identical,
+    }
+
+    out = {
+        "dataset": {"name": spec.name, "users": int(train.shape[0]),
+                    "items": int(num_items)},
+        "config": {"rounds": rounds, "theta": theta, "keep_fraction": keep,
+                   "codec": codec, "num_factors": base.num_factors,
+                   "seed": seed},
+        "headline": headline,
+        "dropout_cells": cells,
+        "corruption_cells": corruption_cells,
+        "resume": resume_section,
+    }
+
+    print(f"\n## Fault tolerance — P@10 vs dropout, corruption overhead, "
+          f"crash-resume ({spec.name}: M={num_items}, Theta={theta}, "
+          f"{codec}, {rounds} rounds)\n")
+    rows = [(c["strategy"], c["dropout_rate"],
+             f"{c['precision_at_10']:.4f}",
+             f"{c['p10_drop_pct_vs_clean']:+.1f}%",
+             f"{c['dropped_per_round']:.1f}",
+             f"{c['rounds_per_sec']:.0f}") for c in cells]
+    print(markdown_table(("strategy", "dropout", "P@10", "vs clean",
+                          "dropped/round", "rounds/s"), rows))
+    print()
+    rows = [(c["corrupt_rate"], f"{c['precision_at_10']:.4f}",
+             f"{c['uplink_overhead_pct']:+.2f}%",
+             int(c["corrupted_rows"]), int(c["retransmit_bytes"]))
+            for c in corruption_cells]
+    print(markdown_table(("corrupt rate", "P@10", "uplink overhead",
+                          "rows rejected", "retransmit bytes"), rows))
+    print(f"\ncrash at round {crash_round}/{rounds}: resume overhead "
+          f"{resume_section['overhead_pct']:+.1f}% wall-clock, final "
+          f"metrics bit-identical={bit_identical}")
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=1, default=float)
+        print(f"\nwrote {out_path}")
+    return out
+
+
+def run_quick(dataset: str = "movielens-mini") -> Dict:
+    """The one quick-smoke grid (CLI --quick and benchmarks.run both use
+    this, so the two can't drift): bts only, dropout {0, 0.3}, no artifact."""
+    return run(dataset=dataset, rounds=30, theta=20,
+               dropout_rates=(0.0, 0.3), strategies=("bts",),
+               corrupt_rates=(0.1,), out_path=None)
+
+
+def dry_run() -> Dict:
+    """No simulations: schedule determinism + checksum byte math only."""
+    from repro.compress import (CHECKSUM_BYTES_PER_ROW, CodecConfig,
+                                direction_configs, wire_bytes)
+    from repro.faults import FaultConfig, build_fault_schedule
+
+    cfg = FaultConfig(enabled=True, dropout_rate=0.3, straggler_rate=0.1,
+                      corrupt_rate=0.05, seed=0)
+    a = build_fault_schedule(cfg, rounds=400, cohort_size=50, num_select=30,
+                             seed=0)
+    b = build_fault_schedule(cfg, rounds=400, cohort_size=50, num_select=30,
+                             seed=0)
+    assert np.array_equal(a.survivors, b.survivors) \
+        and np.array_equal(a.corrupt, b.corrupt), \
+        "fault schedule must be deterministic in (config, seed)"
+    drop_frac = 1.0 - a.survivors.mean()
+    assert abs(drop_frac - (cfg.dropout_rate + cfg.straggler_rate)) < 0.02, \
+        f"schedule removes {drop_frac:.3f}, configured 0.4"
+    rows = []
+    for codec in ("fp32", "int8", "topk"):
+        _, up = direction_configs(CodecConfig(name=codec))
+        per_row = wire_bytes(up, 1, 25)
+        rows.append((codec, per_row,
+                     f"{100.0 * CHECKSUM_BYTES_PER_ROW / per_row:.2f}%"))
+    print("\n[dry-run] fault_tolerance — checksum overhead per uplink row "
+          "(K=25) + schedule determinism\n")
+    print(markdown_table(("codec", "row bytes", "checksum overhead"), rows))
+    print(f"schedule check: {drop_frac:.3f} of cohort slots removed "
+          f"(dropout 0.3 + straggler 0.1), corrupt draws "
+          f"{a.corrupt.mean():.3f} vs rate {cfg.corrupt_rate}")
+    return {"dry_run": True, "removed_fraction": float(drop_frac)}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="movielens-mini")
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer cells / rounds for smoke runs")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="schedule + byte math only, run nothing")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        return dry_run()
+    if args.quick:
+        return run_quick(dataset=args.dataset)
+    return run(dataset=args.dataset, rounds=args.rounds)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,10 +21,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="run every section's dry-run smoke, execute nothing")
     args = ap.parse_args(argv)
 
-    from benchmarks import (async_cohorts, convergence, fcf_experiments,
-                            kernel_bench, obs_overhead, payload_compression,
-                            payload_table, reduction_sweep, roofline,
-                            serving, sharded_rounds, table4)
+    from benchmarks import (async_cohorts, convergence, fault_tolerance,
+                            fcf_experiments, kernel_bench, obs_overhead,
+                            payload_compression, payload_table,
+                            reduction_sweep, roofline, serving,
+                            sharded_rounds, table4)
 
     t0 = time.time()
     print("=" * 72)
@@ -41,6 +42,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         payload_compression.main(["--dry-run"])
         sharded_rounds.main(["--dry-run"])
         async_cohorts.main(["--dry-run"])
+        fault_tolerance.main(["--dry-run"])
         serving.main(["--dry-run"])
         obs_overhead.main(["--dry-run"])
         roofline.main(["--dry-run"])
@@ -74,6 +76,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         async_cohorts.run()
     else:
         async_cohorts.run_quick()
+
+    # fault tolerance: quality under dropout, corruption pricing, resume
+    if args.full:
+        fault_tolerance.run()     # regenerates BENCH_fault_tolerance.json
+    else:
+        fault_tolerance.run_quick()
 
     # serving read path: fused compressed scoring vs the dense baseline
     if args.full:

@@ -6,6 +6,7 @@ tests and special runs can instantiate rule classes with their own
 scopes/roots.
 """
 from repro.analysis.rules.dtype import DtypeWidthRule
+from repro.analysis.rules.faults import FaultCarryRule
 from repro.analysis.rules.locks import LockGuardRule
 from repro.analysis.rules.parity import KernelParityRule
 from repro.analysis.rules.purity import TracedPurityRule
@@ -17,6 +18,7 @@ RULE_CLASSES = (
     KernelParityRule,
     DtypeWidthRule,
     LockGuardRule,
+    FaultCarryRule,
 )
 
 
@@ -31,7 +33,7 @@ def rule_names():
 
 
 __all__ = [
-    "DtypeWidthRule", "KernelParityRule", "LockGuardRule",
-    "PytreeCarryRule", "TracedPurityRule", "RULE_CLASSES",
+    "DtypeWidthRule", "FaultCarryRule", "KernelParityRule",
+    "LockGuardRule", "PytreeCarryRule", "TracedPurityRule", "RULE_CLASSES",
     "default_rules", "rule_names",
 ]

@@ -1,0 +1,171 @@
+"""fault-carry: fault state lives in the scan carry; degradation paths count.
+
+Two halves of the fault-tolerance contract (docs/FAULT_MODEL.md):
+
+  * CARRY PURITY — modules under the fault roots (``src/repro/faults``)
+    implement the deterministic fault schedule that is threaded through
+    ``jax.lax.scan`` as carry state. Any module-level mutable container
+    (list/dict/set literal or constructor call) or ``global`` declaration
+    there is hidden per-process fault state: it would desynchronize
+    vmapped/sharded replicas and break crash-resume bit-parity, so it is
+    flagged. NamedTuple/constant module attributes are fine.
+  * COUNTED DEGRADATION — modules under the except roots
+    (``src/repro/serve``, ``src/repro/checkpoint``) are the degradation
+    layers whose whole point is surviving failure *visibly*. Every
+    ``except`` handler there must either re-raise or increment a counter
+    (an assignment whose target names match ``_COUNTER_RE`` — failures,
+    sheds, retries, totals); a handler that silently swallows an
+    exception turns a counted fault into an invisible one.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Sequence, Tuple
+
+from repro.analysis.core import Finding, Project, SourceFile
+
+# counter-ish identifier fragments: incrementing any of these inside an
+# except handler counts as surfacing the failure
+_COUNTER_RE = re.compile(r"(count|total|failure|shed|retr|error|drop)",
+                         re.IGNORECASE)
+
+# calls that build mutable containers at module scope
+_MUTABLE_CTORS = {"list", "dict", "set", "defaultdict", "deque", "Counter",
+                  "OrderedDict"}
+
+
+class FaultCarryRule:
+    name = "fault-carry"
+    description = ("fault-schedule modules keep state in the scan carry "
+                   "(no module-level mutable containers / globals); every "
+                   "except in the degradation layers re-raises or "
+                   "increments a counter")
+
+    def __init__(
+        self,
+        fault_roots: Sequence[str] = ("src/repro/faults",),
+        except_roots: Sequence[str] = ("src/repro/serve",
+                                       "src/repro/checkpoint"),
+    ):
+        self.fault_roots = tuple(fault_roots)
+        self.except_roots = tuple(except_roots)
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for src in project.files:
+            if _under(src.relpath, self.fault_roots):
+                yield from self._check_fault_module(src)
+            if _under(src.relpath, self.except_roots):
+                yield from self._check_except_handlers(src)
+
+    # ------------------------------------------------------------- #
+    # fault roots: no module-level mutable state, no `global`
+    # ------------------------------------------------------------- #
+    def _check_fault_module(self, src: SourceFile) -> Iterator[Finding]:
+        for stmt in src.tree.body:
+            targets: Tuple[ast.expr, ...] = ()
+            value = None
+            if isinstance(stmt, ast.Assign):
+                targets, value = tuple(stmt.targets), stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = (stmt.target,), stmt.value
+            if value is None or not _is_mutable_container(value):
+                continue
+            names = ", ".join(_target_names(t) for t in targets)
+            # dunder module attributes (__all__ etc.) are interface
+            # metadata, not runtime state
+            if all(n.startswith("__") and n.endswith("__")
+                   for n in names.split(", ")):
+                continue
+            yield Finding(
+                rule=self.name, path=src.relpath, line=stmt.lineno,
+                message=(f"module-level mutable container `{names}` in a "
+                         f"fault-schedule module — fault state must ride "
+                         f"the scan carry (pre-sampled schedule arrays + "
+                         f"FaultState), not per-process globals"))
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Global):
+                yield Finding(
+                    rule=self.name, path=src.relpath, line=node.lineno,
+                    message=(f"`global {', '.join(node.names)}` in a "
+                             f"fault-schedule module — mutating module "
+                             f"state desynchronizes vmapped/sharded "
+                             f"replicas; thread it through the scan carry"))
+
+    # ------------------------------------------------------------- #
+    # except roots: every handler re-raises or increments a counter
+    # ------------------------------------------------------------- #
+    def _check_except_handlers(self, src: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if _handler_surfaces(node):
+                continue
+            what = ast.unparse(node.type) if node.type else "BaseException"
+            yield Finding(
+                rule=self.name, path=src.relpath, line=node.lineno,
+                message=(f"`except {what}` swallows the failure — a "
+                         f"degradation-layer handler must re-raise or "
+                         f"increment a counter (name matching "
+                         f"{_COUNTER_RE.pattern}) so the fault stays "
+                         f"observable"))
+
+
+def _under(relpath: str, roots: Sequence[str]) -> bool:
+    p = relpath.replace("\\", "/")
+    return any(p.startswith(root.rstrip("/") + "/") for root in roots)
+
+
+def _is_mutable_container(value: ast.expr) -> bool:
+    if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(value, ast.Call):
+        func = value.func
+        name = func.attr if isinstance(func, ast.Attribute) else \
+            getattr(func, "id", None)
+        return name in _MUTABLE_CTORS
+    return False
+
+
+def _target_names(target: ast.expr) -> str:
+    if isinstance(target, ast.Name):
+        return target.id
+    if isinstance(target, (ast.Tuple, ast.List)):
+        return ", ".join(_target_names(e) for e in target.elts)
+    return ast.unparse(target)
+
+
+def _handler_surfaces(handler: ast.ExceptHandler) -> bool:
+    """True iff the handler body re-raises or bumps a counter-named target."""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        targets: Tuple[ast.expr, ...] = ()
+        if isinstance(node, ast.AugAssign):
+            targets = (node.target,)
+        elif isinstance(node, ast.Assign):
+            targets = tuple(node.targets)
+        for t in targets:
+            if any(_COUNTER_RE.search(n) for n in _ident_chain(t)):
+                return True
+    return False
+
+
+def _ident_chain(node: ast.expr):
+    """Every identifier-ish name along a target chain: ``self.x``,
+    ``d["k"]``, plain names — the counter regex matches any link."""
+    while True:
+        if isinstance(node, ast.Name):
+            yield node.id
+            return
+        if isinstance(node, ast.Attribute):
+            yield node.attr
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            s = node.slice
+            if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                yield s.value
+            node = node.value
+        else:
+            return

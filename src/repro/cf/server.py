@@ -38,9 +38,11 @@ import jax.numpy as jnp
 from repro.cf.local import solve_user_factors
 from repro.cf.model import CFConfig
 from repro.compress import (
-    CodecConfig, QuantWire, codec_state_init, decode, direction_configs,
-    encode, encode_with_residual, is_stateful, wire_bytes,
+    CHECKSUM_BYTES_PER_ROW, CodecConfig, QuantWire, codec_state_init, decode,
+    direction_configs, encode, encode_with_residual, is_stateful,
+    row_checksums, verify_rows, wire_bytes,
 )
+from repro.faults import fault_state_update, flip_row_bits
 from repro.core.payload import PayloadSelector
 from repro.core.selector import (
     AsyncSelectorState, SelectorConfig, SelectorState, async_selector_init,
@@ -104,6 +106,13 @@ class ServerState(NamedTuple):
     # S int8 snapshots cost S payload-sized wire images, not S full (M, K)
     # tables). The empty pytree () for the synchronous backends.
     snapshots: Any = ()
+    # fault layer only (repro.faults): a FaultState of cumulative degradation
+    # counters — dropped clients, stragglers, checksum-rejected rows,
+    # retransmit bytes — carried as traced scalars exactly like the byte
+    # counters. The empty pytree () whenever fault injection is off, which
+    # keeps the carry structure (and every compiled program) identical to a
+    # faultless build.
+    faults: Any = ()
 
 
 class RoundAux(NamedTuple):
@@ -255,6 +264,7 @@ def server_init(
     config: FCFServerConfig = FCFServerConfig(),
     codec_cfg: CodecConfig = CodecConfig(),
     async_slots: Optional[int] = None,
+    force_residual: bool = False,
 ) -> ServerState:
     """Fresh server state around an initialized global model.
 
@@ -262,6 +272,11 @@ def server_init(
     async engine: the selector is wrapped with a pending-attribution buffer
     and the encoded-snapshot ring is allocated. ``None`` (synchronous)
     leaves both as empty pytrees.
+
+    ``force_residual`` allocates the (M, K) error-feedback residual even for
+    stateless codecs — required by the fault layer's corruption path, where
+    checksum-rejected rows are retained in the residual for retransmit no
+    matter which codec runs the uplink.
     """
     del config  # static hyper-parameters live outside the pytree
     sel: Any = selector_init(sel_cfg)
@@ -280,7 +295,8 @@ def server_init(
         bytes_down=jnp.zeros((), jnp.float32),
         bytes_up=jnp.zeros((), jnp.float32),
         codec=codec_state_init(
-            codec_cfg, item_factors.shape[0], item_factors.shape[1]),
+            codec_cfg, item_factors.shape[0], item_factors.shape[1],
+            force_residual=force_residual),
         snapshots=snapshots,
     )
 
@@ -323,8 +339,19 @@ def server_round_step(
     num_users: Optional[int] = None,
     shard: Optional[ShardContext] = None,
     telemetry: bool = False,
+    faults: Any = None,
 ) -> Tuple[ServerState, RoundAux]:
     """One fused FL round (Alg. 1 lines 8-19) as a pure function.
+
+    ``faults`` (a :class:`repro.faults.RoundFaults`, default ``None``)
+    activates this round's slice of the pre-sampled fault schedule: the
+    driver has already zeroed dropped/straggling users out of ``cohort_x``
+    and passes the traced survivor count as ``num_users`` (gradient
+    renormalization over survivors); here the wire-corruption schedule
+    drives the checksum reject path in the commit core, the per-user uplink
+    cost grows by the checksum word, and the cumulative degradation
+    counters on ``state.faults`` advance. ``None`` compiles the historical
+    program byte-for-byte.
 
     ``telemetry`` (static) additionally surfaces a :class:`RoundTelemetry`
     of traced in-step scalars on ``RoundAux.telemetry`` — wire bytes,
@@ -400,16 +427,31 @@ def server_round_step(
     bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
 
     # lines 11-18: cohort solve, uplink, Adam commit, reward feedback
-    q_new, opt, sel, codec_state, rewards, num_users, stats = _commit_against(
-        state, sel, idx, q_star, cohort_x, sel_cfg=sel_cfg, config=config,
-        cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users, shard=shard,
-        want_stats=telemetry)
-    bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
+    has_corrupt = faults is not None and not isinstance(faults.corrupt, tuple)
+    q_new, opt, sel, codec_state, rewards, num_users, stats, intact = \
+        _commit_against(
+            state, sel, idx, q_star, cohort_x, sel_cfg=sel_cfg, config=config,
+            cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users, shard=shard,
+            want_stats=telemetry,
+            corrupt=faults.corrupt if has_corrupt else None)
+    per_user_bytes = wire_bytes(up_cfg, m_s, kdim)
+    if has_corrupt:
+        per_user_bytes += m_s * CHECKSUM_BYTES_PER_ROW
+    bytes_up = state.bytes_up + per_user_bytes * num_users
+
+    fault_state = state.faults
+    if faults is not None:
+        rejected = (jnp.zeros((), jnp.float32) if intact is None
+                    else jnp.sum(~intact).astype(jnp.float32))
+        fault_state = fault_state_update(
+            state.faults, faults.dropped, faults.stragglers, rejected,
+            rejected * float(wire_bytes(up_cfg, 1, kdim)
+                             + CHECKSUM_BYTES_PER_ROW))
 
     new_state = ServerState(
         q=q_new, opt=opt, sel=sel, key=key, t=state.t + 1,
         bytes_down=bytes_down, bytes_up=bytes_up, codec=codec_state,
-        snapshots=state.snapshots,
+        snapshots=state.snapshots, faults=fault_state,
     )
     aux_tel: Any = ()
     if telemetry:
@@ -482,6 +524,7 @@ def _commit_against(
     t_obs: Optional[jax.Array] = None,
     step_weight: Optional[jax.Array] = None,
     want_stats: bool = False,
+    corrupt: Optional[jax.Array] = None,
 ):
     """Alg. 1 lines 11-18 against a given (idx, Q*) pair — the commit core.
 
@@ -490,10 +533,22 @@ def _commit_against(
     the async step passes a *stale* snapshot popped from the ring plus its
     pull round (delay-corrected reward) and the staleness discount for the
     Adam step. Returns ``(q, opt, sel, codec_state, rewards, num_users,
-    stats)`` with ``stats`` a traced ``(grad_norm, update_norm)`` pair when
-    ``want_stats`` (telemetry) is on and ``None`` otherwise — the extra
-    row gathers behind the norms are only ever traced when requested, so
-    the default program is unchanged.
+    stats, intact)`` with ``stats`` a traced ``(grad_norm, update_norm)``
+    pair when ``want_stats`` (telemetry) is on and ``None`` otherwise — the
+    extra row gathers behind the norms are only ever traced when requested,
+    so the default program is unchanged.
+
+    ``corrupt`` ((M_s,) bool, the fault layer's pre-sampled wire-corruption
+    schedule) activates payload integrity verification: the encoded uplink
+    wire gets a per-row checksum, the scheduled rows have one bit flipped in
+    transit, and rows whose received checksum mismatches are REJECTED — the
+    model/moment/reward commit treats them as never received (exact no-op
+    rows via ``row_mask``) while the error-feedback residual retains their
+    full effective gradient for retransmit next round. Requires a state
+    built with ``server_init(force_residual=True)`` so the residual exists
+    for stateless codecs too. ``intact`` is the (M_s,) bool accept mask
+    (``None`` when ``corrupt`` is ``None``, which compiles the historical
+    program byte-for-byte).
     """
     row_ops = ops.default_row_ops() if shard is None else shard_row_ops(shard)
     kdim = state.q.shape[1]
@@ -530,7 +585,28 @@ def _commit_against(
     # uplink encode (+ error feedback for stateful codecs): the server only
     # ever sees the decoded wire image of the aggregated gradient
     codec_state = state.codec
-    if is_stateful(up_cfg):
+    intact = None
+    if corrupt is not None:
+        # payload integrity path: checksum the encoded wire, flip the
+        # scheduled rows' bits in transit, reject rows whose received image
+        # no longer matches. Rejected rows keep their full effective
+        # gradient in the residual so the next round's encode retransmits
+        # them; accepted rows behave exactly like the faultless codec path.
+        res_rows = row_ops.gather(codec_state, idx)          # (M_s, K)
+        eff = grads + res_rows
+        wire = encode(up_cfg, eff)
+        decoded = decode(up_cfg, wire, kdim)
+        sums = row_checksums(wire)
+        received = flip_row_bits(wire, corrupt)
+        intact = verify_rows(received, sums)                 # (M_s,) bool
+        keep = intact[:, None]
+        grads_hat = jnp.where(keep, decoded, 0.0)
+        if is_stateful(up_cfg):
+            new_res = jnp.where(keep, eff - decoded, eff)
+        else:
+            new_res = jnp.where(keep, jnp.zeros_like(eff), eff)
+        codec_state = row_ops.scatter_set(codec_state, idx, new_res)
+    elif is_stateful(up_cfg):
         res_rows = row_ops.gather(codec_state, idx)          # (M_s, K)
         _, grads_hat, new_res = encode_with_residual(up_cfg, grads, res_rows)
         codec_state = row_ops.scatter_set(codec_state, idx, new_res)
@@ -543,7 +619,7 @@ def _commit_against(
     # step-discounted by staleness under the async engine
     q_new, opt = adam_update_rows_scattered(
         grads_hat, idx, state.opt, state.q, config.adam, row_ops=row_ops,
-        row_weights=step_weight)
+        row_weights=step_weight, row_mask=intact)
 
     # lines 14-18: reward feedback + posterior update — on the decoded
     # gradients (the only thing a codec-running server would have), delay-
@@ -553,12 +629,13 @@ def _commit_against(
         feedback = optimization_barrier(
             grads_hat - 2.0 * config.l2 * num_users * q_star)
     sel, rewards = selector_observe(sel_cfg, sel, idx, feedback,
-                                    row_ops=row_ops, t_obs=t_obs)
+                                    row_ops=row_ops, t_obs=t_obs,
+                                    row_mask=intact)
     stats = None
     if want_stats:
         delta = row_ops.gather(q_new, idx) - row_ops.gather(state.q, idx)
         stats = (jnp.linalg.norm(grads_hat), jnp.linalg.norm(delta))
-    return q_new, opt, sel, codec_state, rewards, num_users, stats
+    return q_new, opt, sel, codec_state, rewards, num_users, stats, intact
 
 
 def server_round_step_async(
@@ -573,8 +650,17 @@ def server_round_step_async(
     num_users: Optional[int] = None,
     shard: Optional[ShardContext] = None,
     telemetry: bool = False,
+    faults: Any = None,
 ) -> Tuple[ServerState, RoundAux]:
     """One staleness-bounded ASYNC round: publish fresh, commit stale.
+
+    ``faults`` mirrors :func:`server_round_step`'s fault hook: the
+    corruption schedule gates the commit core's checksum reject path (the
+    stale commit's wire rows are the ones corrupted — faults hit arriving
+    traffic, whatever round it was pulled in), survivors/``num_users`` were
+    applied by the driver, and the degradation counters advance on
+    ``state.faults``. ``None`` compiles the historical program
+    byte-for-byte.
 
     ``telemetry`` (static) mirrors :func:`server_round_step`'s flag; the
     async telemetry additionally reports this commit's snapshot age and
@@ -653,19 +739,33 @@ def server_round_step_async(
         (m_s,),
         jnp.power(jnp.float32(config.staleness_discount),
                   s.astype(jnp.float32)))
-    q_new, opt, inner, codec_state, rewards, num_users, stats = \
+    has_corrupt = faults is not None and not isinstance(faults.corrupt, tuple)
+    q_new, opt, inner, codec_state, rewards, num_users, stats, intact = \
         _commit_against(
             state, inner, idx_s, q_star, cohort_x, sel_cfg=sel_cfg,
             config=config, cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users,
             shard=shard, t_obs=t_s, step_weight=step_weight,
-            want_stats=telemetry)
-    bytes_up = state.bytes_up + wire_bytes(up_cfg, m_s, kdim) * num_users
+            want_stats=telemetry,
+            corrupt=faults.corrupt if has_corrupt else None)
+    per_user_bytes = wire_bytes(up_cfg, m_s, kdim)
+    if has_corrupt:
+        per_user_bytes += m_s * CHECKSUM_BYTES_PER_ROW
+    bytes_up = state.bytes_up + per_user_bytes * num_users
+
+    fault_state = state.faults
+    if faults is not None:
+        rejected = (jnp.zeros((), jnp.float32) if intact is None
+                    else jnp.sum(~intact).astype(jnp.float32))
+        fault_state = fault_state_update(
+            state.faults, faults.dropped, faults.stragglers, rejected,
+            rejected * float(wire_bytes(up_cfg, 1, kdim)
+                             + CHECKSUM_BYTES_PER_ROW))
 
     new_state = state._replace(
         q=q_new, opt=opt,
         sel=AsyncSelectorState(inner=inner, pending=pending),
         key=key, t=t_now, bytes_down=bytes_down, bytes_up=bytes_up,
-        codec=codec_state, snapshots=ring,
+        codec=codec_state, snapshots=ring, faults=fault_state,
     )
     aux_tel: Any = ()
     if telemetry:

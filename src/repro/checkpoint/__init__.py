@@ -1,3 +1,15 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_checkpoint
+from repro.checkpoint.io import (
+    CheckpointCorruptionError,
+    checkpoint_step,
+    latest_checkpoint,
+    latest_verified_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+__all__ = [
+    "CheckpointCorruptionError", "checkpoint_step", "latest_checkpoint",
+    "latest_verified_checkpoint", "load_checkpoint", "save_checkpoint",
+    "verify_checkpoint",
+]

@@ -2,10 +2,23 @@
 
 No orbax in this environment; npz + a json treedef sidecar is portable,
 inspectable, and survives process restarts. Keys are '/'-joined paths.
-Supports atomic writes (tmp + rename) and step-numbered retention.
+
+Crash-safety contract (docs/FAULT_MODEL.md):
+
+  * WRITES ARE ATOMIC. The npz is written to a same-directory temp file,
+    fsynced, and ``os.replace``d into place — a process killed mid-write
+    can leave a stray temp file but never a truncated ``ckpt_*.npz``.
+  * CONTENT IS VERIFIED. Every checkpoint gets a ``<name>.sha256`` sidecar
+    (hashed over the exact bytes renamed into place, itself written
+    atomically). :func:`load_checkpoint` re-hashes on load and raises
+    :class:`CheckpointCorruptionError` on mismatch;
+    :func:`latest_verified_checkpoint` walks newest-to-oldest past any
+    corrupt entry so crash-resume always lands on intact bytes. A missing
+    sidecar (pre-hardening checkpoint) is accepted as legacy.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -16,8 +29,47 @@ import jax
 import numpy as np
 
 from repro.obs.trace import span
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.checkpoint")
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+# cumulative hash-verification failures observed by this process (exposed
+# for tests/diagnostics; verification failures are survivable by design —
+# resume just walks back one checkpoint — so they are counted, not raised,
+# in the discovery path)
+_verify_failures = {"total": 0}
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint's bytes no longer match its sha256 sidecar."""
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _sidecar(path: str) -> str:
+    return path + ".sha256"
+
+
+def _write_atomic_text(path: str, text: str) -> None:
+    directory = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -51,7 +103,15 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
         try:
             with open(tmp, "wb") as f:
                 np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+            # hash the exact bytes about to be renamed into place; the
+            # sidecar lands AFTER the data file, so a crash between the two
+            # renames leaves a valid-but-legacy checkpoint, never a
+            # sidecar pointing at absent data
+            digest = _sha256_file(tmp)
             os.replace(tmp, path)
+            _write_atomic_text(_sidecar(path), digest + "\n")
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
@@ -59,9 +119,49 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
     return path
 
 
-def load_checkpoint(path: str, like: Any = None) -> Any:
+def verify_checkpoint(path: str) -> bool:
+    """True iff ``path`` exists, has a sha256 sidecar, and the bytes match.
+
+    Never raises: unreadable/missing/mismatching checkpoints return False
+    (and bump the module failure counter) so discovery loops can walk past
+    damage."""
+    try:
+        with open(_sidecar(path)) as f:
+            expected = f.read().strip()
+        ok = _sha256_file(path) == expected
+    except OSError:
+        _verify_failures["total"] += 1
+        return False
+    if not ok:
+        _verify_failures["total"] += 1
+        log.warning("checkpoint %s failed sha256 verification", path)
+    return ok
+
+
+def checkpoint_step(path: str) -> int:
+    """The step number encoded in a ``ckpt_<step>.npz`` filename."""
+    m = _STEP_RE.search(os.path.basename(path))
+    if not m:
+        raise ValueError(f"not a checkpoint path: {path!r}")
+    return int(m.group(1))
+
+
+def load_checkpoint(path: str, like: Any = None, verify: bool = True) -> Any:
     """Load. With ``like`` (a pytree template), restores the exact structure;
-    without, returns the flat {key: array} dict."""
+    without, returns the flat {key: array} dict.
+
+    ``verify`` re-hashes the file against its sha256 sidecar first and
+    raises :class:`CheckpointCorruptionError` on mismatch; a checkpoint
+    without a sidecar (written before hardening) loads unverified."""
+    if verify and os.path.exists(_sidecar(path)):
+        with open(_sidecar(path)) as f:
+            expected = f.read().strip()
+        actual = _sha256_file(path)
+        if actual != expected:
+            _verify_failures["total"] += 1
+            raise CheckpointCorruptionError(
+                f"checkpoint {path!r} sha256 {actual[:12]}... does not "
+                f"match sidecar {expected[:12]}...")
     with span("checkpoint_load"), np.load(path) as data:
         flat = {k: data[k] for k in data.files}
     if like is None:
@@ -90,6 +190,33 @@ def latest_checkpoint(directory: str) -> Optional[Tuple[int, str]]:
     return best
 
 
+def latest_verified_checkpoint(directory: str) -> Optional[str]:
+    """Newest checkpoint whose sha256 sidecar verifies.
+
+    Walks newest-to-oldest, skipping (and logging) corrupt or sidecar-less
+    damaged entries — the crash-resume discovery path must land on intact
+    bytes even when the newest file was torn by the crash. A checkpoint
+    with NO sidecar is accepted as legacy (pre-hardening) only if every
+    newer checkpoint failed; returns None when nothing loads."""
+    if not os.path.isdir(directory):
+        return None
+    entries = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            entries.append((int(m.group(1)), name))
+    for _, name in sorted(entries, reverse=True):
+        path = os.path.join(directory, name)
+        if os.path.exists(_sidecar(path)):
+            if verify_checkpoint(path):
+                return path
+            log.warning("skipping corrupt checkpoint %s during discovery",
+                        path)
+        else:
+            return path     # legacy: no sidecar to verify against
+    return None
+
+
 def _prune(directory: str, keep: int) -> None:
     entries = []
     for name in os.listdir(directory):
@@ -98,4 +225,7 @@ def _prune(directory: str, keep: int) -> None:
             entries.append((int(m.group(1)), name))
     entries.sort()
     for _, name in entries[:-keep] if keep > 0 else []:
-        os.unlink(os.path.join(directory, name))
+        path = os.path.join(directory, name)
+        os.unlink(path)
+        if os.path.exists(_sidecar(path)):
+            os.unlink(_sidecar(path))

@@ -3,6 +3,11 @@
 See :mod:`repro.compress.codecs` for the codec registry and
 :mod:`repro.kernels.payload_quant` for the fused server-side kernels.
 """
+from repro.compress.checksum import (
+    CHECKSUM_BYTES_PER_ROW,
+    row_checksums,
+    verify_rows,
+)
 from repro.compress.codecs import (
     CODECS,
     CodecConfig,
@@ -33,6 +38,7 @@ from repro.compress.codecs import (
 )
 
 __all__ = [
+    "CHECKSUM_BYTES_PER_ROW", "row_checksums", "verify_rows",
     "CODECS", "CodecConfig", "CodecState", "DenseWire", "QuantWire",
     "TopKWire", "Wire", "codec_state_init", "compression_ratio", "decode",
     "decode_row_block", "dense_bytes", "dequantize_rows",

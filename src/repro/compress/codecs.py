@@ -133,10 +133,17 @@ def direction_configs(cfg: CodecConfig) -> Tuple[CodecConfig, CodecConfig]:
     return cfg, cfg
 
 
-def codec_state_init(cfg: CodecConfig, num_rows: int, dim: int) -> CodecState:
-    """Fresh codec state: EF residual table for topk, empty pytree else."""
+def codec_state_init(cfg: CodecConfig, num_rows: int, dim: int,
+                     force_residual: bool = False) -> CodecState:
+    """Fresh codec state: EF residual table for topk, empty pytree else.
+
+    ``force_residual=True`` allocates the residual for *every* codec —
+    the corruption-degradation mode (repro.faults) rejects checksum-failed
+    wire rows and needs somewhere to retain them for retransmit, even for
+    codecs that are stateless in the clean world.
+    """
     validate_config(cfg)
-    if is_stateful(cfg):
+    if is_stateful(cfg) or force_residual:
         return jnp.zeros((num_rows, dim), jnp.float32)
     return ()
 

@@ -85,14 +85,26 @@ def bts_select(
     return indices, values
 
 
-def bts_update(state: BTSState, indices: jax.Array, rewards: jax.Array) -> BTSState:
+def bts_update(state: BTSState, indices: jax.Array, rewards: jax.Array,
+               weights=None) -> BTSState:
     """Record rewards for the selected arms (Algorithm 1 line 17).
 
     ``indices`` (M_s,) int32, ``rewards`` (M_s,) float32. Non-finite rewards
     (possible at t=1 when the previous-gradient buffer is all zeros) are
     replaced with 0 so a single bad round cannot poison an arm's posterior.
+
+    ``weights`` (M_s,) f32 are per-pull observation weights: weight 0 means
+    the pull was never observed (the fault layer's corrupted rows), so
+    neither the reward sum nor the pull count advances — the arm's
+    posterior is exactly as if it had not been selected. ``None`` keeps the
+    historical unit-weight program byte-for-byte.
     """
     rewards = jnp.where(jnp.isfinite(rewards), rewards, 0.0).astype(jnp.float32)
-    reward_sum = state.reward_sum.at[indices].add(rewards)
-    counts = state.counts.at[indices].add(1.0)
+    if weights is None:
+        reward_sum = state.reward_sum.at[indices].add(rewards)
+        counts = state.counts.at[indices].add(1.0)
+    else:
+        w = weights.astype(jnp.float32)
+        reward_sum = state.reward_sum.at[indices].add(rewards * w)
+        counts = state.counts.at[indices].add(w)
     return state._replace(reward_sum=reward_sum, counts=counts)

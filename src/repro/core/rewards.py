@@ -80,6 +80,7 @@ def compute_rewards(
     beta2: float = 0.99,
     mode: str = "geometric",
     row_ops=None,         # optional kernels.ops.RowOps for sharded buffers
+    row_mask=None,        # (M_s,) bool — False rows were never observed
 ) -> Tuple[jax.Array, RewardState]:
     """Rewards for the selected arms + updated buffers (Alg. 1 lines 14-18).
 
@@ -102,6 +103,12 @@ def compute_rewards(
     lets the same math run against row-sharded buffers inside ``shard_map``
     (the sharded round engine row-shards v/prev_grad exactly like the global
     model). ``None`` keeps the resident-table fast path.
+
+    ``row_mask`` marks rows whose feedback never arrived (checksum-rejected
+    wire rows under the fault layer): their rewards are zeroed and their
+    v/prev_grad buffer rows are scattered back *unchanged* — the arm's
+    reward recursion is exactly as if it had not been pulled. ``None``
+    (the default) compiles the historical program byte-for-byte.
     """
     t = jnp.asarray(t, jnp.float32)
     if row_ops is None:
@@ -132,6 +139,12 @@ def compute_rewards(
     cos_term = w_cos * _cosine_sim(v_new, grads, axis=-1)
     delta_term = (gamma / t) * jnp.sum(jnp.abs(prev_sel - grads), axis=-1)
     rewards = cos_term + delta_term
+
+    if row_mask is not None:
+        keep = row_mask[:, None]
+        rewards = jnp.where(row_mask, rewards, 0.0)
+        v_new = jnp.where(keep, v_new, v_sel)
+        grads = jnp.where(keep, grads, prev_sel)
 
     if row_ops is None:
         new_state = RewardState(

@@ -236,6 +236,7 @@ def selector_observe(
     feedback: jax.Array,   # (num_select, dim) aggregated gradient feedback
     row_ops=None,          # optional kernels.ops.RowOps for sharded buffers
     t_obs: Optional[jax.Array] = None,   # attribution round (async delay fix)
+    row_mask: Optional[jax.Array] = None,  # (num_select,) bool observed gate
 ) -> Tuple[SelectorState, jax.Array]:
     """Feed back the round's aggregated gradients (Alg. 1 lines 14-18).
 
@@ -252,6 +253,13 @@ def selector_observe(
     (synchronous) uses the selector's own round counter; the async engine
     passes the *snapshot* round of the stale pull so the reward's
     time-dependent coefficients are delay-corrected (module docstring).
+
+    ``row_mask`` marks the pulls whose feedback actually arrived (the
+    fault layer's checksum-rejected rows are False): rewards are computed,
+    standardized and accumulated over the observed pulls only — an
+    unobserved arm's posterior, count and reward buffers stay exactly as
+    if the arm had not been pulled. ``None`` keeps the historical program
+    byte-for-byte.
     """
     if cfg.strategy == "bts":
         t_attr = state.t if t_obs is None else t_obs
@@ -259,21 +267,34 @@ def selector_observe(
             state.reward, indices, feedback,
             t=t_attr.astype(jnp.float32),
             gamma=cfg.gamma, beta2=cfg.beta2, mode=cfg.reward_mode,
-            row_ops=row_ops,
+            row_ops=row_ops, row_mask=row_mask,
         )
         if cfg.reward_norm:
-            mu = jnp.mean(rewards)
-            sd = jnp.maximum(jnp.std(rewards), 1e-9)
-            rewards = (rewards - mu) / sd
+            if row_mask is None:
+                mu = jnp.mean(rewards)
+                sd = jnp.maximum(jnp.std(rewards), 1e-9)
+                rewards = (rewards - mu) / sd
+            else:
+                # standardize over the observed pulls only, then re-zero
+                # the unobserved rows so they contribute nothing downstream
+                w = row_mask.astype(jnp.float32)
+                n = jnp.maximum(jnp.sum(w), 1.0)
+                mu = jnp.sum(rewards * w) / n
+                var = jnp.sum(jnp.square(rewards - mu) * w) / n
+                sd = jnp.maximum(jnp.sqrt(var), 1e-9)
+                rewards = jnp.where(row_mask, (rewards - mu) / sd, 0.0)
+        weights = None if row_mask is None else row_mask.astype(jnp.float32)
         return (
             state._replace(
-                bts=bts_update(state.bts, indices, rewards),
+                bts=bts_update(state.bts, indices, rewards, weights=weights),
                 reward=reward_state,
             ),
             rewards,
         )
     if cfg.strategy == "magnitude":
         mass = jnp.sum(jnp.abs(feedback), axis=-1)
+        if row_mask is not None:
+            mass = mass * row_mask.astype(jnp.float32)
         return state._replace(mass=state.mass.at[indices].add(mass)), mass
     return state, jnp.zeros((indices.shape[0],), jnp.float32)
 

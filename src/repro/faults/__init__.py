@@ -1,0 +1,18 @@
+"""Deterministic fault injection: pre-sampled schedules, scan-carry
+damage counters, and the simulated-crash / resume machinery.
+
+See :mod:`repro.faults.core` for the model and docs/FAULT_MODEL.md for
+the taxonomy, determinism guarantees and degradation semantics.
+"""
+from repro.faults.core import (
+    FAULT_SEED_STREAM, FaultConfig, FaultSchedule, FaultState, RoundFaults,
+    SimulatedCrash, build_fault_schedule, fault_state_init,
+    fault_state_update, flip_row_bits, round_faults_xs,
+)
+
+__all__ = [
+    "FAULT_SEED_STREAM", "FaultConfig", "FaultSchedule", "FaultState",
+    "RoundFaults", "SimulatedCrash", "build_fault_schedule",
+    "fault_state_init", "fault_state_update", "flip_row_bits",
+    "round_faults_xs",
+]

@@ -1,0 +1,207 @@
+"""Deterministic fault injection for the federated round engines.
+
+The fault model (docs/FAULT_MODEL.md) is *pre-sampled data, not runtime
+randomness*: :func:`build_fault_schedule` draws every fault the trajectory
+will ever see from one host RNG stream at build time — per-round client
+dropout and straggler timeouts over the cohort slots, per-round wire-row
+corruption over the selected payload rows, and an optional simulated host
+crash at a fixed round. The schedule is fed to the compiled engines as
+ordinary ``lax.scan`` xs (:class:`RoundFaults` slices) and the cumulative
+damage counters ride the scan carry as :class:`FaultState` (the
+``ServerState.faults`` field) — so faulted trajectories are reproducible
+bit-for-bit across the scan/python/shard/async backends and under vmap,
+exactly like the cohort and staleness schedules they mirror
+(``federated/simulation._build`` / ``_staleness_schedule``).
+
+Determinism contract: the dropout/straggler draws consume the RNG stream
+first and the corruption draws second, so enabling corruption never
+perturbs the dropout schedule (and vice versa: ``corrupt_rate=0`` skips
+the corruption draw entirely).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# RNG stream id for the fault schedule: seed+61 keeps it disjoint from the
+# cohort (seed+31) and staleness (seed+47) streams
+FAULT_SEED_STREAM = 61
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by the simulation driver when ``FaultConfig.crash_round``
+    fires: the process "dies" mid-trajectory, losing every round since the
+    last checkpoint. Resume via ``FLSimConfig.resume_from``."""
+
+    def __init__(self, round_: int, checkpoint_dir: Optional[str] = None):
+        self.round_ = round_
+        self.checkpoint_dir = checkpoint_dir
+        where = f" (checkpoints in {checkpoint_dir!r})" if checkpoint_dir \
+            else ""
+        super().__init__(f"simulated host crash at round {round_}{where}")
+
+
+class FaultConfig(NamedTuple):
+    """Static fault-injection knobs (hashable config, never a carry).
+
+    With ``enabled=False`` (the default) every fault hook is skipped at
+    Python/trace time — the compiled programs are bit-identical to a build
+    without this package (``tests/test_faults.py``).
+    """
+
+    enabled: bool = False
+    # per-cohort-slot probability the client drops out (never reports)
+    dropout_rate: float = 0.0
+    # per-cohort-slot probability the client misses the round deadline;
+    # semantics equal dropout for the round (the update never lands) but
+    # the damage is counted separately
+    straggler_rate: float = 0.0
+    # per-payload-row probability of a wire bit flip on the uplink
+    corrupt_rate: float = 0.0
+    # simulated host crash while executing this 1-based round (None = never)
+    crash_round: Optional[int] = None
+    # fault-stream sub-seed: schedules vary with (sim seed, this)
+    seed: int = 0
+
+    def validate(self) -> None:
+        for name in ("dropout_rate", "straggler_rate", "corrupt_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"FaultConfig.{name} must be in [0, 1), "
+                                 f"got {v}")
+        if self.dropout_rate + self.straggler_rate >= 1.0:
+            raise ValueError(
+                "dropout_rate + straggler_rate must be < 1 (a cohort with "
+                "no possible survivors cannot renormalize)")
+        if self.crash_round is not None and self.crash_round < 1:
+            raise ValueError("crash_round is 1-based and must be >= 1, "
+                             f"got {self.crash_round}")
+
+
+class FaultSchedule(NamedTuple):
+    """Host-side pre-sampled schedule for a whole trajectory (numpy)."""
+
+    survivors: np.ndarray        # (rounds, cohort) f32 — 1 kept, 0 lost
+    dropped: np.ndarray          # (rounds,) f32 — dropped clients per round
+    stragglers: np.ndarray       # (rounds,) f32 — stragglers per round
+    corrupt: Optional[np.ndarray]  # (rounds, num_select) bool, or None
+
+
+class RoundFaults(NamedTuple):
+    """One round's fault slice, consumed by the fused round step as scan
+    xs. ``corrupt`` is the empty pytree ``()`` when corruption checking is
+    statically off (so the faults-without-corruption programs carry no
+    checksum ops at all)."""
+
+    survivors: jax.Array         # (cohort,) f32, padded to the block total
+    dropped: jax.Array           # () f32
+    stragglers: jax.Array        # () f32
+    corrupt: Any = ()            # (num_select,) bool, or ()
+
+
+class FaultState(NamedTuple):
+    """Cumulative damage counters riding the scan carry
+    (``ServerState.faults``)."""
+
+    dropped: jax.Array           # () f32 — clients that never reported
+    stragglers: jax.Array        # () f32 — clients past the round deadline
+    corrupt_rows: jax.Array      # () f32 — wire rows rejected at decode
+    retransmit_bytes: jax.Array  # () f32 — byte cost of re-sending them
+
+
+def fault_state_init() -> FaultState:
+    return FaultState(
+        dropped=jnp.zeros((), jnp.float32),
+        stragglers=jnp.zeros((), jnp.float32),
+        corrupt_rows=jnp.zeros((), jnp.float32),
+        retransmit_bytes=jnp.zeros((), jnp.float32),
+    )
+
+
+def fault_state_update(state: FaultState, dropped: jax.Array,
+                       stragglers: jax.Array, corrupt_rows: jax.Array,
+                       retransmit_bytes: jax.Array) -> FaultState:
+    return FaultState(
+        dropped=state.dropped + dropped,
+        stragglers=state.stragglers + stragglers,
+        corrupt_rows=state.corrupt_rows + corrupt_rows,
+        retransmit_bytes=state.retransmit_bytes + retransmit_bytes,
+    )
+
+
+def build_fault_schedule(cfg: FaultConfig, rounds: int, cohort_size: int,
+                         num_select: int, seed: int) -> FaultSchedule:
+    """Pre-sample every fault of the trajectory (host-side, build time).
+
+    One uniform draw per (round, cohort slot) is partitioned into
+    dropout / straggler / survivor bands, so the two loss modes are
+    mutually exclusive and their marginal rates are exact. The corruption
+    draw happens strictly after, and only when ``corrupt_rate > 0``.
+    """
+    rng = np.random.default_rng([seed + FAULT_SEED_STREAM, cfg.seed])
+    u = rng.random((rounds, cohort_size))
+    dropped_mask = u < cfg.dropout_rate
+    straggler_mask = (~dropped_mask) & \
+        (u < cfg.dropout_rate + cfg.straggler_rate)
+    survivors = (~(dropped_mask | straggler_mask)).astype(np.float32)
+    corrupt = None
+    if cfg.corrupt_rate > 0.0:
+        corrupt = rng.random((rounds, num_select)) < cfg.corrupt_rate
+    return FaultSchedule(
+        survivors=survivors,
+        dropped=dropped_mask.sum(axis=1).astype(np.float32),
+        stragglers=straggler_mask.sum(axis=1).astype(np.float32),
+        corrupt=corrupt,
+    )
+
+
+def round_faults_xs(sched: FaultSchedule, start: int, end: int,
+                    pad_to: Optional[int] = None) -> RoundFaults:
+    """Slice rounds ``[start, end)`` of the schedule into scan xs.
+
+    ``pad_to`` zero-pads the survivor axis (padded cohort slots are dead
+    by definition, and a zero pad keeps ``sum(survivors)`` exact)."""
+    surv = sched.survivors[start:end]
+    if pad_to is not None and pad_to > surv.shape[1]:
+        surv = np.pad(surv, ((0, 0), (0, pad_to - surv.shape[1])))
+    corrupt = () if sched.corrupt is None \
+        else jnp.asarray(sched.corrupt[start:end])
+    return RoundFaults(
+        survivors=jnp.asarray(surv, jnp.float32),
+        dropped=jnp.asarray(sched.dropped[start:end]),
+        stragglers=jnp.asarray(sched.stragglers[start:end]),
+        corrupt=corrupt,
+    )
+
+
+def _flip_first_word(leaf: jax.Array, corrupt: jax.Array) -> jax.Array:
+    """XOR the lowest bit of each corrupted row's first element."""
+    rows = leaf.shape[0]
+    flat = leaf.reshape(rows, -1)
+    first = flat[:, 0]
+    if leaf.dtype == jnp.float32:
+        w = jax.lax.bitcast_convert_type(first, jnp.int32)
+        w = jnp.where(corrupt, w ^ jnp.int32(1), w)
+        first = jax.lax.bitcast_convert_type(w, jnp.float32)
+    elif leaf.dtype == jnp.float16:
+        w = jax.lax.bitcast_convert_type(first, jnp.int16)
+        w = jnp.where(corrupt, w ^ jnp.int16(1), w)
+        first = jax.lax.bitcast_convert_type(w, jnp.float16)
+    else:
+        one = jnp.asarray(1, leaf.dtype)
+        first = jnp.where(corrupt, first ^ one, first)
+    return flat.at[:, 0].set(first).reshape(leaf.shape)
+
+
+def flip_row_bits(wire: Any, corrupt: jax.Array) -> Any:
+    """Inject a single bit flip into each corrupted row of a wire pytree.
+
+    The flip lands in the first leaf (values for every codec), so any
+    ``corrupt[i]=True`` row decodes to a different value than was encoded
+    — which :func:`repro.compress.verify_rows` must catch."""
+    leaves, treedef = jax.tree_util.tree_flatten(wire)
+    leaves = [_flip_first_word(leaves[0], corrupt)] + leaves[1:]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -47,6 +47,7 @@ smoothing at read-out time.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -60,8 +61,16 @@ from repro.cf.server import (
     FCFServerConfig, RoundAux, ServerState, ShardContext, server_init,
     server_round_step, server_round_step_async,
 )
+from repro.checkpoint.io import (
+    checkpoint_step, latest_verified_checkpoint, load_checkpoint,
+    save_checkpoint,
+)
 from repro.compress import (
     CodecConfig, direction_configs, validate_config, wire_bytes,
+)
+from repro.faults import (
+    FaultConfig, FaultSchedule, SimulatedCrash, build_fault_schedule,
+    fault_state_init, round_faults_xs,
 )
 from repro.core.selector import (
     STRATEGIES, SelectorConfig, selector_counts,
@@ -155,6 +164,25 @@ class FLSimConfig:
     # bit-identical (tests/test_obs.py). Single-run engines only; the
     # vmapped sweeps reject an enabled config.
     obs: Optional[ObsConfig] = None
+    # fault injection (repro.faults.FaultConfig): deterministic pre-sampled
+    # client dropout / straggler timeouts / wire-row corruption / simulated
+    # host crash, threaded through the compiled engines as scan xs. None or
+    # enabled=False adds ZERO ops — trajectories stay bit-identical
+    # (tests/test_faults.py). Single-run engines only; mutually exclusive
+    # with an enabled obs config (both re-plumb the same scan programs).
+    faults: Optional[FaultConfig] = None
+    # round-checkpoint directory: at every eval boundary the full ServerState
+    # is written with atomic temp+rename and a sha256 sidecar
+    # (repro.checkpoint.io). None disables checkpointing.
+    checkpoint_dir: Optional[str] = None
+    # crash-resume: a checkpoint FILE to resume from, or a DIRECTORY whose
+    # newest hash-verified checkpoint is used. Training skips every round
+    # the checkpoint already committed; because cohorts, staleness and
+    # faults are pre-sampled schedules, the resumed trajectory is
+    # bit-identical to an uninterrupted run (tests/test_faults.py). A
+    # resumed config should clear faults.crash_round (or the run re-crashes
+    # at the same round).
+    resume_from: Optional[str] = None
     seed: int = 0
 
 
@@ -172,6 +200,9 @@ class SimResult:
     rewards: Optional[np.ndarray] = None
     # the raw final server pytree (traced byte counters included)
     server_state: Optional[ServerState] = field(default=None, repr=False)
+    # snapshot_hook invocations that raised (training continues; a serving
+    # publish failure must never abort the round loop)
+    hook_failures: int = 0
 
     def smoothed(self, key: str, window: int = 10) -> float:
         return self.history.rolling_mean(key, window)
@@ -190,6 +221,8 @@ class _SimSetup(NamedTuple):
     staleness: np.ndarray      # (rounds,) int32 pre-sampled snapshot ages
     eval_train: jax.Array      # (E, M)
     eval_test: jax.Array       # (E, M)
+    # pre-sampled fault schedule (repro.faults), None when faults are off
+    fault_sched: Optional[FaultSchedule] = None
 
 
 def _num_select(config: FLSimConfig, num_items: int) -> int:
@@ -240,6 +273,15 @@ def _build(train_j: jax.Array, test_j: jax.Array,
             f"blocks_per_commit must be >= 1, got {config.blocks_per_commit}")
     if config.obs is not None:
         config.obs.validate()
+    fault_cfg = config.faults
+    fault_on = fault_cfg is not None and fault_cfg.enabled
+    if fault_cfg is not None:
+        fault_cfg.validate()
+    if fault_on and config.obs is not None and config.obs.enabled:
+        raise ValueError(
+            "config.faults and config.obs cannot both be enabled: both "
+            "re-plumb the compiled round scans, and their composition is "
+            "untested — run the faulted trajectory without telemetry")
     if is_async and config.mesh_shards is not None \
             and config.blocks_per_commit not in (1, config.mesh_shards):
         raise ValueError(
@@ -280,7 +322,10 @@ def _build(train_j: jax.Array, test_j: jax.Array,
         model.item_factors, sel_cfg,
         key=jax.random.PRNGKey(config.seed + 13),
         config=srv_cfg, codec_cfg=codec_cfg,
-        async_slots=(config.max_staleness + 1) if is_async else None)
+        async_slots=(config.max_staleness + 1) if is_async else None,
+        force_residual=fault_on and fault_cfg.corrupt_rate > 0.0)
+    if fault_on:
+        state0 = state0._replace(faults=fault_state_init())
 
     cohort_n = min(config.theta, num_users)
     rng = np.random.default_rng(config.seed + 31)
@@ -289,6 +334,11 @@ def _build(train_j: jax.Array, test_j: jax.Array,
         for _ in range(config.rounds)
     ]).astype(np.int32)
     staleness = _staleness_schedule(config)
+    fault_sched = None
+    if fault_on:
+        fault_sched = build_fault_schedule(
+            fault_cfg, config.rounds, cohort_n, sel_cfg.num_select,
+            config.seed)
 
     eval_n = min(config.eval_users, num_users)
     eval_ids = jax.random.choice(k_eval, num_users, (eval_n,), replace=False)
@@ -297,6 +347,7 @@ def _build(train_j: jax.Array, test_j: jax.Array,
         codec_cfg=codec_cfg, state0=state0,
         cohorts=cohorts, staleness=staleness,
         eval_train=train_j[eval_ids], eval_test=test_j[eval_ids],
+        fault_sched=fault_sched,
     )
 
 
@@ -323,7 +374,7 @@ def _staleness_schedule(config: FLSimConfig) -> np.ndarray:
 
 
 def _blocked_cohort_x(train_j: jax.Array, ids: jax.Array, shards: int,
-                      num_users: int):
+                      num_users: int, survivors: Optional[jax.Array] = None):
     """Lazy blocked cohort slice for the round step.
 
     ``ids`` is the flat (possibly padded) cohort id vector this caller owns
@@ -331,6 +382,11 @@ def _blocked_cohort_x(train_j: jax.Array, ids: jax.Array, shards: int,
     under ``shard_map``). Returns ``idx -> (C_local, b, M_s)`` where padded
     user rows are zeroed — an all-zero x row solves to p=0 and contributes
     exactly zero to every aggregate, so padding never changes the math.
+
+    ``survivors`` ((total,) f32, the fault layer's padded per-slot keep
+    vector) additionally zeroes dropped/straggling users' rows — the same
+    exact-no-op mechanism as padding, composed multiplicatively with the
+    static pad mask. ``None`` compiles the historical closure untouched.
     """
     total = ids.shape[0]
     c_local = shards
@@ -343,6 +399,8 @@ def _blocked_cohort_x(train_j: jax.Array, ids: jax.Array, shards: int,
         if num_users < total:
             mask = (jnp.arange(total) < num_users).astype(x.dtype)
             x = x * mask[:, None]
+        if survivors is not None:
+            x = x * survivors.astype(x.dtype)[:, None]
         return x.reshape(c_local, b, idx.shape[0])
 
     return cohort_x
@@ -360,9 +418,31 @@ def _pad_cohort(cohort: jax.Array, shards: int) -> jax.Array:
 
 
 def _make_round_fn(train_j: jax.Array, setup: _SimSetup,
-                   cohort_shards: int = 1, telemetry: bool = False):
-    """(state, cohort_ids (B,)) -> (state, RoundAux): one fused FL round."""
+                   cohort_shards: int = 1, telemetry: bool = False,
+                   fault_on: bool = False):
+    """(state, cohort_ids (B,)) -> (state, RoundAux): one fused FL round.
+
+    With ``fault_on`` (static) the returned step additionally consumes this
+    round's :class:`repro.faults.RoundFaults` slice: dropped/straggling
+    users are zeroed out of the cohort (exact no-op rows) and the gradient
+    renormalizes over the traced survivor count; the ``fault_on=False``
+    program is byte-for-byte the historical one.
+    """
     sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
+
+    if fault_on:
+        def faulted_round_fn(state: ServerState, cohort: jax.Array, rf):
+            num_users = cohort.shape[0]
+            ids = _pad_cohort(cohort, cohort_shards)
+            cohort_x = _blocked_cohort_x(train_j, ids, cohort_shards,
+                                         num_users, survivors=rf.survivors)
+            n_eff = jnp.sum(rf.survivors)
+            return server_round_step(
+                state, cohort_x, sel_cfg=sel_cfg, config=srv_cfg,
+                cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg, num_users=n_eff,
+                telemetry=telemetry, faults=rf)
+
+        return faulted_round_fn
 
     def round_fn(state: ServerState, cohort: jax.Array):
         num_users = cohort.shape[0]
@@ -377,9 +457,28 @@ def _make_round_fn(train_j: jax.Array, setup: _SimSetup,
 
 
 def _make_async_round_fn(train_j: jax.Array, setup: _SimSetup, blocks: int,
-                         telemetry: bool = False):
-    """(state, cohort (B,), staleness ()) -> (state, aux): one async round."""
+                         telemetry: bool = False, fault_on: bool = False):
+    """(state, cohort (B,), staleness ()) -> (state, aux): one async round.
+
+    ``fault_on`` mirrors :func:`_make_round_fn`: the faulted step takes a
+    trailing :class:`repro.faults.RoundFaults` argument.
+    """
     sel_cfg, srv_cfg, cf_cfg = setup.sel_cfg, setup.srv_cfg, setup.cf_cfg
+
+    if fault_on:
+        def faulted_round_fn(state: ServerState, cohort: jax.Array,
+                             staleness: jax.Array, rf):
+            num_users = cohort.shape[0]
+            ids = _pad_cohort(cohort, blocks)
+            cohort_x = _blocked_cohort_x(train_j, ids, blocks, num_users,
+                                         survivors=rf.survivors)
+            n_eff = jnp.sum(rf.survivors)
+            return server_round_step_async(
+                state, cohort_x, staleness, sel_cfg=sel_cfg, config=srv_cfg,
+                cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg, num_users=n_eff,
+                telemetry=telemetry, faults=rf)
+
+        return faulted_round_fn
 
     def round_fn(state: ServerState, cohort: jax.Array,
                  staleness: jax.Array):
@@ -449,13 +548,20 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
     is_async = config.backend == "async"
     aux_specs = RoundAux(indices=P(), rewards=P()) if record else None
     telemetry = obs is not None
+    fault_on = config.faults is not None and config.faults.enabled
 
-    def _local_cohort_x(ids, didx, train_rep):
+    def _local_cohort_x(ids, didx, train_rep, survivors=None):
+        # ``survivors`` is the full replicated (d*b,) padded keep vector;
+        # each device slices out its own block so the zeroing matches the
+        # single-device blocked closure exactly
         def cohort_x(idx):
             x = train_rep[ids[:, None], idx[None, :]]        # (b, M_s)
             if padded:
                 pos = didx * b + jnp.arange(b)
                 x = x * (pos < b_total).astype(x.dtype)[:, None]
+            if survivors is not None:
+                local = jax.lax.dynamic_slice_in_dim(survivors, didx * b, b)
+                x = x * local.astype(x.dtype)[:, None]
             return x[None]                                   # (1, b, M_s)
         return cohort_x
 
@@ -542,7 +648,52 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
 
         return run_chunk, state0
 
-    if is_async:
+    if fault_on and is_async:
+        # faulted variants: the RoundFaults xs ride the scan replicated
+        # (P() pytree-prefix spec — survivors/corrupt are payload-sized),
+        # every device slices its own survivor block and the replicated
+        # survivor sum renormalizes the gradient identically on all shards.
+        # The fault_on=False programs below stay byte-for-byte untouched.
+        def chunk(state, cohorts_blk, stale, rf, train_rep):
+            def body(st, xs):
+                cohort_l, s_t, rf_t = xs
+                cohort_x = _local_cohort_x(
+                    cohort_l.reshape(-1), jax.lax.axis_index("data"),
+                    train_rep, survivors=rf_t.survivors)
+                n_eff = jnp.sum(rf_t.survivors)
+                st, aux = server_round_step_async(
+                    st, cohort_x, s_t, sel_cfg=sel_cfg, config=srv_cfg,
+                    cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg,
+                    num_users=n_eff, shard=shard_ctx, faults=rf_t)
+                return st, (aux if record else None)
+
+            return jax.lax.scan(body, state, (cohorts_blk, stale, rf))
+
+        run = jax.jit(shard_map(
+            chunk, mesh=mesh,
+            in_specs=(state_specs, P(None, "data", None), P(), P(), P()),
+            out_specs=(state_specs, aux_specs), check_vma=False))
+    elif fault_on:
+        def chunk(state, cohorts_blk, rf, train_rep):
+            def body(st, xs):
+                cohort_l, rf_t = xs
+                cohort_x = _local_cohort_x(
+                    cohort_l.reshape(-1), jax.lax.axis_index("data"),
+                    train_rep, survivors=rf_t.survivors)
+                n_eff = jnp.sum(rf_t.survivors)
+                st, aux = server_round_step(
+                    st, cohort_x, sel_cfg=sel_cfg, config=srv_cfg,
+                    cf_cfg=cf_cfg, codec_cfg=setup.codec_cfg,
+                    num_users=n_eff, shard=shard_ctx, faults=rf_t)
+                return st, (aux if record else None)
+
+            return jax.lax.scan(body, state, (cohorts_blk, rf))
+
+        run = jax.jit(shard_map(
+            chunk, mesh=mesh,
+            in_specs=(state_specs, P(None, "data", None), P(), P()),
+            out_specs=(state_specs, aux_specs), check_vma=False))
+    elif is_async:
         def chunk(state, cohorts_blk, stale, train_rep):
             # cohorts_blk (R, 1, b) local; stale (R,) + train_rep replicated
             def body(st, xs):
@@ -582,14 +733,18 @@ def make_sharded_round_runner(train_j: jax.Array, setup: _SimSetup,
             in_specs=(state_specs, P(None, "data", None), P()),
             out_specs=(state_specs, aux_specs), check_vma=False))
 
-    def run_chunk(state, cohorts, staleness=None):
+    def run_chunk(state, cohorts, staleness=None, rf=None):
         cohorts = np.asarray(cohorts)
         r = cohorts.shape[0]
         ids = np.pad(cohorts, ((0, 0), (0, d * b - b_total)))
         blocked = jnp.asarray(ids.reshape(r, d, b).astype(np.int32))
         if is_async:
             stale = jnp.asarray(np.asarray(staleness), jnp.int32)
+            if fault_on:
+                return run(state, blocked, stale, rf, train_j)
             return run(state, blocked, stale, train_j)
+        if fault_on:
+            return run(state, blocked, rf, train_j)
         return run(state, blocked, train_j)
 
     return run_chunk, state0
@@ -634,7 +789,7 @@ def _evaluate(q: jax.Array, eval_train: jax.Array, eval_test: jax.Array,
 
 def _finalize(setup: _SimSetup, config: FLSimConfig, state: ServerState,
               history: MetricLogger, aux_chunks: List,
-              csv_path: Optional[str]) -> SimResult:
+              csv_path: Optional[str], hook_failures: int = 0) -> SimResult:
     final = {
         k: history.rolling_mean(k, 10)
         for k in ("precision", "recall", "f1", "map")
@@ -660,14 +815,23 @@ def _finalize(setup: _SimSetup, config: FLSimConfig, state: ServerState,
         selections = np.concatenate(
             [np.asarray(a.indices) for a in aux_chunks])
         rewards = np.concatenate([np.asarray(a.rewards) for a in aux_chunks])
+    bytes_down = rounds * per_round_down
+    bytes_up = rounds * per_round_up
+    if config.faults is not None and config.faults.enabled:
+        # under faults the uplink is no longer shape-constant per round
+        # (survivor renormalization + checksum words), so report the traced
+        # in-state totals instead of rounds x constants
+        bytes_down = int(float(state.bytes_down))
+        bytes_up = int(float(state.bytes_up))
     return SimResult(
         final=final, history=history,
-        bytes_down=rounds * per_round_down,
-        bytes_up=rounds * per_round_up,
+        bytes_down=bytes_down,
+        bytes_up=bytes_up,
         rounds=rounds,
         selection_counts=np.asarray(
             selector_counts(setup.sel_cfg, state.sel)),
         selections=selections, rewards=rewards, server_state=state,
+        hook_failures=hook_failures,
     )
 
 
@@ -715,9 +879,39 @@ def run_fcf_simulation(
 def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
     from jax.experimental import io_callback
 
+    fault_cfg = config.faults
+    fault_on = fault_cfg is not None and fault_cfg.enabled
+    crash_round = fault_cfg.crash_round if fault_on else None
+    start_round = 0
+    if config.resume_from is not None:
+        path = config.resume_from
+        if os.path.isdir(path):
+            found = latest_verified_checkpoint(path)
+            if found is None:
+                raise FileNotFoundError(
+                    f"no verified checkpoint to resume from in {path!r}")
+            path = found
+        start_round = checkpoint_step(path)
+        setup = setup._replace(
+            state0=load_checkpoint(path, like=setup.state0))
+        log.info("resuming from %s at round %d", path, start_round)
+    pad_total = None
+    if fault_on:
+        use_mesh_pad = config.backend == "shard" or (
+            config.backend == "async" and config.mesh_shards is not None)
+        if use_mesh_pad:
+            shards_n = config.mesh_shards or len(jax.devices())
+        elif config.backend == "async":
+            shards_n = config.blocks_per_commit
+        else:
+            shards_n = config.cohort_shards
+        b_total = setup.cohorts.shape[1]
+        pad_total = shards_n * (-(-b_total // shards_n))
+
     history = MetricLogger(csv_path)
     state = setup.state0
     aux_chunks: List = []
+    hook_failures = 0
     emitter = None
     tel_holder = None
     if obs is not None:
@@ -741,7 +935,7 @@ def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
             elif is_async:
                 round_fn = _make_async_round_fn(
                     train_j, setup, config.blocks_per_commit,
-                    telemetry=obs is not None)
+                    telemetry=obs is not None, fault_on=fault_on)
 
                 if obs is not None:
                     def scan_chunk(st, tel, cohorts, stale):
@@ -769,6 +963,21 @@ def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
                             st, tel_holder[0], jnp.asarray(cohorts),
                             jnp.asarray(np.asarray(staleness), jnp.int32))
                         return st, ys
+                elif fault_on:
+                    def scan_chunk(st, cohorts, stale, rf):
+                        def body(s, xs):
+                            cohort, s_t, rf_t = xs
+                            s, aux = round_fn(s, cohort, s_t, rf_t)
+                            return s, (aux if record else None)
+                        return jax.lax.scan(body, st, (cohorts, stale, rf))
+
+                    compiled_async = jax.jit(scan_chunk)
+
+                    def run_chunk(st, cohorts, staleness=None, rf=None):
+                        return compiled_async(
+                            st, jnp.asarray(cohorts),
+                            jnp.asarray(np.asarray(staleness), jnp.int32),
+                            rf)
                 else:
                     def scan_chunk(st, cohorts, stale):
                         def body(s, xs):
@@ -786,7 +995,8 @@ def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
             else:
                 round_fn = _make_round_fn(train_j, setup,
                                           config.cohort_shards,
-                                          telemetry=obs is not None)
+                                          telemetry=obs is not None,
+                                          fault_on=fault_on)
 
                 if obs is not None:
                     def scan_chunk(st, tel, cohorts):
@@ -810,6 +1020,18 @@ def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
                         st, tel_holder[0], ys = compiled(
                             st, tel_holder[0], jnp.asarray(cohorts))
                         return st, ys
+                elif fault_on:
+                    def scan_chunk(st, cohorts, rf):
+                        def body(s, xs):
+                            cohort, rf_t = xs
+                            s, aux = round_fn(s, cohort, rf_t)
+                            return s, (aux if record else None)
+                        return jax.lax.scan(body, st, (cohorts, rf))
+
+                    compiled = jax.jit(scan_chunk)
+
+                    def run_chunk(st, cohorts, staleness=None, rf=None):
+                        return compiled(st, jnp.asarray(cohorts), rf)
                 else:
                     def scan_chunk(st, cohorts):
                         def body(s, cohort):
@@ -824,31 +1046,68 @@ def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
 
             for start, end in _chunk_bounds(config.rounds,
                                             config.eval_every):
-                with span("train_chunk", start=start, end=end,
-                          backend=config.backend):
-                    if is_async:
-                        state, aux = run_chunk(state,
-                                               setup.cohorts[start:end],
-                                               setup.staleness[start:end])
-                    else:
-                        state, aux = run_chunk(state,
-                                               setup.cohorts[start:end])
+                if end <= start_round:
+                    continue    # resume: already committed + checkpointed
+                lo = max(start, start_round)
+                hi = end
+                crash = None
+                if crash_round is not None and lo < crash_round <= end:
+                    # the host "dies" while executing crash_round: rounds
+                    # [lo, crash_round-1] run first and are then LOST —
+                    # state never escapes this frame, so resume can only
+                    # start from the last checkpoint
+                    crash, hi = crash_round, crash_round - 1
+                aux = None
+                if hi > lo:
+                    with span("train_chunk", start=lo, end=hi,
+                              backend=config.backend):
+                        args = [setup.cohorts[lo:hi]]
+                        if is_async:
+                            args.append(setup.staleness[lo:hi])
+                        kw = {}
+                        if fault_on:
+                            kw["rf"] = round_faults_xs(
+                                setup.fault_sched, lo, hi, pad_to=pad_total)
+                        state, aux = run_chunk(state, *args, **kw)
+                if crash is not None:
+                    raise SimulatedCrash(crash, config.checkpoint_dir)
                 if record:
                     aux_chunks.append(aux)
                 with span("eval", round=end):
                     m = _evaluate(state.q, setup.eval_train,
                                   setup.eval_test, config)
                 history.log(end, **m.as_dict())
+                if config.checkpoint_dir is not None:
+                    save_checkpoint(config.checkpoint_dir, end, state)
                 if config.snapshot_hook is not None:
-                    with span("publish", round=end):
-                        config.snapshot_hook(end, state)
+                    try:
+                        with span("publish", round=end):
+                            config.snapshot_hook(end, state)
+                    except Exception:
+                        hook_failures += 1
+                        log.exception(
+                            "snapshot_hook raised at round %d; training "
+                            "continues (the previously published model "
+                            "stays live)", end)
         else:  # "python": the per-round-dispatch reference loop
             round_fn = _make_round_fn(train_j, setup, config.cohort_shards,
-                                      telemetry=obs is not None)
+                                      telemetry=obs is not None,
+                                      fault_on=fault_on)
             step = jax.jit(round_fn)
             tel_step = jax.jit(telemetry_round) if obs is not None else None
-            for t in range(1, config.rounds + 1):
-                state, aux = step(state, jnp.asarray(setup.cohorts[t - 1]))
+            for t in range(start_round + 1, config.rounds + 1):
+                if crash_round is not None and t == crash_round:
+                    raise SimulatedCrash(crash_round, config.checkpoint_dir)
+                if fault_on:
+                    rf_t = jax.tree.map(
+                        lambda a: a[0],
+                        round_faults_xs(setup.fault_sched, t - 1, t,
+                                        pad_to=pad_total))
+                    state, aux = step(
+                        state, jnp.asarray(setup.cohorts[t - 1]), rf_t)
+                else:
+                    state, aux = step(
+                        state, jnp.asarray(setup.cohorts[t - 1]))
                 if obs is not None:
                     tel_holder[0], row = tel_step(
                         tel_holder[0], aux.telemetry, aux.indices,
@@ -862,14 +1121,24 @@ def _run_single(train_j, setup, config, record, obs, csv_path) -> SimResult:
                         m = _evaluate(state.q, setup.eval_train,
                                       setup.eval_test, config)
                     history.log(t, **m.as_dict())
+                    if config.checkpoint_dir is not None:
+                        save_checkpoint(config.checkpoint_dir, t, state)
                     if config.snapshot_hook is not None:
-                        with span("publish", round=t):
-                            config.snapshot_hook(t, state)
+                        try:
+                            with span("publish", round=t):
+                                config.snapshot_hook(t, state)
+                        except Exception:
+                            hook_failures += 1
+                            log.exception(
+                                "snapshot_hook raised at round %d; "
+                                "training continues (the previously "
+                                "published model stays live)", t)
     finally:
         if profiler is not None:
             profiler.__exit__(None, None, None)
 
-    return _finalize(setup, config, state, history, aux_chunks, csv_path)
+    return _finalize(setup, config, state, history, aux_chunks, csv_path,
+                     hook_failures=hook_failures)
 
 
 # ===================================================================== #
@@ -898,6 +1167,12 @@ def run_seed_sweep(
             "config.obs telemetry is single-run only (one stream per "
             "trajectory); run_seed_sweep vmaps the round engine over seeds "
             "— disable obs or use run_fcf_simulation per seed")
+    if config.faults is not None and config.faults.enabled:
+        raise ValueError(
+            "config.faults is single-run only (per-trajectory fault "
+            "schedules and crash/resume semantics); run_seed_sweep vmaps "
+            "the round engine over seeds — disable faults or use "
+            "run_fcf_simulation per seed")
     train_np = np.asarray(train_x)
     test_np = np.asarray(test_x)
     per_seed_data = train_np.ndim == 3

@@ -105,6 +105,7 @@ def adam_update_rows_scattered(
     config: AdamConfig = AdamConfig(),
     row_ops=None,           # optional kernels.ops.RowOps override
     row_weights: Optional[jax.Array] = None,   # (M_s,) staleness discounts
+    row_mask: Optional[jax.Array] = None,      # (M_s,) bool commit gate
 ) -> Tuple[jax.Array, AdamState]:
     """:func:`adam_update_rows` with all row traffic routed through the
     payload gather / scatter kernels (:mod:`repro.kernels.ops`).
@@ -130,6 +131,12 @@ def adam_update_rows_scattered(
     observation. A weight of exactly 1.0 is a bitwise no-op (IEEE multiply
     by one), which is what makes the async engine's ``max_staleness=0``
     trajectory bit-identical to the synchronous scan.
+
+    ``row_mask`` is the fault layer's per-row commit gate (repro.faults):
+    a False row scatters back its *old* table/moment/timestep values — an
+    exact no-op, as if the row's update never arrived — which is how
+    checksum-rejected wire rows are kept out of the model. ``None`` (the
+    default) compiles the exact program this function always built.
     """
     from repro.kernels import ops  # deferred: keep optim importable standalone
 
@@ -139,15 +146,23 @@ def adam_update_rows_scattered(
     t_rows = state.t[indices] + 1            # (M_s,) 1-D: plain jnp indexing
     tf = t_rows.astype(jnp.float32)[:, None]
 
-    m_rows = b1 * row_ops.gather(state.m, indices) + (1 - b1) * grad_rows
-    v_rows = (b2 * row_ops.gather(state.v, indices)
-              + (1 - b2) * jnp.square(grad_rows))
+    m_old = row_ops.gather(state.m, indices)
+    v_old = row_ops.gather(state.v, indices)
+    m_rows = b1 * m_old + (1 - b1) * grad_rows
+    v_rows = b2 * v_old + (1 - b2) * jnp.square(grad_rows)
     mhat = m_rows / (1.0 - jnp.power(b1, tf))
     vhat = v_rows / (1.0 - jnp.power(b2, tf))
     step = config.lr * mhat / (jnp.sqrt(vhat) + config.eps)
     if row_weights is not None:
         step = step * row_weights.astype(jnp.float32)[:, None]
-    new_rows = row_ops.gather(table, indices) - step
+    table_old = row_ops.gather(table, indices)
+    new_rows = table_old - step
+    if row_mask is not None:
+        keep = row_mask[:, None]
+        m_rows = jnp.where(keep, m_rows, m_old)
+        v_rows = jnp.where(keep, v_rows, v_old)
+        new_rows = jnp.where(keep, new_rows, table_old)
+        t_rows = jnp.where(row_mask, t_rows, state.t[indices])
     # pin the update expressions' fusion boundary on the consumer side too:
     # sandwiched between the gather barriers (RowOps contract) and this one,
     # the moment/param math compiles identically no matter which scatter

@@ -13,6 +13,6 @@ fp32 table or a (B, M) score matrix.
   ServingEngine  pad-to-bucket request batching + atomic snapshot swap
 """
 from repro.serve.model import ServingModel
-from repro.serve.engine import ServeStats, ServingEngine
+from repro.serve.engine import LoadShedError, ServeStats, ServingEngine
 
-__all__ = ["ServeStats", "ServingEngine", "ServingModel"]
+__all__ = ["LoadShedError", "ServeStats", "ServingEngine", "ServingModel"]

@@ -36,8 +36,22 @@ from repro.obs.hist import LatencyHistogram
 from repro.obs.prom import Metric, render
 from repro.obs.trace import span
 from repro.serve.model import ServingModel
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.serve")
 
 DEFAULT_BUCKETS = (8, 64, 256)
+
+
+class LoadShedError(RuntimeError):
+    """A request was refused admission (queue full or deadline exceeded).
+
+    ``reason`` is ``"queue"`` or ``"deadline"`` — the same label the
+    ``frs_serve_shed_total`` Prometheus counter is partitioned by."""
+
+    def __init__(self, message: str, reason: str):
+        self.reason = reason
+        super().__init__(message)
 
 
 class ServeStats(NamedTuple):
@@ -47,6 +61,9 @@ class ServeStats(NamedTuple):
     users: int              # real (unpadded) user rows served
     installs: int           # snapshot/model swaps
     version: int            # current model version
+    # trailing defaults keep historical positional constructions valid
+    shed: int = 0           # requests refused admission (queue + deadline)
+    publish_failures: int = 0   # failed snapshot-install attempts
 
 
 class ServingEngine:
@@ -60,17 +77,38 @@ class ServingEngine:
         top_n: int = 10,
         block_m: int = 1024,
         obs: Optional[ObsConfig] = None,
+        max_inflight: Optional[int] = None,
+        admission_deadline_s: Any = None,
+        publish_max_retries: int = 2,
+        publish_backoff_s: float = 0.05,
     ):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"buckets must be positive, got {buckets!r}")
+        if max_inflight is not None and max_inflight <= 0:
+            raise ValueError(
+                f"max_inflight must be positive, got {max_inflight!r}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.top_n = int(top_n)
         self.block_m = int(block_m)
+        # load-shedding knobs: a bounded admission queue (max_inflight
+        # concurrent recommend() calls; None = unbounded) and per-request
+        # admission deadlines (seconds a request may have waited before
+        # entry; a float applies to every bucket, a {bucket: seconds} dict
+        # sets per-bucket budgets — larger buckets usually afford less
+        # queueing since they cost more to score)
+        self.max_inflight = None if max_inflight is None else int(max_inflight)
+        self.admission_deadline_s = admission_deadline_s
+        self.publish_max_retries = int(publish_max_retries)
+        self.publish_backoff_s = float(publish_backoff_s)
         self._lock = threading.Lock()
         self._model = model
         self._requests = 0
         self._users = 0
         self._installs = 0
+        self._shed_queue = 0
+        self._shed_deadline = 0
+        self._publish_failures = 0
+        self._publish_retries = 0
         # observability: metrics() renders regardless, but per-request
         # latency timing (a device sync per bucket chunk) only runs with an
         # enabled obs config — the read path is untouched otherwise
@@ -111,21 +149,47 @@ class ServingEngine:
         engine. Async-engine states publish their freshest encoded ring
         snapshot — the wire rows themselves, never a decoded fp32 Q* —
         while synchronous states (no ring) re-encode the full table.
+
+        Degradation contract: a failed install is retried up to
+        ``publish_max_retries`` times with exponential backoff; if every
+        attempt fails the hook logs, bumps ``frs_serve_publish_failures_
+        total``, and RETURNS — the previously installed model version
+        stays live and the exception never propagates into the training
+        loop (which has its own containment, but should not need it for
+        serving-side faults).
         """
         def hook(round_: int, state) -> None:
-            with span("publish_snapshot", round=round_):
-                if state.snapshots != ():
-                    from repro.cf.server import latest_snapshot
-                    snap = latest_snapshot(state)
-                    self.publish_snapshot(snap)
-                    age = round_ - int(snap.t) if self._obs_on else 0
-                else:
-                    cur = self.model
-                    self.swap(ServingModel.from_dense(
-                        cur.cfg, state.q, version=cur.version + 1))
-                    age = 0     # synchronous states publish their live table
-            with self._lock:
-                self._snapshot_age = age
+            attempts = self.publish_max_retries + 1
+            for attempt in range(attempts):
+                if attempt:
+                    with self._lock:
+                        self._publish_retries += 1
+                    time.sleep(self.publish_backoff_s * 2 ** (attempt - 1))
+                try:
+                    with span("publish_snapshot", round=round_,
+                              attempt=attempt):
+                        if state.snapshots != ():
+                            from repro.cf.server import latest_snapshot
+                            snap = latest_snapshot(state)
+                            self.publish_snapshot(snap)
+                            age = round_ - int(snap.t) if self._obs_on else 0
+                        else:
+                            cur = self.model
+                            self.swap(ServingModel.from_dense(
+                                cur.cfg, state.q, version=cur.version + 1))
+                            age = 0     # sync states publish their live table
+                    with self._lock:
+                        self._snapshot_age = age
+                    return
+                except Exception:
+                    with self._lock:
+                        self._publish_failures += 1
+                    log.exception(
+                        "snapshot install attempt %d/%d failed at round %d",
+                        attempt + 1, attempts, round_)
+            log.error(
+                "giving up on round %d snapshot publish after %d attempts; "
+                "previous model version stays live", round_, attempts)
 
         return hook
 
@@ -133,7 +197,9 @@ class ServingEngine:
         with self._lock:
             return ServeStats(requests=self._requests, users=self._users,
                               installs=self._installs,
-                              version=self._model.version)
+                              version=self._model.version,
+                              shed=self._shed_queue + self._shed_deadline,
+                              publish_failures=self._publish_failures)
 
     # ------------------------------------------------------------- #
     # observability
@@ -165,6 +231,8 @@ class ServingEngine:
             requests, users = self._requests, self._users
             installs, inflight = self._installs, self._inflight
             age = self._snapshot_age
+            shed_q, shed_d = self._shed_queue, self._shed_deadline
+            pub_fail, pub_retry = self._publish_failures, self._publish_retries
             hists = [({"bucket": str(b)}, h.copy())
                      for b, h in sorted(self._lat.items())]
         families = [
@@ -186,6 +254,14 @@ class ServingEngine:
             Metric("frs_serve_resident_bytes", "gauge",
                    "wire-resident serving model bytes",
                    [({}, model.resident_bytes())]),
+            Metric("frs_serve_shed_total", "counter",
+                   "requests refused admission, by reason",
+                   [({"reason": "queue"}, shed_q),
+                    ({"reason": "deadline"}, shed_d)]),
+            Metric("frs_serve_publish_failures_total", "counter",
+                   "failed snapshot-install attempts", [({}, pub_fail)]),
+            Metric("frs_serve_publish_retries_total", "counter",
+                   "snapshot-install retry attempts", [({}, pub_retry)]),
             Metric("frs_serve_latency_seconds", "histogram",
                    "recommend latency per padded request bucket",
                    hists=hists),
@@ -201,11 +277,21 @@ class ServingEngine:
                 return size
         return self.buckets[-1]
 
+    def _deadline_for(self, bucket: int) -> Optional[float]:
+        d = self.admission_deadline_s
+        if d is None:
+            return None
+        if isinstance(d, dict):
+            v = d.get(bucket)
+            return None if v is None else float(v)
+        return float(d)
+
     def recommend(
         self,
         p: jax.Array,                             # (B, K) user factors
         top_n: Optional[int] = None,
         train_mask: Optional[jax.Array] = None,   # (B, M); 1 = exclude
+        admitted_at: Optional[float] = None,      # time.monotonic() at enqueue
     ) -> Tuple[jax.Array, jax.Array]:
         """Top-N items for a batch of users: ``(scores, ids)``, best first.
 
@@ -213,14 +299,37 @@ class ServingEngine:
         largest bucket) and scored against ONE model value grabbed at
         entry, so a concurrent publish never splits a request across model
         versions.
+
+        Load shedding: when ``admitted_at`` (a ``time.monotonic()`` stamp
+        taken where the request entered the system) is older than the
+        bucket's admission deadline, or ``max_inflight`` requests are
+        already executing, the request is refused with
+        :class:`LoadShedError` before any scoring work — shedding stale or
+        excess load costs O(1), keeping admitted-request latency bounded.
         """
         n = self.top_n if top_n is None else int(top_n)
-        model = self.model           # one consistent view for the request
         b = p.shape[0]
+        if admitted_at is not None:
+            deadline = self._deadline_for(self._bucket_for(b))
+            if deadline is not None \
+                    and time.monotonic() - admitted_at > deadline:
+                with self._lock:
+                    self._shed_deadline += 1
+                raise LoadShedError(
+                    f"request of {b} users exceeded its {deadline}s "
+                    f"admission deadline", reason="deadline")
+        with self._lock:
+            # check-and-increment under one lock acquisition: the bounded
+            # queue can never over-admit between a check and a later bump
+            if self.max_inflight is not None \
+                    and self._inflight >= self.max_inflight:
+                self._shed_queue += 1
+                raise LoadShedError(
+                    f"{self._inflight} requests in flight "
+                    f"(max_inflight={self.max_inflight})", reason="queue")
+            self._inflight += 1
+        model = self.model           # one consistent view for the request
         timed = self._obs_on
-        if timed:
-            with self._lock:
-                self._inflight += 1
         try:
             with span("serve_batch", users=b):
                 out_v, out_i = [], []
@@ -242,9 +351,8 @@ class ServingEngine:
                     out_v.append(v)
                     out_i.append(i)
         finally:
-            if timed:
-                with self._lock:
-                    self._inflight -= 1
+            with self._lock:
+                self._inflight -= 1
         with self._lock:
             self._requests += 1
             self._users += b

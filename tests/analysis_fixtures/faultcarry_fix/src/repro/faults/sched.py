@@ -1,0 +1,19 @@
+"""Fixture: fault-carry — carry-pure schedule module with violations."""
+
+ROUND_BANDS = (0.1, 0.2)               # fine: immutable module constant
+
+_pending = []                          # L5: module-level mutable list
+_by_round = {}                         # L6: module-level mutable dict
+_seen = set()                          # L7: constructor call
+
+
+def record(t):
+    global _counter                    # L11: global declaration
+    _counter = t
+
+
+def build(rounds):
+    local = []                         # fine: function-local state
+    for t in range(rounds):
+        local.append(t)
+    return tuple(local)

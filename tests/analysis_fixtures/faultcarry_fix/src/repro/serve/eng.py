@@ -1,0 +1,28 @@
+"""Fixture: fault-carry — except handlers in a degradation layer."""
+
+
+class Engine:
+    def __init__(self):
+        self._publish_failures = 0
+        self.last = None
+
+    def good_counted(self, state):
+        try:
+            self.install(state)
+        except Exception:
+            self._publish_failures += 1    # fine: counter incremented
+
+    def good_reraise(self, state):
+        try:
+            self.install(state)
+        except ValueError:
+            raise                          # fine: re-raised
+
+    def bad_swallow(self, state):
+        try:
+            self.install(state)
+        except Exception:                  # L24: swallowed, uncounted
+            self.last = state
+
+    def install(self, state):
+        self._model = state

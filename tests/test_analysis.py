@@ -13,8 +13,8 @@ from repro.analysis import (
     write_baseline,
 )
 from repro.analysis.rules import (
-    DtypeWidthRule, KernelParityRule, LockGuardRule, PytreeCarryRule,
-    TracedPurityRule, default_rules, rule_names,
+    DtypeWidthRule, FaultCarryRule, KernelParityRule, LockGuardRule,
+    PytreeCarryRule, TracedPurityRule, default_rules, rule_names,
 )
 
 FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
@@ -108,6 +108,43 @@ def test_locks_flag_unguarded_access_only():
         [f.render() for f in findings]
     assert "write" in _at(findings, "lock-guard", "engine.py", 18)[0].message
     assert "read" in _at(findings, "lock-guard", "engine.py", 21)[0].message
+
+
+# --------------------------------------------------------------------- #
+# fault-carry
+# --------------------------------------------------------------------- #
+def test_fault_carry_flags_module_state_and_swallowed_excepts():
+    findings = _lint("faultcarry_fix", [FaultCarryRule()])
+    got = {(f.path.rsplit("/", 1)[-1], f.line) for f in findings}
+    assert ("sched.py", 5) in got, "module-level list"
+    assert ("sched.py", 6) in got, "module-level dict"
+    assert ("sched.py", 7) in got, "module-level set() call"
+    assert ("sched.py", 11) in got, "global declaration"
+    assert ("eng.py", 24) in got, "swallowing except without counter"
+    # compliant constructs stay silent: the tuple constant, function-local
+    # list, counter-incrementing handler and re-raising handler
+    assert len(got) == 5, [f.render() for f in findings]
+    assert all(f.rule == "fault-carry" for f in findings)
+
+
+def test_fault_carry_counter_recognition():
+    """Subscript counters (`d[\"total\"] += 1`) and attribute counters
+    (`self._publish_failures += 1`) both satisfy the except contract."""
+    import ast as ast_mod
+
+    from repro.analysis.rules.faults import _handler_surfaces
+
+    def handler_of(code):
+        tree = ast_mod.parse(code)
+        return next(n for n in ast_mod.walk(tree)
+                    if isinstance(n, ast_mod.ExceptHandler))
+
+    ok = "try:\n    x()\nexcept OSError:\n    _failures['total'] += 1\n"
+    assert _handler_surfaces(handler_of(ok))
+    ok2 = "try:\n    x()\nexcept OSError:\n    self.shed_count += 1\n"
+    assert _handler_surfaces(handler_of(ok2))
+    bad = "try:\n    x()\nexcept OSError:\n    pass\n"
+    assert not _handler_surfaces(handler_of(bad))
 
 
 # --------------------------------------------------------------------- #

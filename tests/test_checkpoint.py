@@ -1,8 +1,25 @@
-"""Checkpoint IO roundtrip tests."""
+"""Checkpoint IO roundtrip + crash-safety tests.
+
+The crash-safety tests (docs/FAULT_MODEL.md) simulate a process killed
+mid-write by injecting an exception into the serializer: the directory
+must keep its previous intact checkpoint, gain no truncated npz, and
+leave no temp litter behind.
+"""
+import os
+
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint.io import latest_checkpoint, load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (
+    CheckpointCorruptionError,
+    checkpoint_step,
+    latest_checkpoint,
+    latest_verified_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
+)
 
 
 def _tree():
@@ -37,3 +54,87 @@ def test_flat_load(tmp_path):
     path = save_checkpoint(str(tmp_path), 0, _tree())
     flat = load_checkpoint(path)
     assert "q" in flat and "opt/m" in flat and "opt/t" in flat
+
+
+# ------------------------------------------------------------------ #
+# crash safety + verification
+# ------------------------------------------------------------------ #
+def test_checkpoint_step():
+    assert checkpoint_step("/a/b/ckpt_00000042.npz") == 42
+    with pytest.raises(ValueError):
+        checkpoint_step("/a/b/weights.npz")
+
+
+def test_sidecar_written_and_verifies(tmp_path):
+    path = save_checkpoint(str(tmp_path), 3, _tree())
+    assert os.path.exists(path + ".sha256")
+    assert verify_checkpoint(path)
+
+
+def test_kill_mid_write_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    """A crash during serialization must not disturb the directory."""
+    tree = _tree()
+    good = save_checkpoint(str(tmp_path), 1, tree)
+    before = sorted(os.listdir(tmp_path))
+
+    import repro.checkpoint.io as io_mod
+
+    def savez_then_die(f, **arrays):
+        f.write(b"PK\x03\x04 truncated npz bytes")  # partial write...
+        raise KeyboardInterrupt("killed mid-write")  # ...then the kill
+
+    monkeypatch.setattr(io_mod.np, "savez", savez_then_die)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(str(tmp_path), 2, tree)
+    monkeypatch.undo()
+
+    # no new npz, no temp litter, old checkpoint still loads verified
+    assert sorted(os.listdir(tmp_path)) == before
+    assert latest_checkpoint(str(tmp_path)) == (1, good)
+    assert verify_checkpoint(good)
+    restored = load_checkpoint(good, like=tree)
+    np.testing.assert_array_equal(np.asarray(restored["q"]),
+                                  np.asarray(tree["q"]))
+
+
+def test_corrupted_checkpoint_rejected(tmp_path):
+    path = save_checkpoint(str(tmp_path), 1, _tree())
+    with open(path, "r+b") as f:
+        f.seek(100)
+        byte = f.read(1)
+        f.seek(100)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    assert not verify_checkpoint(path)
+    # the hash check fires before any npz parsing is attempted
+    with pytest.raises(CheckpointCorruptionError):
+        load_checkpoint(path, like=_tree())
+
+
+def test_latest_verified_skips_corrupt_newest(tmp_path):
+    tree = _tree()
+    older = save_checkpoint(str(tmp_path), 1, tree)
+    newer = save_checkpoint(str(tmp_path), 2, tree)
+    with open(newer, "r+b") as f:
+        f.seek(50)
+        byte = f.read(1)
+        f.seek(50)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    assert latest_verified_checkpoint(str(tmp_path)) == older
+    # with the newest intact it is preferred again
+    newest = save_checkpoint(str(tmp_path), 3, tree)
+    assert latest_verified_checkpoint(str(tmp_path)) == newest
+
+
+def test_latest_verified_accepts_legacy_sidecar_less(tmp_path):
+    path = save_checkpoint(str(tmp_path), 1, _tree())
+    os.unlink(path + ".sha256")
+    assert latest_verified_checkpoint(str(tmp_path)) == path
+    assert latest_verified_checkpoint(str(tmp_path / "missing")) is None
+
+
+def test_prune_removes_sidecars(tmp_path):
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), step, _tree(), keep=2)
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["ckpt_00000004.npz", "ckpt_00000004.npz.sha256",
+                     "ckpt_00000005.npz", "ckpt_00000005.npz.sha256"]

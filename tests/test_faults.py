@@ -1,0 +1,449 @@
+"""Fault-injection subsystem: off-path bit-parity, degradation semantics,
+verified crash-resume, and containment of serving-side hook failures.
+
+The hard contracts (docs/FAULT_MODEL.md):
+
+  * FAULTS-OFF PARITY — ``faults=None`` and ``FaultConfig(enabled=False)``
+    produce BIT-identical trajectories for every backend x codec: the
+    fault machinery is gated at Python/trace time and adds zero ops when
+    off (the obs-layer discipline, reapplied).
+  * DETERMINISTIC SCHEDULES — the fault stream is pre-sampled from
+    ``(config, seed)`` on its own seed stream; two builds agree exactly,
+    and the in-state counters match the schedule's own sums.
+  * DEGRADATION IS EXACT — dropped clients are no-op rows (survivor
+    renormalization), corrupted rows are checksum-rejected into the
+    error-feedback residual, and both leave the surviving math untouched.
+  * CRASH-RESUME PARITY — crash at round t + resume from the newest
+    verified checkpoint == the uninterrupted run, bitwise, including the
+    fault counters; corrupt checkpoints are skipped by hash verification.
+  * CONTAINMENT — a raising snapshot hook never aborts training.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = str(REPO_ROOT / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.compress import (  # noqa: E402
+    CHECKSUM_BYTES_PER_ROW, CodecConfig, direction_configs, encode,
+    row_checksums, verify_rows, wire_bytes,
+)
+from repro.faults import (  # noqa: E402
+    FaultConfig, SimulatedCrash, build_fault_schedule, flip_row_bits,
+    round_faults_xs,
+)
+from repro.federated.simulation import (  # noqa: E402
+    FLSimConfig, run_fcf_simulation,
+)
+from repro.launch.mesh import fake_cpu_devices_env  # noqa: E402
+
+BACKENDS = ("scan", "python", "async")
+CODECS = ("fp32", "int8", "topk")
+
+
+def _mini_data(seed=0, users=60, items=80):
+    rng = np.random.default_rng(seed)
+    train = (rng.random((users, items)) < 0.15).astype(np.float32)
+    test = (rng.random((users, items)) < 0.05).astype(np.float32)
+    return train, test
+
+
+def _cfg(backend, **kw):
+    base = dict(strategy="bts", keep_fraction=0.25, rounds=6, theta=10,
+                eval_every=3, eval_users=40, seed=0, codec="int8",
+                record_selections=True)
+    if backend == "async":
+        base["max_staleness"] = 2
+    base["backend"] = backend
+    base.update(kw)
+    return FLSimConfig(**base)
+
+
+def _assert_bitwise(tag, a, b):
+    np.testing.assert_array_equal(a.selections, b.selections,
+                                  err_msg=f"{tag}: selections")
+    np.testing.assert_array_equal(a.rewards, b.rewards,
+                                  err_msg=f"{tag}: rewards")
+    np.testing.assert_array_equal(np.asarray(a.server_state.q),
+                                  np.asarray(b.server_state.q),
+                                  err_msg=f"{tag}: Q")
+    np.testing.assert_array_equal(np.asarray(a.server_state.opt.m),
+                                  np.asarray(b.server_state.opt.m),
+                                  err_msg=f"{tag}: adam m")
+    assert float(a.server_state.bytes_up) == \
+        float(b.server_state.bytes_up), f"{tag}: bytes_up"
+    assert a.history.series("f1") == b.history.series("f1"), \
+        f"{tag}: f1 trajectory"
+
+
+def _assert_states_bitwise(tag, sa, sb):
+    """Final ServerState parity incl. fault counters (crash-resume)."""
+    np.testing.assert_array_equal(np.asarray(sa.q), np.asarray(sb.q),
+                                  err_msg=f"{tag}: Q")
+    np.testing.assert_array_equal(np.asarray(sa.opt.m),
+                                  np.asarray(sb.opt.m),
+                                  err_msg=f"{tag}: adam m")
+    np.testing.assert_array_equal(np.asarray(sa.opt.v),
+                                  np.asarray(sb.opt.v),
+                                  err_msg=f"{tag}: adam v")
+    assert float(sa.bytes_up) == float(sb.bytes_up), f"{tag}: bytes_up"
+    for field in ("dropped", "stragglers", "corrupt_rows",
+                  "retransmit_bytes"):
+        assert float(getattr(sa.faults, field)) == \
+            float(getattr(sb.faults, field)), f"{tag}: faults.{field}"
+
+
+# --------------------------------------------------------------------- #
+# config validation + composition limits
+# --------------------------------------------------------------------- #
+def test_fault_config_validation():
+    FaultConfig(enabled=True, dropout_rate=0.3, straggler_rate=0.2,
+                corrupt_rate=0.1, crash_round=5).validate()
+    with pytest.raises(ValueError, match="dropout_rate"):
+        FaultConfig(enabled=True, dropout_rate=1.0).validate()
+    with pytest.raises(ValueError, match="straggler"):
+        FaultConfig(enabled=True, dropout_rate=0.6,
+                    straggler_rate=0.5).validate()
+    with pytest.raises(ValueError, match="crash_round"):
+        FaultConfig(enabled=True, crash_round=0).validate()
+
+
+def test_seed_sweep_rejects_enabled_faults():
+    from repro.federated.simulation import run_seed_sweep
+
+    train, test = _mini_data()
+    cfg = _cfg("scan", faults=FaultConfig(enabled=True, dropout_rate=0.1))
+    with pytest.raises(ValueError, match="faults"):
+        run_seed_sweep(train, test, cfg, seeds=(0, 1))
+
+
+def test_faults_and_obs_are_mutually_exclusive():
+    from repro.obs import ObsConfig
+
+    train, test = _mini_data()
+    cfg = _cfg("scan", faults=FaultConfig(enabled=True, dropout_rate=0.1),
+               obs=ObsConfig(enabled=True))
+    with pytest.raises(ValueError, match="faults"):
+        run_fcf_simulation(train, test, cfg)
+
+
+# --------------------------------------------------------------------- #
+# deterministic pre-sampled schedule
+# --------------------------------------------------------------------- #
+def test_schedule_deterministic_and_banded():
+    cfg = FaultConfig(enabled=True, dropout_rate=0.25, straggler_rate=0.15,
+                      corrupt_rate=0.1, seed=3)
+    a = build_fault_schedule(cfg, rounds=50, cohort_size=12, num_select=20,
+                             seed=7)
+    b = build_fault_schedule(cfg, rounds=50, cohort_size=12, num_select=20,
+                             seed=7)
+    np.testing.assert_array_equal(a.survivors, b.survivors)
+    np.testing.assert_array_equal(a.corrupt, b.corrupt)
+    # one uniform draw partitioned into bands: a slot is dropped OR a
+    # straggler, never both, and survivors is exactly the complement
+    assert np.all(a.dropped + a.stragglers
+                  == 12 - a.survivors.sum(axis=1))
+    removed = 1.0 - a.survivors.mean()
+    assert abs(removed - 0.4) < 0.05
+    # a different fault seed reshuffles the stream
+    c = build_fault_schedule(cfg._replace(seed=4), rounds=50,
+                             cohort_size=12, num_select=20, seed=7)
+    assert not np.array_equal(a.survivors, c.survivors)
+
+
+def test_schedule_corrupt_gating_and_xs_padding():
+    cfg = FaultConfig(enabled=True, dropout_rate=0.2, seed=0)
+    sched = build_fault_schedule(cfg, rounds=10, cohort_size=5,
+                                 num_select=8, seed=0)
+    assert sched.corrupt is None          # corrupt_rate=0: no draw at all
+    rf = round_faults_xs(sched, 2, 7, pad_to=8)
+    assert rf.survivors.shape == (5, 8)
+    # padding slots are dead weight, never counted as survivors
+    np.testing.assert_array_equal(np.asarray(rf.survivors[:, 5:]), 0.0)
+    assert isinstance(rf.corrupt, tuple) and rf.corrupt == ()
+
+
+# --------------------------------------------------------------------- #
+# faults-off bit-parity: every backend x codec
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("codec", CODECS)
+def test_disabled_faults_is_bit_identical(backend, codec):
+    """faults=None and FaultConfig(enabled=False) add zero ops."""
+    train, test = _mini_data()
+    cfg = _cfg(backend, codec=codec)
+    base = run_fcf_simulation(train, test, cfg)
+    off = run_fcf_simulation(
+        train, test, replace(cfg, faults=FaultConfig(enabled=False,
+                                                     dropout_rate=0.5)))
+    _assert_bitwise(f"{backend}/{codec}/disabled", base, off)
+
+
+# --------------------------------------------------------------------- #
+# dropout: survivors renormalized, dropped slots exact no-ops
+# --------------------------------------------------------------------- #
+def test_dropout_counters_match_schedule_and_backends_agree():
+    train, test = _mini_data()
+    faults = FaultConfig(enabled=True, dropout_rate=0.3,
+                         straggler_rate=0.1, seed=0)
+    cfg = _cfg("scan", rounds=8, faults=faults)
+    res = run_fcf_simulation(train, test, cfg)
+    sched = build_fault_schedule(faults, cfg.rounds, min(cfg.theta,
+                                                         train.shape[0]),
+                                 num_select=20, seed=cfg.seed)
+    assert float(res.server_state.faults.dropped) == sched.dropped.sum()
+    assert float(res.server_state.faults.stragglers) == \
+        sched.stragglers.sum()
+    # python engine agrees bitwise with the compiled scan
+    py = run_fcf_simulation(train, test, replace(cfg, backend="python"))
+    _assert_bitwise("scan-vs-python/faulted", res, py)
+    # and the degraded trajectory genuinely differs from the clean one
+    clean = run_fcf_simulation(train, test, replace(cfg, faults=None))
+    assert not np.array_equal(np.asarray(res.server_state.q),
+                              np.asarray(clean.server_state.q))
+
+
+def test_async_engine_runs_faulted():
+    train, test = _mini_data()
+    cfg = _cfg("async", rounds=8,
+               faults=FaultConfig(enabled=True, dropout_rate=0.3, seed=0))
+    res = run_fcf_simulation(train, test, cfg)
+    assert float(res.server_state.faults.dropped) > 0
+    assert np.isfinite(np.asarray(res.server_state.q)).all()
+    # deterministic: same config, same trajectory
+    again = run_fcf_simulation(train, test, cfg)
+    _assert_bitwise("async/faulted-repro", res, again)
+
+
+# --------------------------------------------------------------------- #
+# corruption: checksums detect, rejects count, residual retransmits
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", CODECS)
+def test_checksum_detects_single_word_flips(codec):
+    _, up_cfg = direction_configs(CodecConfig(name=codec))
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.standard_normal((6, 16)), jnp.float32)
+    wire = encode(up_cfg, rows)
+    sums = row_checksums(wire)
+    # clean wire verifies
+    np.testing.assert_array_equal(np.asarray(verify_rows(wire, sums)),
+                                  True)
+    # flipping one word in rows {1, 4} is detected exactly there
+    corrupt = jnp.asarray([False, True, False, False, True, False])
+    received = flip_row_bits(wire, corrupt)
+    np.testing.assert_array_equal(np.asarray(verify_rows(received, sums)),
+                                  ~np.asarray(corrupt))
+
+
+@pytest.mark.parametrize("codec", ("fp32", "int8"))
+def test_corruption_rejects_and_prices_retransmits(codec):
+    train, test = _mini_data()
+    faults = FaultConfig(enabled=True, corrupt_rate=0.15, seed=0)
+    cfg = _cfg("scan", rounds=8, codec=codec, faults=faults)
+    res = run_fcf_simulation(train, test, cfg)
+    num_select = 20           # keep_fraction 0.25 of 80 items
+    sched = build_fault_schedule(faults, cfg.rounds, min(cfg.theta,
+                                                         train.shape[0]),
+                                 num_select=num_select, seed=cfg.seed)
+    expected_rejects = float(sched.corrupt.sum())
+    assert expected_rejects > 0, "schedule drew no corruption at this seed"
+    assert float(res.server_state.faults.corrupt_rows) == expected_rejects
+    # retransmit bytes price each rejected row at wire + checksum width
+    _, up_cfg = direction_configs(CodecConfig(name=codec))
+    per_row = wire_bytes(up_cfg, 1, cfg.num_factors) + CHECKSUM_BYTES_PER_ROW
+    assert float(res.server_state.faults.retransmit_bytes) == \
+        expected_rejects * per_row
+    # the uplink carries the checksum overhead vs the clean run
+    clean = run_fcf_simulation(train, test, replace(cfg, faults=None))
+    assert res.bytes_up > clean.bytes_up
+    # rejected updates really were withheld: trajectories diverge
+    assert not np.array_equal(np.asarray(res.server_state.q),
+                              np.asarray(clean.server_state.q))
+
+
+def test_corruption_vmap_safe():
+    """Checksum + flip kernels vmap cleanly (batched fault xs)."""
+    _, up_cfg = direction_configs(CodecConfig(name="int8"))
+    rng = np.random.default_rng(1)
+    rows = jnp.asarray(rng.standard_normal((3, 5, 8)), jnp.float32)
+    corrupt = jnp.asarray(rng.random((3, 5)) < 0.4)
+    wires = jax.vmap(lambda r: encode(up_cfg, r))(rows)
+    sums = jax.vmap(row_checksums)(wires)
+    flipped = jax.vmap(flip_row_bits)(wires, corrupt)
+    ok = jax.vmap(verify_rows)(flipped, sums)
+    np.testing.assert_array_equal(np.asarray(ok), ~np.asarray(corrupt))
+
+
+# --------------------------------------------------------------------- #
+# verified crash-resume
+# --------------------------------------------------------------------- #
+def _resume_cfg(backend, ckpt_dir=None, crash=None, resume=None):
+    faults = FaultConfig(enabled=True, dropout_rate=0.1, seed=0,
+                         crash_round=crash)
+    return _cfg(backend, rounds=9, eval_every=3, faults=faults,
+                checkpoint_dir=ckpt_dir, resume_from=resume)
+
+
+@pytest.mark.parametrize("backend", ("scan", "async"))
+def test_crash_resume_bit_parity(backend, tmp_path):
+    """crash at round t + resume == uninterrupted, bitwise."""
+    train, test = _mini_data()
+    uninterrupted = run_fcf_simulation(train, test, _resume_cfg(backend))
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(SimulatedCrash) as exc:
+        run_fcf_simulation(train, test,
+                           _resume_cfg(backend, ckpt_dir=d, crash=5))
+    assert exc.value.round_ == 5
+    resumed = run_fcf_simulation(
+        train, test, _resume_cfg(backend, ckpt_dir=d, resume=d))
+    _assert_states_bitwise(f"{backend}/resume",
+                           uninterrupted.server_state,
+                           resumed.server_state)
+    # the resumed history covers only post-crash evals, at matching values
+    assert uninterrupted.history.series("f1")[1:] == \
+        resumed.history.series("f1")
+
+
+def test_resume_skips_corrupt_checkpoint(tmp_path):
+    """A checkpoint torn by the crash is hash-rejected during discovery;
+    resume walks back to the newest verified one and still reaches the
+    uninterrupted trajectory bitwise."""
+    train, test = _mini_data()
+    uninterrupted = run_fcf_simulation(train, test, _resume_cfg("scan"))
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(SimulatedCrash):
+        run_fcf_simulation(train, test,
+                           _resume_cfg("scan", ckpt_dir=d, crash=8))
+    # corrupt the newest checkpoint (round 6); round 3 stays intact
+    newest = os.path.join(d, "ckpt_00000006.npz")
+    assert os.path.exists(newest)
+    with open(newest, "r+b") as f:
+        f.seek(64)
+        byte = f.read(1)
+        f.seek(64)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    resumed = run_fcf_simulation(
+        train, test, _resume_cfg("scan", ckpt_dir=d, resume=d))
+    _assert_states_bitwise("resume-past-corruption",
+                           uninterrupted.server_state,
+                           resumed.server_state)
+
+
+def test_resume_from_empty_dir_fails_loudly(tmp_path):
+    train, test = _mini_data()
+    d = str(tmp_path / "nothing")
+    os.makedirs(d)
+    with pytest.raises(FileNotFoundError, match="no verified checkpoint"):
+        run_fcf_simulation(train, test, _resume_cfg("scan", resume=d))
+
+
+def test_python_backend_crash_resume(tmp_path):
+    train, test = _mini_data()
+    uninterrupted = run_fcf_simulation(train, test, _resume_cfg("python"))
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(SimulatedCrash):
+        run_fcf_simulation(train, test,
+                           _resume_cfg("python", ckpt_dir=d, crash=5))
+    resumed = run_fcf_simulation(
+        train, test, _resume_cfg("python", ckpt_dir=d, resume=d))
+    _assert_states_bitwise("python/resume", uninterrupted.server_state,
+                           resumed.server_state)
+
+
+# --------------------------------------------------------------------- #
+# snapshot-hook containment
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ("scan", "python"))
+def test_raising_snapshot_hook_never_aborts_training(backend):
+    train, test = _mini_data()
+    cfg = _cfg(backend)
+    base = run_fcf_simulation(train, test, cfg)
+
+    calls = []
+
+    def exploding_hook(round_, state):
+        calls.append(round_)
+        raise RuntimeError("simulated publish failure")
+
+    res = run_fcf_simulation(train, test,
+                             replace(cfg, snapshot_hook=exploding_hook))
+    assert calls == [3, 6]                # every eval boundary still fired
+    assert res.hook_failures == 2
+    assert base.hook_failures == 0
+    _assert_bitwise(f"{backend}/hook-containment", base, res)
+
+
+# --------------------------------------------------------------------- #
+# D=8 sharded engine (fake-device subprocess, one jax init)
+# --------------------------------------------------------------------- #
+_SHARD_SCRIPT = r"""
+from dataclasses import replace
+import numpy as np
+from repro.faults import FaultConfig
+from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+rng = np.random.default_rng(0)
+train = (rng.random((60, 80)) < 0.15).astype(np.float32)
+test = (rng.random((60, 80)) < 0.05).astype(np.float32)
+
+shard = FLSimConfig(strategy="bts", keep_fraction=0.25, rounds=6, theta=10,
+                    eval_every=3, eval_users=40, seed=0, codec="int8",
+                    record_selections=True, backend="shard", mesh_shards=8)
+
+# faults-off parity: enabled=False is bit-identical to no faults at all
+base = run_fcf_simulation(train, test, shard)
+off = run_fcf_simulation(
+    train, test, replace(shard, faults=FaultConfig(enabled=False)))
+np.testing.assert_array_equal(base.selections, off.selections)
+np.testing.assert_array_equal(np.asarray(base.server_state.q),
+                              np.asarray(off.server_state.q))
+assert base.history.series("f1") == off.history.series("f1")
+
+# faulted parity: D=8 mesh == 8-way blocked scan, bitwise, counters incl.
+faults = FaultConfig(enabled=True, dropout_rate=0.3, corrupt_rate=0.1,
+                     seed=0)
+fs = run_fcf_simulation(train, test, replace(shard, faults=faults))
+ref = run_fcf_simulation(
+    train, test, replace(shard, backend="scan", mesh_shards=None,
+                         cohort_shards=8, faults=faults))
+np.testing.assert_array_equal(np.asarray(fs.server_state.q),
+                              np.asarray(ref.server_state.q))
+for field in ("dropped", "stragglers", "corrupt_rows", "retransmit_bytes"):
+    a = float(getattr(fs.server_state.faults, field))
+    b = float(getattr(ref.server_state.faults, field))
+    assert a == b, (field, a, b)
+assert float(fs.server_state.faults.dropped) > 0
+assert float(fs.server_state.faults.corrupt_rows) > 0
+assert fs.history.series("f1") == ref.history.series("f1")
+
+print("SHARD_FAULTS_OK")
+"""
+
+
+@pytest.mark.subprocess
+def test_shard_backend_fault_parity():
+    """D=8 sharded engine: faults-off parity AND the faulted trajectory
+    bit-matches the 8-way blocked scan reference, fault counters included
+    (corruption math is replicated, so intact masks agree across shards)."""
+    env = fake_cpu_devices_env(8)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=str(REPO_ROOT),
+        timeout=1200,
+    )
+    assert proc.returncode == 0, (
+        f"shard faults subprocess failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+    assert "SHARD_FAULTS_OK" in proc.stdout

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compress import CodecConfig
-from repro.serve import ServingEngine, ServingModel
+from repro.serve import LoadShedError, ServingEngine, ServingModel
 
 M, K, TOP_N = 32, 8, 3
 N_WRITERS, SWAPS_PER_WRITER = 2, 25
@@ -111,3 +111,108 @@ def test_concurrent_swap_read_metrics_consistency():
     text = engine.metrics()
     assert f"frs_serve_installs_total {float(stats.installs)}" in text \
         or f"frs_serve_installs_total {stats.installs}" in text
+
+
+class _ExplodingState:
+    """A ServerState stand-in whose snapshot access always raises."""
+
+    @property
+    def snapshots(self):
+        raise RuntimeError("simulated publish-path failure")
+
+
+def test_swap_under_failed_install_never_tears(tmp_path):
+    """Readers racing a FAILING install must keep the old model in full.
+
+    A publisher hook whose install path raises (every retry) runs
+    concurrently with readers; every read must score against the intact
+    pre-failure table at the pre-failure version — never a torn or
+    partially-installed state — and the engine must count the failures
+    instead of propagating them. A subsequent good swap then goes live.
+    """
+    engine = ServingEngine(_fill_model(0), buckets=(4,), top_n=TOP_N,
+                           block_m=32, publish_max_retries=1,
+                           publish_backoff_s=0.001)
+    v0 = engine.stats().version
+    hook = engine.publisher()
+    stop = threading.Event()
+    errors = []
+
+    def reader(rid):
+        try:
+            p = jnp.ones((2, K), jnp.float32)
+            while not stop.is_set():
+                vals, _ = engine.recommend(p)
+                arr = np.asarray(vals)
+                assert np.all(arr == float(K)), f"torn read: {arr}"
+                s = engine.stats()
+                assert s.version == v0, \
+                    f"failed install changed version: {v0} -> {s.version}"
+        except Exception as e:      # noqa: BLE001
+            errors.append((rid, e))
+
+    threads = [threading.Thread(target=reader, args=(r,)) for r in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for round_ in range(1, 9):
+            hook(round_, _ExplodingState())     # must not raise
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads), "reader threads hung"
+    assert errors == [], errors
+
+    stats = engine.stats()
+    assert stats.version == v0 and stats.installs == 0
+    assert stats.publish_failures == 8 * 2     # 8 rounds x (1 try + 1 retry)
+    text = engine.metrics()
+    assert re.search(r"frs_serve_publish_failures_total 16(\.0)?$",
+                     text, re.MULTILINE)
+    assert re.search(r"frs_serve_publish_retries_total 8(\.0)?$",
+                     text, re.MULTILINE)
+
+    # recovery: a good swap after the failure storm goes fully live
+    engine.swap(_fill_model(5))
+    vals, _ = engine.recommend(jnp.ones((2, K), jnp.float32))
+    assert np.all(np.asarray(vals) == 6.0 * K)
+    assert engine.stats().version == v0 + 1
+
+
+def test_bounded_queue_sheds_and_recovers():
+    """max_inflight=1 + a blocked in-flight read => concurrent requests
+    shed with reason='queue'; the slot frees on completion."""
+    base = _fill_model(0)
+    entered, release = threading.Event(), threading.Event()
+
+    class _SlowModel:
+        version = base.version
+
+        def topn(self, p, n, train_mask=None, block_m=None):
+            entered.set()
+            release.wait(30)
+            return base.topn(p, n, train_mask=train_mask, block_m=block_m)
+
+        def resident_bytes(self):
+            return 0
+
+    engine = ServingEngine(base, buckets=(4,), top_n=TOP_N, block_m=32,
+                           max_inflight=1)
+    engine._model = _SlowModel()
+    p = jnp.ones((2, K), jnp.float32)
+    t = threading.Thread(target=lambda: engine.recommend(p))
+    t.start()
+    assert entered.wait(30), "in-flight request never started"
+    try:
+        with np.testing.assert_raises(LoadShedError):
+            engine.recommend(p)
+    finally:
+        release.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    engine._model = base
+    engine.recommend(p)                 # slot freed: admitted again
+    stats = engine.stats()
+    assert stats.shed == 1 and stats.requests == 2
+    assert 'frs_serve_shed_total{reason="queue"} 1' in engine.metrics()
