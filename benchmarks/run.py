@@ -23,9 +23,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     from benchmarks import (async_cohorts, convergence, fault_tolerance,
                             fcf_experiments, kernel_bench, obs_overhead,
-                            payload_compression, payload_table,
-                            reduction_sweep, roofline, serving,
-                            sharded_rounds, table4)
+                            optimizer_state, payload_compression,
+                            payload_table, reduction_sweep, roofline,
+                            serving, sharded_rounds, table4)
 
     t0 = time.time()
     print("=" * 72)
@@ -43,6 +43,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         sharded_rounds.main(["--dry-run"])
         async_cohorts.main(["--dry-run"])
         fault_tolerance.main(["--dry-run"])
+        optimizer_state.main(["--dry-run"])
         serving.main(["--dry-run"])
         obs_overhead.main(["--dry-run"])
         roofline.main(["--dry-run"])
@@ -82,6 +83,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         fault_tolerance.run()     # regenerates BENCH_fault_tolerance.json
     else:
         fault_tolerance.run_quick()
+
+    # optimizer-state compression: resident footprint, throughput, parity
+    if args.full:
+        optimizer_state.run()     # regenerates BENCH_optimizer_state.json
+    else:
+        optimizer_state.run_quick()
 
     # serving read path: fused compressed scoring vs the dense baseline
     if args.full:

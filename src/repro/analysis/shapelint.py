@@ -32,6 +32,14 @@ DEFAULT_GRID: Tuple[Tuple[int, int, int], ...] = (
 )
 DEFAULT_CODECS = ("fp32", "int8", "topk")
 DEFAULT_STRATEGIES = ("bts", "random")
+# optimizer moment-storage axis: (m_dtype, v_dtype) pairs, None = the
+# frozen fp32 default. Compressed AdamState leaves (int8 codes + scales,
+# bf16 tables, factored (M,)+(K,) pairs) must ride the same scan carry.
+DEFAULT_MOMENTS: Tuple[object, ...] = (
+    None,
+    ("bf16", "factored"),
+    ("int8", "int8"),
+)
 
 
 def _leaf_sig(x):
@@ -53,6 +61,7 @@ def run_shape_lint(
     grid: Sequence[Tuple[int, int, int]] = DEFAULT_GRID,
     codecs: Sequence[str] = DEFAULT_CODECS,
     strategies: Sequence[str] = DEFAULT_STRATEGIES,
+    moments: Sequence[object] = DEFAULT_MOMENTS,
 ) -> List[str]:
     """Run every shape check; return human-readable error strings."""
     import jax
@@ -69,6 +78,7 @@ def run_shape_lint(
     from repro.obs.telemetry import (
         TELEMETRY_FIELDS, telemetry_state_init, telemetry_round,
     )
+    from repro.optim.state_compress import MomentCodecConfig
 
     errors: List[str] = []
     f32 = jnp.float32
@@ -76,7 +86,6 @@ def run_shape_lint(
     for (m, k, theta) in grid:
         m_s = max(2, m // 4)
         cf_cfg = CFConfig(num_users=theta, num_items=m, num_factors=k)
-        srv_cfg = FCFServerConfig(theta=theta)
         q0 = jax.ShapeDtypeStruct((m, k), f32)
         key0 = jax.ShapeDtypeStruct((2,), jnp.uint32)
         cohort = jax.ShapeDtypeStruct((theta, m), f32)
@@ -86,21 +95,28 @@ def run_shape_lint(
                                      num_select=m_s, dim=k)
             for codec in codecs:
                 cc = CodecConfig(name=codec)
-                ctx = f"(M={m}, K={k}, Θ={theta}, {strategy}/{codec})"
-                try:
-                    errors.extend(_check_sync(
-                        jax, ctx, q0, key0, cohort, sel_cfg, srv_cfg,
-                        cf_cfg, cc, m, k, m_s,
-                        server_init, server_round_step))
-                except Exception as e:      # noqa: BLE001 — report, don't die
-                    errors.append(f"{ctx} sync: {type(e).__name__}: {e}")
-                try:
-                    errors.extend(_check_async(
-                        jax, jnp, ctx, q0, key0, cohort, sel_cfg, srv_cfg,
-                        cf_cfg, cc, m, k, m_s,
-                        server_init, server_round_step_async))
-                except Exception as e:      # noqa: BLE001
-                    errors.append(f"{ctx} async: {type(e).__name__}: {e}")
+                for mom in moments:
+                    mc = (None if mom is None
+                          else MomentCodecConfig(m_dtype=mom[0],
+                                                 v_dtype=mom[1]))
+                    srv_cfg = FCFServerConfig(theta=theta, moment=mc)
+                    mtag = "fp32" if mom is None else f"{mom[0]}/{mom[1]}"
+                    ctx = (f"(M={m}, K={k}, Θ={theta}, {strategy}/{codec}, "
+                           f"moment={mtag})")
+                    try:
+                        errors.extend(_check_sync(
+                            jax, ctx, q0, key0, cohort, sel_cfg, srv_cfg,
+                            cf_cfg, cc, m, k, m_s,
+                            server_init, server_round_step))
+                    except Exception as e:  # noqa: BLE001 — report, don't die
+                        errors.append(f"{ctx} sync: {type(e).__name__}: {e}")
+                    try:
+                        errors.extend(_check_async(
+                            jax, jnp, ctx, q0, key0, cohort, sel_cfg, srv_cfg,
+                            cf_cfg, cc, m, k, m_s,
+                            server_init, server_round_step_async))
+                    except Exception as e:      # noqa: BLE001
+                        errors.append(f"{ctx} async: {type(e).__name__}: {e}")
 
         # serving read path: every codec, one (B, N) probe per grid point
         for codec in codecs:

@@ -56,6 +56,12 @@ from repro.optim.adam import (
     AdamConfig, AdamState, adam_init, adam_update_rows,
     adam_update_rows_scattered,
 )
+from repro.optim.state_compress import MomentCodecConfig, needs_sr_key
+
+# fold_in salt deriving the per-commit stochastic-rounding key from the
+# round's selection key (only when the moment config statically needs one,
+# so fp32 programs never see the extra fold)
+_MOMENT_KEY_SALT = 0x6d71    # "mq"
 
 
 class FCFServerConfig(NamedTuple):
@@ -81,6 +87,13 @@ class FCFServerConfig(NamedTuple):
     # damping (0.5) costs more P@10 than the staleness it guards against on
     # a smooth simulated cohort stream.
     staleness_discount: float = 0.8
+    # optimizer-state storage (repro.optim.state_compress): how Adam's
+    # per-row moments live in memory. None (and the all-fp32 config) is the
+    # frozen fp32 path — bit-identical programs to every historical run.
+    # Compressed options (bf16 / int8-with-per-row-scales / SM3-factored v)
+    # shrink the resident optimizer state below the model itself at
+    # 10M-item scale; static config, never part of the scan carry.
+    moment: Optional[MomentCodecConfig] = None
 
 
 class ServerState(NamedTuple):
@@ -278,7 +291,8 @@ def server_init(
     checksum-rejected rows are retained in the residual for retransmit no
     matter which codec runs the uplink.
     """
-    del config  # static hyper-parameters live outside the pytree
+    # config is static hyper-parameters — only the moment-storage choice
+    # shapes the state pytree (compressed AdamState leaves)
     sel: Any = selector_init(sel_cfg)
     snapshots: Any = ()
     if async_slots is not None:
@@ -288,7 +302,7 @@ def server_init(
             item_factors.shape[1])
     return ServerState(
         q=item_factors,
-        opt=adam_init(item_factors, per_row=True),
+        opt=adam_init(item_factors, per_row=True, moment=config.moment),
         sel=sel,
         key=key,
         t=jnp.zeros((), jnp.int32),
@@ -426,14 +440,19 @@ def server_round_step(
     q_star = optimization_barrier(q_star)
     bytes_down = state.bytes_down + wire_bytes(down_cfg, m_s, kdim)
 
-    # lines 11-18: cohort solve, uplink, Adam commit, reward feedback
+    # lines 11-18: cohort solve, uplink, Adam commit, reward feedback.
+    # The stochastic-rounding dither key only exists when the moment config
+    # statically requires one — fp32 programs trace no extra PRNG ops.
+    moment_key = (jax.random.fold_in(k_sel, _MOMENT_KEY_SALT)
+                  if needs_sr_key(config.moment) else None)
     has_corrupt = faults is not None and not isinstance(faults.corrupt, tuple)
     q_new, opt, sel, codec_state, rewards, num_users, stats, intact = \
         _commit_against(
             state, sel, idx, q_star, cohort_x, sel_cfg=sel_cfg, config=config,
             cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users, shard=shard,
             want_stats=telemetry,
-            corrupt=faults.corrupt if has_corrupt else None)
+            corrupt=faults.corrupt if has_corrupt else None,
+            moment_key=moment_key)
     per_user_bytes = wire_bytes(up_cfg, m_s, kdim)
     if has_corrupt:
         per_user_bytes += m_s * CHECKSUM_BYTES_PER_ROW
@@ -525,6 +544,7 @@ def _commit_against(
     step_weight: Optional[jax.Array] = None,
     want_stats: bool = False,
     corrupt: Optional[jax.Array] = None,
+    moment_key: Optional[jax.Array] = None,
 ):
     """Alg. 1 lines 11-18 against a given (idx, Q*) pair — the commit core.
 
@@ -619,7 +639,8 @@ def _commit_against(
     # step-discounted by staleness under the async engine
     q_new, opt = adam_update_rows_scattered(
         grads_hat, idx, state.opt, state.q, config.adam, row_ops=row_ops,
-        row_weights=step_weight, row_mask=intact)
+        row_weights=step_weight, row_mask=intact,
+        moment=config.moment, moment_key=moment_key)
 
     # lines 14-18: reward feedback + posterior update — on the decoded
     # gradients (the only thing a codec-running server would have), delay-
@@ -739,6 +760,8 @@ def server_round_step_async(
         (m_s,),
         jnp.power(jnp.float32(config.staleness_discount),
                   s.astype(jnp.float32)))
+    moment_key = (jax.random.fold_in(k_sel, _MOMENT_KEY_SALT)
+                  if needs_sr_key(config.moment) else None)
     has_corrupt = faults is not None and not isinstance(faults.corrupt, tuple)
     q_new, opt, inner, codec_state, rewards, num_users, stats, intact = \
         _commit_against(
@@ -746,7 +769,8 @@ def server_round_step_async(
             config=config, cf_cfg=cf_cfg, up_cfg=up_cfg, num_users=num_users,
             shard=shard, t_obs=t_s, step_weight=step_weight,
             want_stats=telemetry,
-            corrupt=faults.corrupt if has_corrupt else None)
+            corrupt=faults.corrupt if has_corrupt else None,
+            moment_key=moment_key)
     per_user_bytes = wire_bytes(up_cfg, m_s, kdim)
     if has_corrupt:
         per_user_bytes += m_s * CHECKSUM_BYTES_PER_ROW
@@ -804,6 +828,12 @@ class FCFServer:
 
     def __post_init__(self):
         if self.opt_state is None:
+            from repro.optim.state_compress import is_compressed
+            if is_compressed(self.config.moment):
+                raise ValueError(
+                    "the legacy FCFServer shim only supports fp32 optimizer "
+                    "state; compressed moment configs need the fused round "
+                    "engine (server_init / server_round_step)")
             self.opt_state = adam_init(self.item_factors, per_row=True)
 
     # ---------------------------------------------------------------- #

@@ -26,6 +26,7 @@ import tempfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import ml_dtypes
 import numpy as np
 
 from repro.obs.trace import span
@@ -34,6 +35,12 @@ from repro.utils.logging import get_logger
 log = get_logger("repro.checkpoint")
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+# npz cannot round-trip ml_dtypes.bfloat16 (numpy reloads it as an opaque
+# void dtype) — bf16 leaves (compressed optimizer moments) are stored as
+# their raw uint16 bit patterns under a suffixed key and viewed back on
+# load. Bit-exact both ways.
+_BF16_SUFFIX = "::bf16"
 
 # cumulative hash-verification failures observed by this process (exposed
 # for tests/diagnostics; verification failures are survivable by design —
@@ -77,7 +84,10 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
     paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in paths_leaves:
         key = "/".join(_path_str(p) for p in path) or "leaf"
-        flat[key] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        if arr.dtype == ml_dtypes.bfloat16:
+            key, arr = key + _BF16_SUFFIX, arr.view(np.uint16)
+        flat[key] = arr
     return flat
 
 
@@ -163,7 +173,12 @@ def load_checkpoint(path: str, like: Any = None, verify: bool = True) -> Any:
                 f"checkpoint {path!r} sha256 {actual[:12]}... does not "
                 f"match sidecar {expected[:12]}...")
     with span("checkpoint_load"), np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
+        flat = {}
+        for k in data.files:
+            if k.endswith(_BF16_SUFFIX):
+                flat[k[:-len(_BF16_SUFFIX)]] = data[k].view(ml_dtypes.bfloat16)
+            else:
+                flat[k] = data[k]
     if like is None:
         return flat
     paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)

@@ -28,6 +28,7 @@ from repro.compress.codecs import (
     is_stateful,
     pack_int4,
     quantize_rows,
+    quantize_rows_stochastic,
     roundtrip,
     slice_rows,
     topk_k,
@@ -43,7 +44,8 @@ __all__ = [
     "TopKWire", "Wire", "codec_state_init", "compression_ratio", "decode",
     "decode_row_block", "dense_bytes", "dequantize_rows",
     "direction_configs", "encode", "encode_with_residual",
-    "is_stateful", "pack_int4", "quantize_rows", "roundtrip", "slice_rows",
+    "is_stateful", "pack_int4", "quantize_rows",
+    "quantize_rows_stochastic", "roundtrip", "slice_rows",
     "topk_k", "unpack_int4", "validate_config", "wire_bytes",
     "wire_resident_bytes",
 ]

@@ -171,6 +171,33 @@ def quantize_rows(rows: jax.Array, nbits: int = 8) -> Tuple[jax.Array, jax.Array
     return codes, scales
 
 
+def quantize_rows_stochastic(
+    rows: jax.Array, noise: jax.Array, nbits: int = 8
+) -> Tuple[jax.Array, jax.Array]:
+    """:func:`quantize_rows` with stochastic instead of nearest rounding.
+
+    ``noise`` is U[0, 1) per value (same shape as ``rows``); the code is
+    ``floor(rows / scale + u)``, so ``E[code * scale] = rows`` exactly —
+    the unbiasedness that lets low-bit optimizer moments accumulate
+    sub-quantum updates instead of rounding them away every step
+    (:mod:`repro.optim.state_compress`). Scales are IDENTICAL to the
+    deterministic path (absmax is rounding-free), so the wire/resident
+    layout and the all-zero-row behaviour are unchanged. The absmax
+    element itself always maps onto the end of the grid (``floor(±qmax+u)``
+    is ``±qmax`` for any u in [0, 1)), so a stochastic encode still
+    saturates the code range and re-encoding a decoded block keeps its
+    scale bit-for-bit.
+    """
+    qmax = _QMAX[nbits]
+    rows = rows.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)    # (rows, 1)
+    scales = absmax * (1.0 / qmax)
+    inv = jnp.where(scales > 0, 1.0 / scales, 0.0)
+    codes = jnp.clip(jnp.floor(rows * inv + noise.astype(jnp.float32)),
+                     -qmax, qmax).astype(jnp.int8)
+    return codes, scales
+
+
 def dequantize_rows(codes: jax.Array, scales: jax.Array) -> jax.Array:
     """Inverse of :func:`quantize_rows`: ``codes * scale`` as float32."""
     return codes.astype(jnp.float32) * scales.astype(jnp.float32)

@@ -81,6 +81,9 @@ from repro.obs.telemetry import (
 )
 from repro.obs.trace import install_tracer, span
 from repro.optim.adam import AdamConfig
+from repro.optim.state_compress import (
+    MomentCodecConfig, validate_config as validate_moment_config,
+)
 from repro.utils.logging import MetricLogger, get_logger
 
 log = get_logger("repro.fl")
@@ -109,6 +112,15 @@ class FLSimConfig:
     reward_norm: bool = True             # per-round reward standardization
     # payload wire format (repro.compress): fp32 | fp16 | int8 | int4 | topk
     codec: str = "fp32"
+    # optimizer-state storage (repro.optim.state_compress): how Adam's
+    # per-row moments live in server memory. fp32/fp32 (the default) is the
+    # frozen path — programs bit-identical to every historical run. Other
+    # choices (m: fp32|bf16|int8; v: fp32|bf16|int8|factored) shrink the
+    # resident optimizer state (benchmarks/optimizer_state.py).
+    moment_m_dtype: str = "fp32"
+    moment_v_dtype: str = "fp32"
+    # int8 moment writes round stochastically (unbiased) when True
+    moment_stochastic_rounding: bool = True
     codec_topk_fraction: float = 0.25    # topk: fraction of dim kept per row
     codec_error_feedback: bool = True    # topk: carry the EF residual
     codec_int4_error_feedback: bool = False  # int4: carry the EF residual
@@ -304,12 +316,19 @@ def _build(train_j: jax.Array, test_j: jax.Array,
         tau_theta=config.tau_theta, reward_mode=config.reward_mode,
         reward_norm=config.reward_norm,
     )
+    moment_cfg = None
+    if (config.moment_m_dtype, config.moment_v_dtype) != ("fp32", "fp32"):
+        moment_cfg = MomentCodecConfig(
+            m_dtype=config.moment_m_dtype, v_dtype=config.moment_v_dtype,
+            stochastic_rounding=config.moment_stochastic_rounding)
+        validate_moment_config(moment_cfg)
     srv_cfg = FCFServerConfig(
         theta=config.theta,
         adam=AdamConfig(lr=config.lr, beta1=config.beta1,
                         beta2=config.beta2, eps=1e-8),
         reward_feedback=config.reward_feedback, l2=config.l2,
         staleness_discount=config.staleness_discount,
+        moment=moment_cfg,
     )
     codec_cfg = CodecConfig(
         name=config.codec, topk_fraction=config.codec_topk_fraction,

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _flash
 from repro.kernels import fcf_grad as _fcf
+from repro.kernels import moment_quant as _mq
 from repro.kernels import payload_gather as _pg
 from repro.kernels import payload_quant as _pq
 from repro.kernels import payload_score as _ps
@@ -104,6 +105,55 @@ def gather_quantize_rows_block(table: jax.Array, local_idx: jax.Array):
         return _ref.gather_quantize_rows_block_ref(table, local_idx)
     return _pq.gather_quantize_rows_block(table, local_idx,
                                           interpret=_interpret())
+
+
+# ------------------------------------------------------------------ #
+# compressed optimizer-moment row ops (repro.optim.state_compress):
+# int8 moment tables are read and written through these fused
+# dequant/requant kernels so the full-table fp32 moments never exist.
+# ------------------------------------------------------------------ #
+def gather_dequant_rows(
+    codes: jax.Array, scales: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """Fused moment read: f32 rows = codes[idx] * scales[idx]."""
+    if _use_ref():
+        return _ref.gather_dequant_rows_ref(codes, scales, idx)
+    return _mq.gather_dequant_rows(codes, scales, idx, interpret=_interpret())
+
+
+def quant_scatter_set_rows(
+    codes: jax.Array, scales: jax.Array, idx: jax.Array, rows: jax.Array,
+    noise: Optional[jax.Array] = None,
+):
+    """Fused moment write: (codes[idx], scales[idx]) = quantize(rows);
+    stochastic floor-rounding when ``noise`` (U[0,1) dither) is given."""
+    if _use_ref():
+        return _ref.quant_scatter_set_rows_ref(codes, scales, idx, rows,
+                                               noise)
+    return _mq.quant_scatter_set_rows(codes, scales, idx, rows, noise,
+                                      interpret=_interpret())
+
+
+def gather_dequant_rows_block(
+    codes: jax.Array, scales: jax.Array, local_idx: jax.Array
+) -> jax.Array:
+    """Shard-local fused moment read over one row block (clamped gather)."""
+    if _use_ref():
+        return _ref.gather_dequant_rows_block_ref(codes, scales, local_idx)
+    return _mq.gather_dequant_rows_block(codes, scales, local_idx,
+                                         interpret=_interpret())
+
+
+def quant_scatter_set_rows_block(
+    codes: jax.Array, scales: jax.Array, local_idx: jax.Array,
+    rows: jax.Array, noise: Optional[jax.Array] = None,
+):
+    """Shard-local fused moment write: out-of-range entries dropped."""
+    if _use_ref():
+        return _ref.quant_scatter_set_rows_block_ref(codes, scales, local_idx,
+                                                     rows, noise)
+    return _mq.quant_scatter_set_rows_block(codes, scales, local_idx, rows,
+                                            noise, interpret=_interpret())
 
 
 class RowOps(NamedTuple):

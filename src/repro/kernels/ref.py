@@ -87,6 +87,63 @@ def gather_quantize_rows_block_ref(table: jax.Array, local_idx: jax.Array):
         table, jnp.clip(local_idx, 0, table.shape[0] - 1))
 
 
+def gather_dequant_rows_ref(
+    codes: jax.Array, scales: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """Fused moment read: ``out[i] = dequantize(codes[idx[i]], scales[idx[i]])``.
+
+    Delegates to the canonical codec math so the Pallas kernel's
+    bit-exactness contract is against the arithmetic the pure
+    compressed-state path (sharded engine) uses.
+    """
+    from repro.compress.codecs import dequantize_rows
+
+    return dequantize_rows(codes[idx], scales[idx])
+
+
+def quant_scatter_set_rows_ref(
+    codes: jax.Array, scales: jax.Array, idx: jax.Array, rows: jax.Array,
+    noise: Optional[jax.Array] = None,
+):
+    """Fused moment write: ``(codes[idx[i]], scales[idx[i]]) =
+    quantize(rows[i])`` — stochastic (floor + U[0,1) dither) when ``noise``
+    is given, nearest otherwise. Unique ``idx``."""
+    from repro.compress.codecs import quantize_rows, quantize_rows_stochastic
+
+    if noise is None:
+        new_codes, new_scales = quantize_rows(rows, nbits=8)
+    else:
+        new_codes, new_scales = quantize_rows_stochastic(rows, noise, nbits=8)
+    return (codes.at[idx].set(new_codes),
+            scales.at[idx].set(new_scales.astype(scales.dtype)))
+
+
+def gather_dequant_rows_block_ref(
+    codes: jax.Array, scales: jax.Array, local_idx: jax.Array
+) -> jax.Array:
+    """Shard-local fused moment read (clamped gather + dequantize)."""
+    return gather_dequant_rows_ref(
+        codes, scales, jnp.clip(local_idx, 0, codes.shape[0] - 1))
+
+
+def quant_scatter_set_rows_block_ref(
+    codes: jax.Array, scales: jax.Array, local_idx: jax.Array,
+    rows: jax.Array, noise: Optional[jax.Array] = None,
+):
+    """Shard-local fused moment write: in-range rows requantized+written,
+    out-of-range (foreign-shard) entries dropped."""
+    from repro.compress.codecs import quantize_rows, quantize_rows_stochastic
+
+    if noise is None:
+        new_codes, new_scales = quantize_rows(rows, nbits=8)
+    else:
+        new_codes, new_scales = quantize_rows_stochastic(rows, noise, nbits=8)
+    m = codes.shape[0]
+    safe = jnp.where((local_idx >= 0) & (local_idx < m), local_idx, m)
+    return (codes.at[safe].set(new_codes, mode="drop"),
+            scales.at[safe].set(new_scales.astype(scales.dtype), mode="drop"))
+
+
 NEG_INF = -1e30     # train-mask sentinel, shared with repro.cf.metrics
 
 

@@ -1,8 +1,15 @@
 from repro.optim.adam import (
-    AdamConfig, AdamState, adam_init, adam_update, adam_update_rows, sgd_update,
+    AdamConfig, AdamState, adam_init, adam_update, adam_update_rows,
+    adam_update_rows_scattered, sgd_update,
+)
+from repro.optim.state_compress import (
+    FactoredMoment, MomentCodecConfig, QuantMoment,
+    adam_update_rows_compressed, moment_nbytes, state_nbytes,
 )
 
 __all__ = [
     "AdamConfig", "AdamState", "adam_init", "adam_update", "adam_update_rows",
-    "sgd_update",
+    "adam_update_rows_scattered", "sgd_update",
+    "FactoredMoment", "MomentCodecConfig", "QuantMoment",
+    "adam_update_rows_compressed", "moment_nbytes", "state_nbytes",
 ]

@@ -35,11 +35,37 @@ class AdamState(NamedTuple):
     t: jax.Array   # scalar step count (dense) or (M,) per-row step counts
 
 
-def adam_init(params: Any, per_row: bool = False) -> AdamState:
-    zeros = jax.tree.map(jnp.zeros_like, params)
+def adam_init(params: Any, per_row: bool = False,
+              moment: Optional[Any] = None) -> AdamState:
+    """Zero state for ``params``. ``per_row=True`` is the row-subset mode
+    over a single (M, K) table (per-row timesteps); ``moment`` (a
+    :class:`repro.optim.state_compress.MomentCodecConfig`) selects
+    compressed moment storage for that table — ``None`` or the fp32
+    default allocates exactly the historical fp32 state."""
     if per_row:
+        if not (hasattr(params, "shape") and hasattr(params, "dtype")):
+            raise TypeError(
+                "adam_init(per_row=True) operates on a single (M, K) row "
+                f"table, not a pytree; got {type(params).__name__}. Build "
+                "one per-row AdamState per table, or use per_row=False for "
+                "pytree parameters.")
         num_rows = params.shape[0]
-        return AdamState(m=zeros, v=zeros, t=jnp.zeros((num_rows,), jnp.int32))
+        t = jnp.zeros((num_rows,), jnp.int32)
+        if moment is not None:
+            from repro.optim import state_compress as sc  # deferred: no cycle
+
+            if sc.is_compressed(moment):
+                dim = params.shape[1]
+                return AdamState(
+                    m=sc.moment_init(moment.m_dtype, num_rows, dim),
+                    v=sc.moment_init(moment.v_dtype, num_rows, dim),
+                    t=t)
+        return AdamState(m=jnp.zeros_like(params), v=jnp.zeros_like(params),
+                         t=t)
+    if moment is not None:
+        raise ValueError("compressed moment storage (moment=...) requires "
+                         "per_row=True — dense pytree Adam stays fp32")
+    zeros = jax.tree.map(jnp.zeros_like, params)
     return AdamState(m=zeros, v=zeros, t=jnp.zeros((), jnp.int32))
 
 
@@ -106,6 +132,8 @@ def adam_update_rows_scattered(
     row_ops=None,           # optional kernels.ops.RowOps override
     row_weights: Optional[jax.Array] = None,   # (M_s,) staleness discounts
     row_mask: Optional[jax.Array] = None,      # (M_s,) bool commit gate
+    moment: Optional[Any] = None,              # MomentCodecConfig (fp32=None)
+    moment_key: Optional[jax.Array] = None,    # SR dither key (int8 moments)
 ) -> Tuple[jax.Array, AdamState]:
     """:func:`adam_update_rows` with all row traffic routed through the
     payload gather / scatter kernels (:mod:`repro.kernels.ops`).
@@ -137,9 +165,26 @@ def adam_update_rows_scattered(
     exact no-op, as if the row's update never arrived — which is how
     checksum-rejected wire rows are kept out of the model. ``None`` (the
     default) compiles the exact program this function always built.
+
+    ``moment`` (a :class:`repro.optim.state_compress.MomentCodecConfig`)
+    selects compressed moment storage: the update decodes the selected
+    rows' moments to fp32 tiles, runs this exact math, and re-encodes —
+    fp32 moments of the full table are never materialized. ``None`` or
+    the fp32 default takes the code path below UNTOUCHED (the frozen ==
+    today contract). ``moment_key`` seeds the stochastic-rounding dither
+    for int8 moment writes (required iff the config stochastically
+    rounds an int8 moment).
     """
     from repro.kernels import ops  # deferred: keep optim importable standalone
 
+    if moment is not None:
+        from repro.optim import state_compress as sc  # deferred: no cycle
+
+        if sc.is_compressed(moment):
+            return sc.adam_update_rows_compressed(
+                grad_rows, indices, state, table, config, moment,
+                key=moment_key, row_ops=row_ops, row_weights=row_weights,
+                row_mask=row_mask)
     if row_ops is None:
         row_ops = ops.default_row_ops()
     b1, b2 = config.beta1, config.beta2

@@ -138,3 +138,84 @@ def test_prune_removes_sidecars(tmp_path):
     names = sorted(os.listdir(tmp_path))
     assert names == ["ckpt_00000004.npz", "ckpt_00000004.npz.sha256",
                      "ckpt_00000005.npz", "ckpt_00000005.npz.sha256"]
+
+
+# ------------------------------------------------------------------ #
+# compressed optimizer state (bf16 / int8 / factored moment pytrees)
+# ------------------------------------------------------------------ #
+def _compressed_state(moment):
+    import jax
+
+    from repro.optim.adam import adam_init
+    from repro.optim.state_compress import MomentCodecConfig
+
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    state = adam_init(table, per_row=True,
+                      moment=MomentCodecConfig(*moment))
+    # dirty every leaf so the roundtrip exercises real bit patterns, not
+    # zeros (bf16 zeros round-trip even through a broken encoder)
+    return jax.tree.map(
+        lambda a: a + jnp.asarray(
+            rng.standard_normal(a.shape) * 3, a.dtype).reshape(a.shape),
+        state)
+
+
+@pytest.mark.parametrize("moment", [
+    ("bf16", "bf16"), ("int8", "int8"), ("int8", "factored"),
+    ("bf16", "factored"),
+])
+def test_compressed_state_roundtrip_bit_exact(tmp_path, moment):
+    """Compressed AdamState pytrees (bf16 tables stored as uint16 views,
+    int8 codes, factored (M,)+(K,) pairs) must restore BIT-identical —
+    crash-resume parity depends on it."""
+    import jax
+
+    state = _compressed_state(moment)
+    path = save_checkpoint(str(tmp_path), 5, state)
+    assert verify_checkpoint(path)
+    restored = load_checkpoint(path, like=state)
+    for got, want in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        assert got.dtype == want.dtype
+        # compare raw bit patterns, not values (NaN-proof, bf16-proof)
+        a = np.atleast_1d(np.asarray(got))
+        b = np.atleast_1d(np.asarray(want))
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+
+
+def test_bf16_flat_load_strips_suffix(tmp_path):
+    """Without a ``like`` template the flat dict must already present
+    bf16 leaves under their original keys, decoded from the uint16 view."""
+    import ml_dtypes
+
+    tree = {"m": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+            "t": jnp.asarray(3, jnp.int32)}
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    flat = load_checkpoint(path)
+    assert set(flat) == {"m", "t"}
+    assert flat["m"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(flat["m"], np.float32), [[1.5, -2.25]])
+
+
+def test_compressed_crash_resume_bit_parity(tmp_path):
+    """Run a compressed-moment simulation with checkpointing, resume from
+    the mid-run checkpoint, and require the SAME final Q bit-for-bit as
+    the uninterrupted run — the fault layer's resume contract extended to
+    quantized optimizer state."""
+    from dataclasses import replace
+
+    from repro.data.synthetic import load_dataset
+    from repro.federated.simulation import FLSimConfig, run_fcf_simulation
+
+    _, train, test = load_dataset("movielens-mini", seed=0)
+    base = FLSimConfig(rounds=8, theta=12, keep_fraction=0.1,
+                       eval_every=4, eval_users=32, seed=0,
+                       moment_m_dtype="int8", moment_v_dtype="factored",
+                       checkpoint_dir=str(tmp_path / "ck"))
+    full = run_fcf_simulation(train, test, base)
+    resumed = run_fcf_simulation(
+        train, test,
+        replace(base, resume_from=str(tmp_path / "ck")))
+    np.testing.assert_array_equal(np.asarray(full.server_state.q),
+                                  np.asarray(resumed.server_state.q))

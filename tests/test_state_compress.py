@@ -1,0 +1,336 @@
+"""Compressed Adam moment storage: codec properties, kernel parity, and
+the frozen-fp32 contract (docs/INVARIANTS.md §7).
+
+Covers the :mod:`repro.optim.state_compress` module and its fused
+:mod:`repro.kernels.moment_quant` kernels — ``gather_dequant_rows`` /
+``quant_scatter_set_rows`` and their ``_block`` variants — against the
+``ref.py`` oracles (``gather_dequant_rows_ref``,
+``quant_scatter_set_rows_ref``, ``gather_dequant_rows_block_ref``,
+``quant_scatter_set_rows_block_ref``). Pallas runs in interpret mode on
+CPU, same as every other kernel test.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.compress.codecs import dequantize_rows, quantize_rows
+from repro.kernels import moment_quant as mq
+from repro.kernels import ref
+from repro.optim.adam import (
+    AdamConfig, AdamState, adam_init, adam_update_rows_scattered,
+)
+from repro.optim.state_compress import (
+    FactoredMoment, MomentCodecConfig, QuantMoment, is_compressed,
+    moment_init, moment_nbytes, needs_sr_key, state_nbytes, validate_config,
+)
+
+RNG = np.random.default_rng(7)
+
+COMPRESSED = [
+    MomentCodecConfig(m_dtype="bf16", v_dtype="bf16"),
+    MomentCodecConfig(m_dtype="int8", v_dtype="int8"),
+    MomentCodecConfig(m_dtype="int8", v_dtype="factored"),
+    MomentCodecConfig(m_dtype="bf16", v_dtype="factored"),
+]
+
+
+def _table(m=64, k=8):
+    return jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# config plumbing + static accounting
+# --------------------------------------------------------------------- #
+def test_config_validation_and_predicates():
+    validate_config(MomentCodecConfig())
+    with pytest.raises(ValueError, match="m_dtype"):
+        validate_config(MomentCodecConfig(m_dtype="fp16"))
+    with pytest.raises(ValueError, match="v_dtype"):
+        validate_config(MomentCodecConfig(v_dtype="int4"))
+    # factored is a v-only representation
+    with pytest.raises(ValueError):
+        validate_config(MomentCodecConfig(m_dtype="factored"))
+    assert not is_compressed(None)
+    assert not is_compressed(MomentCodecConfig())
+    assert all(is_compressed(c) for c in COMPRESSED)
+    # only stochastic int8 needs per-round entropy
+    assert needs_sr_key(MomentCodecConfig(m_dtype="int8"))
+    assert not needs_sr_key(MomentCodecConfig(m_dtype="int8",
+                                              stochastic_rounding=False))
+    assert not needs_sr_key(MomentCodecConfig(m_dtype="bf16",
+                                              v_dtype="factored"))
+
+
+@pytest.mark.parametrize("cfg", [None] + COMPRESSED)
+def test_state_nbytes_matches_allocated_leaves(cfg):
+    m, k = 128, 16
+    st_ = adam_init(jnp.zeros((m, k), jnp.float32), per_row=True, moment=cfg)
+    measured = sum(leaf.nbytes for leaf in jax.tree.leaves(st_))
+    assert measured == state_nbytes(cfg, m, k)
+    if cfg is not None and is_compressed(cfg):
+        assert state_nbytes(cfg, m, k) < state_nbytes(None, m, k)
+
+
+def test_moment_init_shapes():
+    q8 = moment_init("int8", 32, 4)
+    assert isinstance(q8, QuantMoment)
+    assert q8.codes.shape == (32, 4) and q8.codes.dtype == jnp.int8
+    assert q8.scales.shape == (32, 1)
+    fac = moment_init("factored", 32, 4)
+    assert isinstance(fac, FactoredMoment)
+    assert fac.row.shape == (32,) and fac.col.shape == (4,)
+    assert moment_nbytes("factored", 32, 4) == 32 * 4 + 4 * 4 + 4
+
+
+def test_adam_init_rejects_pytrees_per_row():
+    """per_row state is a single-table concept; a pytree must fail loudly,
+    not silently allocate per-leaf row state."""
+    tree = {"a": jnp.zeros((4, 2)), "b": jnp.zeros((3, 2))}
+    with pytest.raises(TypeError, match="per_row"):
+        adam_init(tree, per_row=True)
+    with pytest.raises(TypeError, match="per_row"):
+        adam_init(tree, per_row=True, moment=COMPRESSED[0])
+
+
+# --------------------------------------------------------------------- #
+# codec round-trip properties (the moment path reuses the wire math)
+# --------------------------------------------------------------------- #
+@settings(deadline=None, max_examples=10)
+@given(m=st.integers(min_value=1, max_value=40),
+       k=st.integers(min_value=1, max_value=24),
+       scale=st.floats(min_value=1e-6, max_value=1e4))
+def test_int8_moment_roundtrip_error_bound(m, k, scale):
+    rng = np.random.default_rng(m * 100 + k)
+    rows = jnp.asarray(rng.standard_normal((m, k)) * scale, jnp.float32)
+    codes, scales = quantize_rows(rows, nbits=8)
+    back = dequantize_rows(codes, scales)
+    # per-row absmax scaling: error bounded by half a quantum per row
+    quantum = np.max(np.abs(np.asarray(rows)), axis=1, keepdims=True) / 127.0
+    assert np.all(np.abs(np.asarray(back - rows)) <= quantum * 0.5 + 1e-30)
+
+
+def test_scale_edges_zero_and_tiny_rows():
+    rows = jnp.stack([
+        jnp.zeros((8,), jnp.float32),                 # all-zero row
+        jnp.full((8,), 1e-38, jnp.float32),           # subnormal-ish
+        jnp.asarray([0, 0, 0, 0, 0, 0, 0, 1e4], jnp.float32),
+    ])
+    codes, scales = quantize_rows(rows, nbits=8)
+    back = dequantize_rows(codes, scales)
+    assert np.all(np.isfinite(np.asarray(back)))
+    np.testing.assert_array_equal(np.asarray(back[0]), np.zeros(8))
+
+
+def test_stochastic_rounding_is_unbiased():
+    """E[decode(encode_sr(x))] -> x: the int8 write path must not round
+    sub-quantum updates away. Nearest rounding of a constant mid-quantum
+    value is maximally biased; SR over many keys recovers the mean."""
+    from repro.compress.codecs import quantize_rows_stochastic
+
+    val = 0.35                       # not representable: quantum = 1/127
+    rows = jnp.full((1, 64), val, jnp.float32)
+    rows = rows.at[0, 0].set(1.0)    # pin the absmax scale
+    acc = np.zeros((1, 64))
+    n = 400
+    for i in range(n):
+        noise = jax.random.uniform(jax.random.PRNGKey(i), rows.shape)
+        codes, scales = quantize_rows_stochastic(rows, noise)
+        acc += np.asarray(dequantize_rows(codes, scales))
+    mean_err = abs(acc[0, 1:].mean() / n - val)
+    assert mean_err < 2e-3, f"SR mean drifted {mean_err:.2e} from {val}"
+
+
+# --------------------------------------------------------------------- #
+# fused kernels vs the jnp oracles (interpret mode on CPU)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,m_s", [(64, 8, 16), (100, 16, 32), (33, 4, 5)])
+def test_gather_dequant_rows_matches_ref(m, k, m_s):
+    codes = jnp.asarray(RNG.integers(-127, 128, (m, k)), jnp.int8)
+    scales = jnp.asarray(RNG.random((m, 1)) + 0.01, jnp.float32)
+    idx = jnp.asarray(RNG.choice(m, m_s, replace=False), jnp.int32)
+    got = mq.gather_dequant_rows(codes, scales, idx, interpret=True)
+    want = ref.gather_dequant_rows_ref(codes, scales, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("noise", [False, True])
+def test_quant_scatter_set_rows_matches_ref(noise):
+    m, k, m_s = 80, 8, 24
+    codes = jnp.zeros((m, k), jnp.int8)
+    scales = jnp.zeros((m, 1), jnp.float32)
+    idx = jnp.asarray(RNG.choice(m, m_s, replace=False), jnp.int32)
+    rows = jnp.asarray(RNG.standard_normal((m_s, k)), jnp.float32)
+    u = (jax.random.uniform(jax.random.PRNGKey(3), rows.shape)
+         if noise else None)
+    # oracle first: the fused kernel DONATES codes/scales (in-place update)
+    wc, ws = ref.quant_scatter_set_rows_ref(codes, scales, idx, rows, u)
+    gc, gs = mq.quant_scatter_set_rows(codes, scales, idx, rows, u,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+def test_gather_dequant_rows_block_matches_ref():
+    """Shard-local gather: out-of-range local ids must not fault; the
+    block kernel clamps, the oracle defines the clamped values."""
+    m, k = 40, 8
+    codes = jnp.asarray(RNG.integers(-127, 128, (m, k)), jnp.int8)
+    scales = jnp.asarray(RNG.random((m, 1)) + 0.01, jnp.float32)
+    local = jnp.asarray([0, 5, -3, 39, 44, 12], jnp.int32)  # some invalid
+    got = mq.gather_dequant_rows_block(codes, scales, local, interpret=True)
+    want = ref.gather_dequant_rows_block_ref(codes, scales, local)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("case", ["mixed", "none_valid", "all_valid"])
+def test_quant_scatter_set_rows_block_matches_ref(case):
+    m, k, m_s = 32, 4, 8
+    codes = jnp.asarray(RNG.integers(-5, 6, (m, k)), jnp.int8)
+    scales = jnp.asarray(RNG.random((m, 1)), jnp.float32)
+    rows = jnp.asarray(RNG.standard_normal((m_s, k)), jnp.float32)
+    local = {
+        "mixed": [1, -1, 30, 99, 4, -7, 31, 2],
+        "none_valid": [-1] * m_s,          # whole tile off-shard: no-op
+        "all_valid": list(range(m_s)),
+    }[case]
+    local = jnp.asarray(local, jnp.int32)
+    codes0, scales0 = np.asarray(codes), np.asarray(scales)
+    # oracle first: the fused kernel DONATES codes/scales (in-place update)
+    wc, ws = ref.quant_scatter_set_rows_block_ref(codes, scales, local, rows)
+    gc, gs = mq.quant_scatter_set_rows_block(codes, scales, local, rows,
+                                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    if case == "none_valid":
+        np.testing.assert_array_equal(np.asarray(gc), codes0)
+        np.testing.assert_array_equal(np.asarray(gs), scales0)
+
+
+# --------------------------------------------------------------------- #
+# the compressed commit: behavior + the frozen fp32 contract
+# --------------------------------------------------------------------- #
+def _commit(table, st_, moment, key=None, mask=None, grad_seed=11):
+    m_s = 8
+    idx = jnp.arange(m_s, dtype=jnp.int32) * 2
+    grads = jnp.asarray(
+        np.random.default_rng(grad_seed).standard_normal(
+            (m_s, table.shape[1])), jnp.float32)
+    return adam_update_rows_scattered(
+        grads, idx, st_, table, AdamConfig(), moment=moment,
+        moment_key=key, row_mask=mask), idx
+
+
+@pytest.mark.parametrize("cfg", COMPRESSED)
+def test_compressed_commit_moves_table_and_preserves_structure(cfg):
+    table = _table()
+    st_ = adam_init(table, per_row=True, moment=cfg)
+    (new_table, new_state), idx = _commit(
+        table, st_, cfg, key=jax.random.PRNGKey(0))
+    assert jax.tree.structure(new_state) == jax.tree.structure(st_)
+    for a, b in zip(jax.tree.leaves(new_state), jax.tree.leaves(st_)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    touched = np.asarray(new_table[idx]) != np.asarray(table[idx])
+    assert touched.any()
+    untouched = np.delete(np.arange(table.shape[0]), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(new_table[untouched]),
+                                  np.asarray(table[untouched]))
+
+
+@pytest.mark.parametrize("cfg", COMPRESSED)
+def test_masked_rows_are_bit_exact_noops(cfg):
+    """The fault layer's reject contract: a masked row's table row, stored
+    moments and timestep come back bit-identical — even through a
+    stochastic int8 re-encode."""
+    table = _table()
+    st_ = adam_init(table, per_row=True, moment=cfg)
+    # dirty the state first so masked rows carry nonzero moments
+    (table1, st1), _ = _commit(table, st_, cfg, key=jax.random.PRNGKey(1))
+    mask = jnp.asarray([True, False, True, False] * 2)
+    (table2, st2), idx = _commit(table1, st1, cfg,
+                                 key=jax.random.PRNGKey(2), mask=mask)
+    rejected = np.asarray(idx)[~np.asarray(mask)]
+    np.testing.assert_array_equal(np.asarray(table2[rejected]),
+                                  np.asarray(table1[rejected]))
+    np.testing.assert_array_equal(np.asarray(st2.t[rejected]),
+                                  np.asarray(st1.t[rejected]))
+    if isinstance(st1.m, QuantMoment):
+        np.testing.assert_array_equal(np.asarray(st2.m.codes[rejected]),
+                                      np.asarray(st1.m.codes[rejected]))
+        np.testing.assert_array_equal(np.asarray(st2.m.scales[rejected]),
+                                      np.asarray(st1.m.scales[rejected]))
+    if isinstance(st1.v, FactoredMoment):
+        np.testing.assert_array_equal(np.asarray(st2.v.row[rejected]),
+                                      np.asarray(st1.v.row[rejected]))
+
+
+def test_sr_int8_requires_key():
+    cfg = MomentCodecConfig(m_dtype="int8", v_dtype="int8")
+    table = _table()
+    st_ = adam_init(table, per_row=True, moment=cfg)
+    with pytest.raises(ValueError, match="PRNG key"):
+        _commit(table, st_, cfg, key=None)
+    # nearest-rounding config runs keyless
+    cfg_rn = cfg._replace(stochastic_rounding=False)
+    st2 = adam_init(table, per_row=True, moment=cfg_rn)
+    _commit(table, st2, cfg_rn, key=None)
+
+
+def test_fp32_moment_config_is_frozen_path():
+    """Explicit all-fp32 MomentCodecConfig must be bit-identical to
+    moment=None — it takes the historical code path, not this module."""
+    table = _table()
+    st_ = adam_init(table, per_row=True)
+    (t_none, s_none), _ = _commit(table, st_, None)
+    (t_fp32, s_fp32), _ = _commit(table, st_, MomentCodecConfig())
+    np.testing.assert_array_equal(np.asarray(t_none), np.asarray(t_fp32))
+    for a, b in zip(jax.tree.leaves(s_none), jax.tree.leaves(s_fp32)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factored_tracks_full_second_moment():
+    """SM3's rank-1 estimate vs the dense accumulator: after repeated
+    commits with a fixed gradient pattern, v_hat's IMPLIED step must stay
+    within a loose multiplicative band of the dense path's. (Exactness
+    only holds for rank-1 g^2; this bounds the drift.)"""
+    m, k = 32, 8
+    table = jnp.zeros((m, k), jnp.float32)
+    full = adam_init(table, per_row=True)
+    cfg = MomentCodecConfig(m_dtype="fp32", v_dtype="factored")
+    fact = adam_init(table, per_row=True, moment=cfg)
+    idx = jnp.arange(8, dtype=jnp.int32)
+    rng = np.random.default_rng(0)
+    # rank-1-ish gradients: row profile x column profile + small noise
+    row_p = jnp.asarray(rng.random((8, 1)) + 0.5, jnp.float32)
+    col_p = jnp.asarray(rng.random((1, k)) + 0.5, jnp.float32)
+    t_full, t_fact = table, table
+    for i in range(20):
+        g = row_p * col_p + 0.01 * jnp.asarray(
+            rng.standard_normal((8, k)), jnp.float32)
+        t_full, full = adam_update_rows_scattered(
+            g, idx, full, t_full, AdamConfig())
+        t_fact, fact = adam_update_rows_scattered(
+            g, idx, fact, t_fact, AdamConfig(), moment=cfg)
+    step_full = np.abs(np.asarray(t_full[idx]))
+    step_fact = np.abs(np.asarray(t_fact[idx]))
+    ratio = step_fact / np.maximum(step_full, 1e-9)
+    assert 0.5 < ratio.mean() < 2.0, f"factored drifted: {ratio.mean():.3f}"
+
+
+def test_server_config_moment_threading():
+    """FCFServerConfig carries the moment config into server_init's
+    optimizer state; the legacy shim refuses compressed configs."""
+    from repro.cf.server import FCFServerConfig, server_init
+    from repro.compress import CodecConfig
+    from repro.core.selector import SelectorConfig
+
+    m, k, theta = 32, 4, 6
+    cfg = FCFServerConfig(
+        theta=theta, moment=MomentCodecConfig(m_dtype="int8",
+                                              v_dtype="factored"))
+    sel = SelectorConfig(strategy="bts", num_arms=m, num_select=8, dim=k)
+    state = server_init(jnp.zeros((m, k), jnp.float32), sel,
+                        jax.random.PRNGKey(0), cfg, CodecConfig(name="fp32"))
+    assert isinstance(state.opt.m, QuantMoment)
+    assert isinstance(state.opt.v, FactoredMoment)
